@@ -1,0 +1,90 @@
+"""Fig. 7/8/9/10 + Tables 4/5 analog: un-preconditioned CG, 100 iterations.
+
+Libraries: BCMGX-analog (three variants: hs / fcg / sstep), AmgX-CG analog
+(tuned SpMV, unfused reductions; 7pt only, as in the paper), Ginkgo analog
+(all-gather SpMV + unfused). Paper sizes: 408^3 (7pt) / 265^3 (27pt) per GPU
+weak; same totals strong. Fixed 100 iterations (tol 1e-16 in the paper —
+cost-per-iteration study).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import SHARD_COUNTS, abstract_poisson_mat, write_results
+from repro.energy.accounting import CostModel, cg_iteration_counts
+from repro.energy.monitor import PowerMonitor
+
+CASES = [("7pt", 408), ("27pt", 265)]
+ITERS = 100
+
+LIBS = [
+    # (label, layout, counts-variant, overlap)
+    ("BCMGX-hs", "ring", "hs", True),
+    ("BCMGX-fcg", "ring", "fcg", True),
+    ("BCMGX-sstep", "ring", "sstep", True),
+    ("AmgX", "ring", "amgx", True),
+    ("Ginkgo", "allgather", "naive", False),
+]
+
+
+def run(shard_counts=SHARD_COUNTS) -> list[dict]:
+    rows = []
+    for stencil, side in CASES:
+        for mode in ("weak", "strong"):
+            for s in shard_counts:
+                for label, layout, variant, overlap in LIBS:
+                    if label == "AmgX" and stencil == "27pt":
+                        continue  # paper: AmgX has no 27pt benchmark
+                    p, mat = abstract_poisson_mat(
+                        side, stencil, s, weak=(mode == "weak"), layout=layout
+                    )
+                    c = cg_iteration_counts(mat, variant)
+                    mon = PowerMonitor(n_devices=s, cost=CostModel())
+                    mon.idle(0.05)
+                    t = mon.region("cg", c, n_shards=s, overlap=overlap, repeats=ITERS)
+                    mon.idle(0.05)
+                    e = mon.energy()
+                    rows.append(
+                        dict(
+                            figure="fig7-10_tab4-5",
+                            stencil=stencil,
+                            mode=mode,
+                            n_shards=s,
+                            library=label,
+                            dofs=p.n,
+                            iters=ITERS,
+                            time=t,
+                            de_per_iter=e["de_total"] / ITERS,
+                            de_per_dof=e["de_total"] / p.n,
+                            **e,
+                        )
+                    )
+    write_results("cg_scaling", rows)
+    return rows
+
+
+def main():
+    from repro.energy.report import STATIC_DYNAMIC_COLUMNS, fmt_table
+
+    rows = run()
+    weak7 = [r for r in rows if r["stencil"] == "7pt" and r["mode"] == "weak"]
+    cols = [
+        ("n_shards", "#GPUs"), ("library", "library"), ("time", "time (s)"),
+        ("de_per_iter", "dyn E/iter (J)"), ("de_per_dof", "dyn E/DOF (J)"),
+        ("gpu_power_peak", "peak (W)"),
+    ]
+    print(fmt_table(weak7, cols, "Fig 7-9 analog: CG 100 iters, 7pt weak"))
+    print(fmt_table(weak7, STATIC_DYNAMIC_COLUMNS, "Table 4 analog"))
+    w27 = [r for r in rows if r["stencil"] == "27pt" and r["mode"] == "weak"]
+    print(fmt_table(w27, STATIC_DYNAMIC_COLUMNS, "Table 5 analog"))
+    sel = {r["library"]: r for r in weak7 if r["n_shards"] == 64}
+    print(
+        "7pt weak @64 energy/iter ratios vs BCMGX-hs: "
+        + ", ".join(
+            f"{k}: {v['de_per_iter']/sel['BCMGX-hs']['de_per_iter']:.2f}x"
+            for k, v in sel.items()
+        )
+    )
+
+
+if __name__ == "__main__":
+    main()

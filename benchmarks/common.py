@@ -1,0 +1,96 @@
+"""Shared benchmark machinery.
+
+Two result kinds, mirroring what this container can and cannot measure:
+
+* **modeled** — paper-scale configurations (405^3/GPU etc.) evaluated through
+  the calibrated roofline cost/energy model (energy/accounting.py). Matrices
+  are never materialized: the DistELL ShapeDtypeStruct builder supplies the
+  exact shapes/halo plans the counts need. These are the scaling curves.
+* **executed** — small-scale real runs (subprocess with N host devices)
+  giving true iteration counts / convergence and wall times. Wall times on
+  CPU are NOT TPU-representative; they validate correctness of the compared
+  implementations, while the modeled numbers carry the performance story —
+  the same separation the paper makes between time measurements and
+  energy-model-derived quantities.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+OUT = os.path.join(REPO, "runs", "bench")
+
+SHARD_COUNTS = (1, 2, 4, 8, 16, 32, 64)  # the paper's GPU counts
+
+
+def ensure_out():
+    os.makedirs(OUT, exist_ok=True)
+    return OUT
+
+
+def abstract_poisson_mat(side: int, stencil: str, n_shards: int, weak: bool,
+                         layout: str = "ring"):
+    """ShapeDtypeStruct DistELL at paper scale (no allocation)."""
+    from repro.core.cg import abstract_stencil_dist
+    from repro.matrices.poisson import PoissonProblem
+
+    nz = side * n_shards if weak else side
+    p = PoissonProblem(side, side, nz, stencil)
+    mat = abstract_stencil_dist(p, n_shards)
+    if layout == "allgather":
+        mat = dataclasses.replace(
+            mat,
+            plan=dataclasses.replace(
+                mat.plan, mode="allgather", shifts=(), widths=()
+            ),
+        )
+    return p, mat
+
+
+def run_solver_subprocess(args: list[str], n_devices: int, timeout=1800) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [sys.executable, "-m", "repro.launch.solve", "--devices", str(n_devices)] + args
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout, env=env)
+    if r.returncode != 0:
+        raise RuntimeError(f"solve failed:\n{r.stdout[-2000:]}\n{r.stderr[-2000:]}")
+    return r.stdout
+
+
+def parse_solver_output(out: str) -> dict:
+    """Extract per-library lines from launch.solve output."""
+    res = {}
+    for line in out.splitlines():
+        for lib in ("BCMGX-analog", "Ginkgo-analog", "AmgX-analog"):
+            if line.startswith(lib):
+                parts = dict(
+                    kv.split("=") for kv in line.split() if "=" in kv
+                )
+                res[lib] = {
+                    "iters": int(parts["iters"]),
+                    "relres": float(parts["relres"]),
+                    "wall_s": float(parts["wall"].rstrip("s")),
+                    "modeled_s": float(parts["modeled"].rstrip("s")),
+                    "de_total": float(parts["DE"].rstrip("J")),
+                    "peak_w": float(parts["peak"].rstrip("W")),
+                    "de_gpu": float(parts.get("DEgpu", "0J").rstrip("J")),
+                    "de_cpu": float(parts.get("DEcpu", "0J").rstrip("J")),
+                    "setup_s": float(parts.get("setup", "0s").rstrip("s")),
+                    "solve_s": float(parts.get("solve", "0s").rstrip("s")),
+                }
+    return res
+
+
+def write_results(name: str, rows: list[dict]):
+    from repro.energy.report import write_csv
+
+    ensure_out()
+    path = os.path.join(OUT, f"{name}.csv")
+    write_csv(path, rows)
+    return path

@@ -1,0 +1,111 @@
+"""Fill EXPERIMENTS.md placeholders from runs/dryrun records.
+
+    PYTHONPATH=src python -m benchmarks.fill_experiments
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import REPO
+from benchmarks.roofline_table import load_records, markdown_table
+
+EXP = os.path.join(REPO, "EXPERIMENTS.md")
+DRY = os.path.join(REPO, "runs", "dryrun")
+
+
+def rec_of(name: str):
+    p = os.path.join(DRY, name)
+    if not os.path.exists(p):
+        return None
+    return json.load(open(p))
+
+
+def fmt_cell(rec):
+    if rec is None or rec.get("status") != "ok":
+        return "(not available)"
+    r = rec["roofline"]
+    mem = rec.get("memory", {})
+    gib = (mem.get("total_per_device", 0) or 0) / 2**30
+    return (
+        f"step {r['step_s']:.3g}s (C {r['compute_s']:.3g} / M {r['memory_s']:.3g}"
+        f" / X {r['collective_s']:.3g}), MFU {r['mfu']:.3f}, {gib:.1f} GiB/dev"
+    )
+
+
+def verdict(base, new, what="memory_s"):
+    if base is None or new is None or base.get("status") != "ok" or new.get("status") != "ok":
+        return "(pending)"
+    b = base["roofline"][what]
+    n = new["roofline"][what]
+    if n < b * 0.95:
+        return f"confirmed: {what} {b:.3g} -> {n:.3g} ({b/n:.2f}x)"
+    if n > b * 1.05:
+        return f"refuted: {what} {b:.3g} -> {n:.3g} (regression {n/b:.2f}x)"
+    return f"neutral: {what} {b:.3g} -> {n:.3g}"
+
+
+def main():
+    text = open(EXP).read()
+
+    recs = load_records()
+    # probe-corrected table: only records with cost_source
+    probe_recs = [r for r in recs if r.get("cost_source") == "unrolled-probe"
+                  and "+".join([]) == "" and "+" not in r["arch"]]
+    base_recs = [r for r in recs if "solver" not in r["arch"] and "+" not in r["arch"]]
+    text = text.replace(
+        "<!-- ROOFLINE_PROBE_TABLE -->",
+        markdown_table(probe_recs, "single") if probe_recs else "(probe table pending)",
+    )
+    text = text.replace(
+        "<!-- ROOFLINE_FULL_TABLE -->", markdown_table(base_recs, "single")
+    )
+
+    qb = rec_of("qwen3-8b__train_4k__single.json")
+    q1 = rec_of("qwen3-8b+attnbf16__train_4k__single.json")
+    q2 = rec_of("qwen3-8b+attnbf16+mb16__train_4k__single.json")
+    zb = rec_of("zamba2-7b__train_4k__single.json")
+    z1 = rec_of("zamba2-7b+q128__train_4k__single.json")
+    z2 = rec_of("zamba2-7b+q64__train_4k__single.json")
+
+    subs = {
+        "<!-- QWEN3_BASE -->": fmt_cell(qb),
+        "<!-- QWEN3_BF16 -->": fmt_cell(q1),
+        "<!-- QWEN3_BF16_V -->": verdict(qb, q1),
+        "<!-- QWEN3_MB -->": fmt_cell(q2),
+        "<!-- QWEN3_MB_V -->": verdict(q1, q2, "memory_s")
+        + (
+            f"; temp mem {((qb or {}).get('memory', {}).get('total_per_device', 0))/2**30:.0f}"
+            f" -> {((q2 or {}).get('memory', {}).get('total_per_device', 0))/2**30:.0f} GiB/dev"
+            if q2 and qb
+            else ""
+        ),
+        "<!-- ZAMBA_BASE -->": fmt_cell(zb),
+        "<!-- ZAMBA_Q128 -->": fmt_cell(z1),
+        "<!-- ZAMBA_Q128_V -->": verdict(zb, z1),
+        "<!-- ZAMBA_Q64 -->": fmt_cell(z2),
+        "<!-- ZAMBA_Q64_V -->": verdict(z1, z2),
+    }
+
+    def summary(base, best, label):
+        if base is None or best is None or best.get("status") != "ok":
+            return f"{label}: (pending)"
+        b, n = base["roofline"]["step_s"], best["roofline"]["step_s"]
+        return (
+            f"{b:.3g} s/step | optimized {n:.3g} s/step | **{b/n:.2f}x**"
+        )
+
+    subs["<!-- QWEN3_SUMMARY -->"] = summary(qb, q2 or q1, "qwen3")
+    subs["<!-- ZAMBA_SUMMARY -->"] = summary(zb, z2 or z1, "zamba2")
+
+    for k, v in subs.items():
+        text = text.replace(k, v)
+    open(EXP, "w").write(text)
+    print("EXPERIMENTS.md filled.")
+    for k, v in subs.items():
+        print(f"  {k[5:-4]:18s} {v[:90]}")
+
+
+if __name__ == "__main__":
+    main()

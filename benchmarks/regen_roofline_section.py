@@ -1,0 +1,52 @@
+"""Regenerate the §Roofline tables inside EXPERIMENTS.md (idempotent).
+
+Replaces the markdown tables under the two section headings with fresh
+renders from runs/dryrun — run after any new probe/hillclimb cells.
+
+    PYTHONPATH=src python -m benchmarks.regen_roofline_section
+"""
+
+from __future__ import annotations
+
+import os
+import re
+
+from benchmarks.common import REPO
+from benchmarks.roofline_table import load_records, markdown_table
+
+EXP = os.path.join(REPO, "EXPERIMENTS.md")
+
+PROBE_HEAD = "### Probe-corrected roofline, representative cells (single-pod, 256 chips)"
+FULL_HEAD = "### Full baseline table (all 40 assigned cells, single-pod)"
+END_MARK = "\nReading the table:"
+
+
+def main():
+    recs = load_records()
+    probe_recs = [
+        r for r in recs
+        if r.get("cost_source") == "unrolled-probe" and "+" not in r["arch"]
+    ]
+    base_recs = [
+        r for r in recs if "solver" not in r["arch"] and "+" not in r["arch"]
+    ]
+    probe_tbl = markdown_table(probe_recs, "single") if probe_recs else "(none yet)"
+    full_tbl = markdown_table(base_recs, "single")
+
+    text = open(EXP).read()
+    pat = re.compile(
+        re.escape(PROBE_HEAD) + r".*?" + re.escape(FULL_HEAD) + r".*?" + re.escape(END_MARK),
+        re.DOTALL,
+    )
+    new = (
+        f"{PROBE_HEAD}\n\n{probe_tbl}\n\n{FULL_HEAD}\n\n{full_tbl}\n{END_MARK}"
+    )
+    text, n = pat.subn(new, text)
+    assert n == 1, "section markers not found"
+    open(EXP, "w").write(text)
+    print(f"regenerated: {len(probe_recs)} probe rows, "
+          f"{sum(1 for r in base_recs if r['mesh'] == 'single')} baseline rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""§Roofline table: renders the dry-run JSON records (runs/dryrun/*.json).
+
+One row per (arch x shape x mesh) cell: the three roofline terms, dominant
+bottleneck, MODEL_FLOPS ratio, per-device memory. Also emits the markdown
+table embedded in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import REPO
+
+DRYRUN_DIR = os.path.join(REPO, "runs", "dryrun")
+
+
+def load_records(d: str = DRYRUN_DIR) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def row_of(rec: dict) -> dict:
+    base = dict(arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+                status=rec["status"])
+    if rec["status"] == "skip":
+        base["note"] = rec["skip_reason"]
+        return base
+    if rec["status"] != "ok":
+        base["note"] = rec.get("error", "")[:80]
+        return base
+    r = rec["roofline"]
+    mem = rec.get("memory", {})
+    base.update(
+        src=("probe" if rec.get("cost_source") == "unrolled-probe" else "rolled"),
+        compute_s=r["compute_s"],
+        memory_s=r["memory_s"],
+        collective_s=r["collective_s"],
+        dominant=r["dominant"],
+        step_s=r["step_s"],
+        mfu=r["mfu"],
+        useful_ratio=r["useful_ratio"],
+        gib_per_device=(mem.get("total_per_device", 0) or 0) / 2**30,
+        coll_count=rec["collectives"]["total_count"],
+    )
+    return base
+
+
+def markdown_table(recs: list[dict], mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant |"
+        " step s | MFU | useful | GiB/dev | src |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in recs:
+        if rec["mesh"] != mesh:
+            continue
+        r = row_of(rec)
+        if r["status"] == "skip":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | — | — | — |"
+                f" {r['note'][:40]} |"
+            )
+        elif r["status"] == "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} |"
+                f" {r['memory_s']:.3e} | {r['collective_s']:.3e} |"
+                f" {r['dominant']} | {r['step_s']:.3e} | {r['mfu']:.3f} |"
+                f" {r['useful_ratio']:.2f} | {r['gib_per_device']:.2f} |"
+                f" {r['src']} |"
+            )
+        else:
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR: {r['note']} |")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load_records()
+    if not recs:
+        print("no dry-run records found — run: python -m repro.launch.dryrun --all"
+              f" --out {DRYRUN_DIR}")
+        return
+    ok = [r for r in recs if r["status"] == "ok"]
+    skip = [r for r in recs if r["status"] == "skip"]
+    err = [r for r in recs if r["status"] not in ("ok", "skip")]
+    print(f"dry-run records: {len(recs)} (ok={len(ok)} skip={len(skip)} err={len(err)})")
+    print()
+    print(markdown_table(recs, "single"))
+    print()
+    # summary stats
+    import numpy as np
+
+    by_dom = {}
+    for r in ok:
+        by_dom.setdefault(r["roofline"]["dominant"], []).append(r)
+    for dom, rs in sorted(by_dom.items()):
+        print(f"dominant={dom}: {len(rs)} cells")
+    train = [r for r in ok if r["shape"] == "train_4k" and r["mesh"] == "single"]
+    if train:
+        mfus = [r["roofline"]["mfu"] for r in train]
+        print(f"train_4k single-pod MFU: min={min(mfus):.3f} "
+              f"median={float(np.median(mfus)):.3f} max={max(mfus):.3f}")
+
+
+if __name__ == "__main__":
+    main()

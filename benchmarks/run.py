@@ -1,0 +1,64 @@
+"""Run every benchmark (one per paper table/figure) and print the tables.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Modeled scaling tables evaluate at the paper's sizes through the roofline
+cost/energy model (no allocation); executed tables run real solves in
+multi-device subprocesses at CPU-tractable scales. See benchmarks/common.py
+for the modeled/executed distinction.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+BENCHES = [
+    ("spmv_scaling (Fig 3)", "benchmarks.spmv_scaling"),
+    ("spmv_energy (Fig 4-6, Tab 2-3)", "benchmarks.spmv_energy"),
+    ("cg_scaling (Fig 7-10, Tab 4-5)", "benchmarks.cg_scaling"),
+    ("pcg_scaling (Fig 11-16, Tab 6)", "benchmarks.pcg_scaling"),
+    ("suitesparse (Tab 7-8)", "benchmarks.suitesparse"),
+    ("roofline_table (§Roofline)", "benchmarks.roofline_table"),
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the executed (subprocess) benchmarks")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    import importlib
+
+    failures = []
+    for title, modname in BENCHES:
+        if args.only and args.only not in modname:
+            continue
+        if args.fast and modname in (
+            "benchmarks.pcg_scaling", "benchmarks.suitesparse"
+        ):
+            print(f"=== {title}: SKIPPED (--fast) ===\n")
+            continue
+        print(f"\n{'='*72}\n=== {title}\n{'='*72}", flush=True)
+        t0 = time.perf_counter()
+        try:
+            mod = importlib.import_module(modname)
+            mod.main()
+            print(f"[{title}] done in {time.perf_counter()-t0:.1f}s", flush=True)
+        except Exception as e:  # pragma: no cover
+            import traceback
+
+            failures.append((title, e))
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} benchmark(s) FAILED: {[f[0] for f in failures]}")
+        sys.exit(1)
+    print("\nall benchmarks complete.")
+
+
+if __name__ == "__main__":
+    main()

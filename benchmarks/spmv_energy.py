@@ -1,0 +1,86 @@
+"""Fig. 4/5/6 + Tables 2/3 analog: SpMV dynamic energy breakdown (GPU/CPU),
+power peaks, energy per DOF, static-vs-dynamic percentages.
+
+PowerMonitor workflow exactly as the paper's Fig. 1: start monitor, run the
+region-marked kernel 100x, integrate the power-time curve, split static /
+dynamic. 5-run averaging is kept for methodological fidelity (the model is
+deterministic; the loop demonstrates the pipeline).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SHARD_COUNTS, abstract_poisson_mat, write_results
+from repro.energy.accounting import CostModel, spmv_counts
+from repro.energy.monitor import PowerMonitor
+
+CASES = [("7pt", 405), ("27pt", 260)]
+REPEATS = 100
+N_RUNS = 5
+
+
+def one_case(stencil, side, mode, s, lib) -> dict:
+    layout = "ring" if lib == "BCMGX" else "allgather"
+    overlap = lib == "BCMGX"
+    p, mat = abstract_poisson_mat(side, stencil, s, weak=(mode == "weak"), layout=layout)
+    c = spmv_counts(mat, overlap)
+    runs = []
+    for _ in range(N_RUNS):
+        mon = PowerMonitor(n_devices=s, cost=CostModel())
+        mon.idle(0.05)
+        mon.region("spmv", c, n_shards=s, overlap=overlap, repeats=REPEATS)
+        mon.idle(0.05)
+        runs.append(mon.energy())
+    e = {k: float(np.mean([r[k] for r in runs])) for k in runs[0]}
+    return dict(
+        figure="fig4-6_tab2-3",
+        stencil=stencil,
+        mode=mode,
+        n_shards=s,
+        library=lib,
+        dofs=p.n,
+        de_per_dof=e["de_total"] / p.n,
+        **e,
+    )
+
+
+def run(shard_counts=SHARD_COUNTS) -> list[dict]:
+    rows = []
+    for stencil, side in CASES:
+        for mode in ("weak", "strong"):
+            for s in shard_counts:
+                for lib in ("BCMGX", "Ginkgo"):
+                    rows.append(one_case(stencil, side, mode, s, lib))
+    write_results("spmv_energy", rows)
+    return rows
+
+
+def main():
+    from repro.energy.report import STATIC_DYNAMIC_COLUMNS, fmt_table
+
+    rows = run()
+    weak7 = [r for r in rows if r["stencil"] == "7pt" and r["mode"] == "weak"]
+    cols = [
+        ("n_shards", "#GPUs"), ("library", "library"),
+        ("de_gpu", "GPU dyn E (J)"), ("de_cpu", "CPU dyn E (J)"),
+        ("de_total", "total (J)"), ("gpu_power_peak", "peak (W)"),
+        ("de_per_dof", "dyn E/DOF (J)"),
+    ]
+    print(fmt_table(weak7, cols, "Fig 4/5/6 analog: SpMV energy, 7pt weak"))
+    print(fmt_table(weak7, STATIC_DYNAMIC_COLUMNS, "Table 2 analog: static vs dynamic %"))
+    w27 = [r for r in rows if r["stencil"] == "27pt" and r["mode"] == "weak"]
+    print(fmt_table(w27, STATIC_DYNAMIC_COLUMNS, "Table 3 analog: 27pt weak"))
+    # headline ratio (paper: ~2x)
+    for stencil in ("7pt", "27pt"):
+        sel = [r for r in rows if r["stencil"] == stencil and r["mode"] == "weak"
+               and r["n_shards"] == 64]
+        g = next(r for r in sel if r["library"] == "Ginkgo")
+        b = next(r for r in sel if r["library"] == "BCMGX")
+        print(f"{stencil} weak @64: Ginkgo/BCMGX dynamic-energy ratio = "
+              f"{g['de_total']/b['de_total']:.2f}x  "
+              f"peak {b['gpu_power_peak']:.0f}W vs {g['gpu_power_peak']:.0f}W")
+
+
+if __name__ == "__main__":
+    main()

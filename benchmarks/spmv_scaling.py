@@ -1,0 +1,76 @@
+"""Fig. 3 analog: SpMV execution times, weak + strong scaling, 7pt & 27pt.
+
+BCMGX-analog (ring halo, overlap) vs Ginkgo-analog (full all-gather,
+serialized). Modeled times at the paper's sizes (405^3 / 260^3 per GPU weak;
+same totals strong), 1..64 shards.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import SHARD_COUNTS, abstract_poisson_mat, write_results
+from repro.energy.accounting import CostModel, spmv_counts
+
+
+CASES = [("7pt", 405), ("27pt", 260)]
+
+
+def run(shard_counts=SHARD_COUNTS) -> list[dict]:
+    cm = CostModel()
+    rows = []
+    for stencil, side in CASES:
+        for mode in ("weak", "strong"):
+            for s in shard_counts:
+                if mode == "strong" and side // s < 1:
+                    continue
+                for lib, layout, overlap in (
+                    ("BCMGX", "ring", True),
+                    ("Ginkgo", "allgather", False),
+                ):
+                    p, mat = abstract_poisson_mat(
+                        side, stencil, s, weak=(mode == "weak"), layout=layout
+                    )
+                    c = spmv_counts(mat, overlap)
+                    t, (tc, tm, tcoll) = cm.times(c, s, overlap)
+                    rows.append(
+                        dict(
+                            figure="fig3",
+                            stencil=stencil,
+                            mode=mode,
+                            n_shards=s,
+                            library=lib,
+                            dofs=p.n,
+                            time=t,
+                            t_compute=tc,
+                            t_memory=tm,
+                            t_collective=tcoll,
+                        )
+                    )
+    write_results("spmv_scaling", rows)
+    return rows
+
+
+def main():
+    from repro.energy.report import fmt_table
+
+    rows = run()
+    cols = [
+        ("stencil", "stencil"), ("mode", "mode"), ("n_shards", "#GPUs"),
+        ("library", "library"), ("time", "time (s)"),
+        ("t_memory", "mem term"), ("t_collective", "coll term"),
+    ]
+    print(fmt_table(rows, cols, "Fig 3 analog: SpMV times (modeled, paper sizes)"))
+    # headline: BCMGX/Ginkgo speedup at 64 GPUs weak
+    for stencil, _ in CASES:
+        sel = {
+            r["library"]: r["time"]
+            for r in rows
+            if r["stencil"] == stencil and r["mode"] == "weak" and r["n_shards"] == 64
+        }
+        print(
+            f"{stencil} weak @64: Ginkgo/BCMGX time ratio = "
+            f"{sel['Ginkgo'] / sel['BCMGX']:.2f}x"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Tables 7/8 analog: SpMV + CG on the SuiteSparse SPD matrices (1-4 shards).
+
+Synthetic analogs matched on rows/nnz/pattern character (see
+matrices/suitesparse.py; real .mtx files are used when
+$REPRO_SUITESPARSE_DIR provides them). EXECUTED in subprocesses (real
+convergence/iteration behavior) at ``--scale`` of the original sizes, with
+modeled energy at the executed sizes.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import parse_solver_output, run_solver_subprocess, write_results
+from repro.matrices.suitesparse import TABLE1
+
+MATRICES = list(TABLE1)
+SHARDS = (1, 2, 4)
+
+
+def run(scale: float = 0.01, maxiter: int = 100) -> list[dict]:
+    rows = []
+    for op in ("spmv", "cg"):
+        for name in MATRICES:
+            for s in SHARDS:
+                try:
+                    out = run_solver_subprocess(
+                        ["--problem", name, "--scale", str(scale), "--op", op,
+                         "--shards", str(s), "--maxiter", str(maxiter),
+                         "--tol", "1e-8"],
+                        n_devices=s,
+                    )
+                except RuntimeError as e:  # pragma: no cover
+                    rows.append(dict(table="7/8", op=op, matrix=name,
+                                     n_shards=s, error=str(e)[:200]))
+                    continue
+                parsed = parse_solver_output(out)
+                for lib, r in parsed.items():
+                    rows.append(
+                        dict(
+                            table="7" if op == "spmv" else "8",
+                            op=op,
+                            matrix=name,
+                            n_shards=s,
+                            library=lib.replace("-analog", ""),
+                            time=r["wall_s"],
+                            modeled_s=r["modeled_s"],
+                            iters=r["iters"],
+                            de_gpu=r["de_gpu"],
+                            de_cpu=r["de_cpu"],
+                            de_total=r["de_total"],
+                            gpu_power_peak=r["peak_w"],
+                        )
+                    )
+    write_results("suitesparse", rows)
+    return rows
+
+
+def main():
+    from repro.energy.report import fmt_table
+
+    rows = run()
+    for table, title in (("7", "Table 7 analog: SpMV"), ("8", "Table 8 analog: CG")):
+        sel = [r for r in rows if r.get("table") == table and "error" not in r]
+        cols = [
+            ("n_shards", "#GPUs"), ("matrix", "matrix"), ("library", "library"),
+            ("time", "time (s)"), ("de_gpu", "GPU dynE (J)"),
+            ("de_cpu", "CPU dynE (J)"), ("de_total", "total dynE (J)"),
+            ("gpu_power_peak", "peak (W)"),
+        ]
+        if table == "8":
+            cols.insert(3, ("iters", "iters"))
+        print(fmt_table(sel, cols, title))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Batched serving example: prefill a prompt batch, decode N tokens with the
+KV/state cache — exercises the same serve_step the decode dry-run lowers.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch minicpm3-4b --tokens 16
+    PYTHONPATH=src python examples/serve_lm.py --arch xlstm-350m  # recurrent
+"""
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.models import lm, transformer as tfm
+    from repro.models.kvcache import init_cache
+
+    cfg = dataclasses.replace(get_config(args.arch).smoke(), dtype="float32")
+    print(f"serving {cfg.name} (reduced config), batch={args.batch}")
+    params = tfm.init_params(cfg, jax.random.key(0))
+
+    rng = np.random.default_rng(0)
+    B, S = args.batch, args.prompt_len
+    max_len = S + args.tokens + 1
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+
+    # prefill, splice into a max_len cache
+    t0 = time.perf_counter()
+    logits, cache = lm.prefill(params, cfg, {"tokens": prompts}, kv_chunk=32)
+    target = init_cache(cfg, B, max_len)
+    cache = jax.tree.map(
+        lambda dst, src: jnp.pad(
+            src, [(0, d - s) for d, s in zip(dst.shape, src.shape)]
+        ).astype(dst.dtype) if src.shape != dst.shape else src.astype(dst.dtype),
+        target, cache,
+    )
+    jax.block_until_ready(logits)
+    print(f"prefill({S} tokens): {time.perf_counter()-t0:.2f}s")
+
+    step = jax.jit(
+        lambda p, t, c, pos: lm.serve_step(p, cfg, t, c, pos)
+    )
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.perf_counter()
+    for i in range(args.tokens):
+        logits, cache = step(params, tok, cache, jnp.asarray(S + i, jnp.int32))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    gen = np.stack([np.asarray(t) for t in out], axis=1)
+    print(f"decoded {args.tokens} tokens/seq in {dt:.2f}s "
+          f"({args.tokens*B/dt:.1f} tok/s aggregate)")
+    print("generated ids (first sequence):", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Distributed solve across the paper's comparison grid.
+
+Runs BCMGX-analog vs Ginkgo-analog CG and the PCG pair (compatible-matching
+AMG vs AmgX-analog plain aggregation) on a multi-device mesh, printing
+runtime / iterations / modeled energy for each — examples of every solver
+configuration the benchmarks use.
+
+    python examples/solve_poisson.py            # 4 forced host devices
+    python examples/solve_poisson.py --side 24 --devices 8
+"""
+
+import argparse
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--side", type=int, default=20)
+    ap.add_argument("--devices", type=int, default=4)
+    args = ap.parse_args()
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+
+    def run(extra):
+        cmd = [sys.executable, "-m", "repro.launch.solve",
+               "--devices", str(args.devices), "--side", str(args.side)] + extra
+        print(f"\n$ {' '.join(cmd[2:])}")
+        subprocess.run(cmd, env=env, check=True)
+
+    # un-preconditioned CG, all three BCMGX variants vs the Ginkgo analog
+    for variant in ("hs", "fcg", "sstep"):
+        run(["--problem", "poisson7", "--variant", variant, "--tol", "1e-8"])
+    # 27-point stencil
+    run(["--problem", "poisson27", "--variant", "fcg", "--tol", "1e-8"])
+    # PCG: compatible-matching AMG vs the AmgX-analog
+    run(["--problem", "poisson7", "--amg", "--tol", "1e-6"])
+    run(["--problem", "poisson7", "--amgx-analog", "--tol", "1e-6"])
+    # a SuiteSparse-analog matrix
+    run(["--problem", "ecology2", "--scale", "0.01", "--tol", "1e-8"])
+
+
+if __name__ == "__main__":
+    main()

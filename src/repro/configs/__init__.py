@@ -1,0 +1,45 @@
+"""Architecture registry: ``get_config(name)`` / ``ARCHS``.
+
+One module per assigned architecture; importing this package registers all
+ten. The paper's own benchmark configs (Poisson problems, solver settings)
+live in ``solver.py``.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    MLAConfig,
+    MoEConfig,
+    SHAPES,
+    ShapeConfig,
+    SSMConfig,
+    XLSTMConfig,
+    applicable_shapes,
+)
+
+_ARCH_MODULES = [
+    "xlstm_350m",
+    "qwen2_5_3b",
+    "qwen3_8b",
+    "minicpm3_4b",
+    "gemma_7b",
+    "zamba2_7b",
+    "hubert_xlarge",
+    "arctic_480b",
+    "moonshot_v1_16b_a3b",
+    "llava_next_34b",
+]
+
+ARCHS: dict[str, ArchConfig] = {}
+for _m in _ARCH_MODULES:
+    mod = importlib.import_module(f"repro.configs.{_m}")
+    ARCHS[mod.CONFIG.name] = mod.CONFIG
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,24 @@
+"""arctic-480b [moe]: 128 experts top-2 + dense residual MLP
+[hf:Snowflake/snowflake-arctic-base; hf].
+
+35L d_model=7168 56H (GQA kv=8) d_ff=4864 (per expert AND dense residual)
+vocab=32000. Dense-MoE hybrid: every block runs a small dense MLP in
+parallel with the routed MoE FFN.
+"""
+
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=4864,
+    vocab_size=32000,
+    moe=MoEConfig(
+        n_experts=128, top_k=2, d_ff_expert=4864,
+        dense_residual=True, d_ff_dense=4864,
+    ),
+)

@@ -1,0 +1,265 @@
+"""Architecture + shape configuration schema.
+
+One ``ArchConfig`` describes any of the ten assigned architectures; family-
+specific behavior is keyed on ``family`` / block-pattern fields. Exact
+assigned hyperparameters live in one file per architecture
+(``src/repro/configs/<id>.py``); reduced smoke variants come from
+``ArchConfig.smoke()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+
+def pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    dense_residual: bool = False  # Arctic: dense MLP in parallel with MoE
+    d_ff_dense: int = 0  # width of the parallel dense MLP (Arctic)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (MiniCPM3 / DeepSeek-style)."""
+
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) block parameters."""
+
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256
+
+    def n_heads(self, d_model: int) -> int:
+        return self.expand * d_model // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    """xLSTM block parameters (mLSTM + periodic sLSTM)."""
+
+    slstm_every: int = 8  # every k-th block is an sLSTM (0 = all mLSTM)
+    proj_factor: float = 2.0  # mLSTM up-projection
+    chunk: int = 256  # chunkwise-parallel mLSTM chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    # attention details
+    qk_norm: bool = False  # qwen3
+    qkv_bias: bool = False  # qwen2.5
+    causal: bool = True  # False for encoder-only (hubert)
+    rope_theta: float = 10000.0
+    mlp_act: str = "silu"  # silu (SwiGLU) | gelu (GeGLU)
+    tie_embeddings: bool = False
+    # family extensions
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    # hybrid (zamba2): shared attention block applied every k ssm blocks
+    shared_attn_every: int = 0
+    # vlm: number of (stub) image patch embeddings prepended
+    n_patches: int = 0
+    # norm
+    rmsnorm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+
+    # ---- derived -----------------------------------------------------------
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def vocab_padded(self) -> int:
+        """Physical embedding rows (padded to 256 for TP divisibility)."""
+        return pad_to(self.vocab_size, 256)
+
+    @property
+    def is_encoder_only(self) -> bool:
+        return not self.causal
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm" and self.xlstm is None and self.ssm is not None
+
+    @property
+    def subquadratic(self) -> bool:
+        """Supports long_500k (recurrent-state decode)."""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Approximate parameter count (used for MODEL_FLOPS = 6*N*D)."""
+        d, L = self.d_model, self.n_layers
+        hd, h, kvh = self.hd, self.n_heads, self.n_kv_heads
+        n = self.vocab_padded * d  # embed
+        if not self.tie_embeddings:
+            n += self.vocab_padded * d
+        per_layer = 0
+        if self.xlstm is not None:
+            pf = self.xlstm.proj_factor
+            di = int(pf * d)
+            per_layer = 2 * d * di + 3 * di * (di // max(self.n_heads, 1)) // max(
+                di // max(self.n_heads, 1), 1
+            )  # projections dominate
+            per_layer = 2 * d * di + 4 * di * di // max(h, 1) + d * d
+        elif self.ssm is not None:
+            di = self.ssm.expand * d
+            nh = self.ssm.n_heads(d)
+            per_layer = d * (2 * di + 2 * self.ssm.d_state + nh) + di * d
+        if self.family in ("dense", "moe", "audio", "vlm", "hybrid"):
+            if self.mla is not None:
+                m = self.mla
+                attn = (
+                    d * m.q_lora_rank
+                    + m.q_lora_rank * h * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                    + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                    + m.kv_lora_rank * h * (m.qk_nope_head_dim + m.v_head_dim)
+                    + h * m.v_head_dim * d
+                )
+            else:
+                attn = d * (h * hd) + 2 * d * (kvh * hd) + (h * hd) * d
+            if self.moe is not None:
+                ff = self.moe.n_experts * 3 * d * self.moe.d_ff_expert
+                if self.moe.dense_residual:
+                    ff += 3 * d * self.moe.d_ff_dense
+            else:
+                ff = 3 * d * self.d_ff
+            if self.family == "hybrid":
+                # zamba2: ssm blocks + one shared attn block
+                di = self.ssm.expand * d
+                nh = self.ssm.n_heads(d)
+                ssm_p = d * (2 * di + 2 * self.ssm.d_state + nh) + di * d
+                n += L * ssm_p + (attn + ff)  # shared block counted once
+                return n
+            per_layer = attn + ff
+        n += L * per_layer
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed experts count)."""
+        if self.moe is None:
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        full = self.param_count()
+        all_experts = L * self.moe.n_experts * 3 * d * self.moe.d_ff_expert
+        active = L * self.moe.top_k * 3 * d * self.moe.d_ff_expert
+        return full - all_experts + active
+
+    # ---- reduced smoke variant ---------------------------------------------
+
+    def smoke(self) -> "ArchConfig":
+        """Tiny same-family config for CPU forward/train-step smoke tests."""
+        kw = dict(
+            name=self.name + "-smoke",
+            n_layers=2 if self.shared_attn_every == 0 else max(2, 2),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            d_ff=128 if self.d_ff else 0,
+            vocab_size=256,
+            head_dim=16 if self.head_dim else 0,
+        )
+        cfg = dataclasses.replace(self, **kw)
+        if self.moe is not None:
+            cfg = dataclasses.replace(
+                cfg,
+                moe=dataclasses.replace(
+                    self.moe, n_experts=4, top_k=2, d_ff_expert=64,
+                    d_ff_dense=64 if self.moe.dense_residual else 0,
+                ),
+            )
+        if self.mla is not None:
+            cfg = dataclasses.replace(
+                cfg,
+                mla=MLAConfig(
+                    q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+                    qk_rope_head_dim=8, v_head_dim=16,
+                ),
+            )
+        if self.ssm is not None:
+            cfg = dataclasses.replace(
+                cfg, ssm=dataclasses.replace(self.ssm, d_state=16, head_dim=16, chunk=16)
+            )
+        if self.xlstm is not None:
+            cfg = dataclasses.replace(
+                cfg, xlstm=dataclasses.replace(self.xlstm, slstm_every=2, chunk=16)
+            )
+        if self.shared_attn_every:
+            cfg = dataclasses.replace(cfg, shared_attn_every=2, n_layers=4)
+        if self.n_patches:
+            cfg = dataclasses.replace(cfg, n_patches=4)
+        return cfg
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned): every LM arch pairs with these four
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable_shapes(cfg: ArchConfig) -> dict[str, "ShapeConfig | None"]:
+    """Shape -> ShapeConfig if the cell runs, None with a skip reason handled
+    by the caller. Encoder-only archs have no decode; pure full-attention
+    archs skip long_500k (quadratic)."""
+    out: dict[str, ShapeConfig | None] = {}
+    for name, sc in SHAPES.items():
+        if sc.kind == "decode" and cfg.is_encoder_only:
+            out[name] = None
+        elif name == "long_500k" and not cfg.subquadratic:
+            out[name] = None
+        else:
+            out[name] = sc
+    return out
+
+
+SKIP_REASONS = {
+    ("decode", "encoder"): "encoder-only arch has no decode step",
+    ("long_500k", "quadratic"): (
+        "pure full-attention arch: 500k decode needs sub-quadratic attention"
+    ),
+}

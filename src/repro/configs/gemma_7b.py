@@ -1,0 +1,21 @@
+"""gemma-7b [dense]: GeGLU, head_dim=256 [arXiv:2403.08295; hf].
+
+28L d_model=3072 16H (GQA kv=16) d_ff=24576 vocab=256000; attention width
+16*256=4096 != d_model (explicit head_dim).
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma-7b",
+    family="dense",
+    n_layers=28,
+    d_model=3072,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=24576,
+    vocab_size=256000,
+    head_dim=256,
+    mlp_act="gelu",
+    tie_embeddings=True,
+)

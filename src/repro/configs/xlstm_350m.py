@@ -1,0 +1,22 @@
+"""xlstm-350m [ssm]: sLSTM + mLSTM blocks [arXiv:2405.04517; unverified].
+
+24L d_model=1024 4H (GQA kv=4) d_ff=0 vocab=50304. d_ff=0 means the block IS
+the (m/s)LSTM cell with its own up/down projections (factor 2); every 8th
+block is an sLSTM (xLSTM [7:1] mix), the rest mLSTM. Recurrent state ->
+runs long_500k.
+"""
+
+from repro.configs.base import ArchConfig, XLSTMConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    xlstm=XLSTMConfig(slstm_every=8, proj_factor=2.0, chunk=256),
+    tie_embeddings=True,
+)

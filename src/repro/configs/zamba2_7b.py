@@ -1,0 +1,24 @@
+"""zamba2-7b [hybrid]: Mamba2 backbone + shared attention block
+[arXiv:2411.15242; unverified].
+
+81L d_model=3584 32H (GQA kv=32) d_ff=14336 vocab=32000, ssm_state=64.
+One shared (weight-tied) attention+MLP block is applied every 6 Mamba2
+blocks (13 applications over 81 layers); simplification vs the HF
+implementation (concat-embedding input + per-application LoRA) noted in
+DESIGN.md. Sub-quadratic backbone -> runs long_500k.
+"""
+
+from repro.configs.base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm=SSMConfig(d_state=64, d_conv=4, expand=2, head_dim=64, chunk=256),
+    shared_attn_every=6,
+)

@@ -1,0 +1,12 @@
+"""Algebraic MultiGrid preconditioner via compatible weighted matching (C3).
+
+The paper's AMG coarsens by aggregating DOFs with a maximum-weight matching
+on a weighted graph derived from the system matrix ("compatible weighted
+matching", [18, 21]); aggregates of size 8 are obtained by composing three
+pairwise matching sweeps per level; the V-cycle smoother is 4 sweeps of
+l1-Jacobi; coarsening is *decoupled* (per-shard) at scale so prolongators
+never cross shard boundaries — which keeps every inter-shard coupling inside
+the (already halo-planned) system matrices.
+"""
+
+from repro.core.amg.hierarchy import AMGParams, build_amg  # noqa: F401

@@ -1,0 +1,25 @@
+"""AmgX-analog AMG baseline (C5 comparison).
+
+The paper configures NVIDIA AmgX "with the matching-based aggregation
+preconditioner, using aggregates of size 8, as in BootCMatchGX", the same
+4-sweep l1-Jacobi smoother, and default hierarchy settings — so the PCG gap
+it reports comes from the *quality* of the aggregation (and per-iteration
+implementation efficiency), not the cycle structure.
+
+The analog here is therefore ``build_amg`` with ``weighting="plain"``:
+identical sweeps / aggregate size / smoother / coarse solve, but matching on
+strength-of-connection |a_ij| instead of the compatibility weights — the
+component the paper credits for BootCMatchGX's better convergence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.amg.hierarchy import AMGParams, build_amg
+
+
+def build_amgx_analog(a_csr, n_shards: int, params: AMGParams | None = None, **kw):
+    params = params or AMGParams()
+    params = dataclasses.replace(params, weighting="plain", matcher="scan")
+    return build_amg(a_csr, n_shards, params, **kw)

@@ -1,0 +1,95 @@
+"""Device-side V-cycle (per-shard view, inside shard_map).
+
+Level data layout (see hierarchy.py):
+
+* ``mat``              — A_l as a halo-planned DistELL block;
+* ``p_data / p_col``   — the tentative prolongator: ONE nonzero per fine row,
+  ``p_col`` is the *local* coarse aggregate id (decoupled aggregation keeps
+  it shard-local), so prolongation is a pure local gather;
+* ``pt_data / pt_col`` — P^T in ELL over coarse rows (width = max aggregate
+  size, 8 in the paper configuration); restriction is a pure local ELL
+  matvec;
+* ``dinv``             — 1 / l1-Jacobi diagonal of A_l.
+
+The coarsest level is solved with a replicated dense inverse applied to the
+all-gathered coarse residual (coarse sizes are a few hundred at most).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.partition import DistELL
+from repro.core.spmv import ell_matvec, spmv_shard
+
+
+def _register(cls, data_fields, meta_fields):
+    return partial(
+        jax.tree_util.register_dataclass,
+        data_fields=data_fields,
+        meta_fields=meta_fields,
+    )(cls)
+
+
+@partial(
+    _register,
+    data_fields=("mat", "p_data", "p_col", "pt_data", "pt_col", "dinv"),
+    meta_fields=(),
+)
+@dataclasses.dataclass(frozen=True)
+class AMGLevel:
+    mat: DistELL
+    p_data: jax.Array  # (S, Rf) or (Rf,) locally
+    p_col: jax.Array  # int32 local coarse ids
+    pt_data: jax.Array  # (S, Rc, W)
+    pt_col: jax.Array  # int32 local fine ids
+    dinv: jax.Array  # (S, Rf)
+
+
+def jacobi_sweeps(
+    mat: DistELL, dinv: jax.Array, b: jax.Array, x: jax.Array | None,
+    n: int, omega: float, axis: str,
+) -> jax.Array:
+    """n sweeps of (damped) l1-Jacobi; x=None means zero initial guess, in
+    which case the first sweep is the free half-sweep x = omega*dinv*b."""
+    if x is None:
+        x = omega * dinv * b
+        n = n - 1
+    for _ in range(n):
+        x = x + omega * dinv * (b - spmv_shard(mat, x, axis))
+    return x
+
+
+def coarse_solve(dense_inv: jax.Array, rc: jax.Array, axis: str) -> jax.Array:
+    """Replicated dense inverse applied to the gathered coarse residual."""
+    r_full = lax.all_gather(rc, axis, tiled=True)
+    x_full = dense_inv @ r_full
+    idx = lax.axis_index(axis)
+    return lax.dynamic_slice_in_dim(x_full, idx * rc.shape[0], rc.shape[0])
+
+
+def vcycle_shard(
+    levels, dense_inv: jax.Array, b: jax.Array, axis: str,
+    *, n_smooth: int = 4, omega: float = 1.0,
+) -> jax.Array:
+    """One V(n_smooth, n_smooth) cycle applied to b (zero initial guess)."""
+
+    def down(l: int, bl: jax.Array) -> jax.Array:
+        lev = levels[l]
+        x = jacobi_sweeps(lev.mat, lev.dinv, bl, None, n_smooth, omega, axis)
+        r = bl - spmv_shard(lev.mat, x, axis)
+        rc = ell_matvec(lev.pt_data, lev.pt_col, r)  # restriction (local)
+        if l + 1 < len(levels):
+            xc = down(l + 1, rc)
+        else:
+            xc = coarse_solve(dense_inv, rc, axis)
+        x = x + lev.p_data * xc[lev.p_col]  # prolongation (local)
+        x = jacobi_sweeps(lev.mat, lev.dinv, bl, x, n_smooth, omega, axis)
+        return x
+
+    return down(0, b)

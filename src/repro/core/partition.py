@@ -1,0 +1,489 @@
+"""Block-row partitioning + halo-exchange planning (host side).
+
+This module reproduces the paper's distribution substrate (C1):
+
+* matrices are distributed in **blocks of contiguous rows** across shards;
+* device-resident column indices are **4-byte local indices** obtained by a
+  global->local shift + compaction — the global (possibly >2^32) index space
+  exists only on the host at partition time (numpy ``int64``);
+* every shard's sparse rows are split into a **local part** (columns owned by
+  the shard) and an **external part** (columns owned by other shards), so that
+  the local SpMV can be issued *before* the halo exchange completes — the JAX
+  analog of BootCMatchGX's overlap of GPU compute with MPI communication;
+* the halo exchange itself is planned as a set of ``lax.ppermute`` shifts
+  ("ring" mode, for matrices whose off-shard couplings reach at most
+  ``max_ring`` neighbor shards — all banded/stencil problems) or falls back to
+  a full ``all_gather`` ("allgather" mode) for irregular coupling patterns.
+  The fallback mirrors the paper's observation that irregular matrices
+  (G3_circuit-like) lose scalability to communication.
+
+Everything here is numpy / scipy; the device-side execution lives in
+``core/spmv.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Row partition
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RowPartition:
+    """Contiguous block-row partition of ``n_global`` rows over ``n_shards``."""
+
+    n_global: int
+    row_starts: tuple[int, ...]  # length n_shards + 1, row_starts[-1] == n_global
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.row_starts) - 1
+
+    def owner_range(self, shard: int) -> tuple[int, int]:
+        return self.row_starts[shard], self.row_starts[shard + 1]
+
+    def n_own(self, shard: int) -> int:
+        lo, hi = self.owner_range(shard)
+        return hi - lo
+
+    @property
+    def max_own(self) -> int:
+        return max(self.n_own(s) for s in range(self.n_shards))
+
+    def owner_of(self, gcol: np.ndarray) -> np.ndarray:
+        """Shard owning each global column (vectorized)."""
+        starts = np.asarray(self.row_starts[1:], dtype=np.int64)
+        return np.searchsorted(starts, gcol, side="right").astype(np.int64)
+
+
+def balanced_partition(n_global: int, n_shards: int) -> RowPartition:
+    starts = np.linspace(0, n_global, n_shards + 1).astype(np.int64)
+    return RowPartition(n_global, tuple(int(s) for s in starts))
+
+
+def plane_partition(n_global: int, plane: int, n_shards: int) -> RowPartition:
+    """Partition along whole z-planes of size ``plane`` (stencil slabs)."""
+    nz = n_global // plane
+    assert nz * plane == n_global, "n_global must be a multiple of plane"
+    if nz < n_shards:
+        raise ValueError(f"cannot slab-partition nz={nz} over {n_shards} shards")
+    zs = np.linspace(0, nz, n_shards + 1).astype(np.int64)
+    return RowPartition(n_global, tuple(int(z) * plane for z in zs))
+
+
+# ---------------------------------------------------------------------------
+# Halo plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloPlan:
+    """Static description of a halo exchange.
+
+    mode == "ring":
+        ``shifts[k]`` means every shard i *receives* a buffer of width
+        ``widths[k]`` from shard ``i + shifts[k]`` (edge shards receive
+        zeros).  The receive buffers are concatenated after ``x_own`` in
+        shift order, forming ``x_ext = [x_own | buf_0 | buf_1 | ...]``.
+    mode == "allgather":
+        ``x_ext`` is the full (padded) global vector, ``all_gather``-ed
+        over the shard axis; widths/shifts are empty.
+    """
+
+    mode: str  # "ring" | "allgather"
+    shifts: tuple[int, ...]
+    widths: tuple[int, ...]
+    n_own_pad: int  # uniform padded rows per shard
+    n_shards: int
+
+    @property
+    def ext_len(self) -> int:
+        if self.mode == "allgather":
+            return self.n_own_pad * self.n_shards
+        return self.n_own_pad + sum(self.widths)
+
+    def buf_offset(self, k: int) -> int:
+        """Offset of receive buffer ``k`` inside x_ext (ring mode)."""
+        return self.n_own_pad + sum(self.widths[:k])
+
+    def perm(self, k: int) -> tuple[tuple[int, int], ...]:
+        """ppermute (src, dst) pairs for shift k: src j sends to j - shift."""
+        d = self.shifts[k]
+        return tuple(
+            (j, j - d) for j in range(self.n_shards) if 0 <= j - d < self.n_shards
+        )
+
+    def collective_bytes_per_shard(self, itemsize: int = 8) -> int:
+        """Bytes each shard sends per exchange (roofline collective term)."""
+        if self.mode == "allgather":
+            return self.n_own_pad * (self.n_shards - 1) * itemsize
+        return sum(self.widths) * itemsize
+
+
+# ---------------------------------------------------------------------------
+# Distributed ELL matrix (host-built, device-resident)
+# ---------------------------------------------------------------------------
+
+
+def _register(cls, data_fields, meta_fields):
+    return partial(
+        jax.tree_util.register_dataclass,
+        data_fields=data_fields,
+        meta_fields=meta_fields,
+    )(cls)
+
+
+@partial(
+    _register,
+    data_fields=("data_loc", "col_loc", "data_ext", "col_ext", "send_sel"),
+    meta_fields=("plan", "n_global", "row_starts"),
+)
+@dataclasses.dataclass(frozen=True)
+class DistELL:
+    """Block-row-distributed sparse matrix in split ELL form.
+
+    All arrays carry a leading ``n_shards`` axis (sharded over the solver
+    mesh's ``shards`` axis outside shard_map; squeezed to the local block
+    inside).
+
+    * ``data_loc/col_loc``  — (S, R, k_loc): entries whose column is owned by
+      the same shard; ``col_loc`` indexes ``x_own`` (length R = n_own_pad).
+    * ``data_ext/col_ext``  — (S, R, k_ext): entries whose column lives on
+      another shard; ``col_ext`` indexes ``x_ext`` (see HaloPlan).
+    * ``send_sel``          — (S, sum(widths)) int32: per shift k, the slice
+      ``send_sel[:, off_k : off_k + widths[k]]`` lists the local indices each
+      shard sends for that shift.
+    Padding: data == 0, col == 0 everywhere (gathers stay in bounds and
+    contribute nothing).
+    """
+
+    data_loc: jax.Array
+    col_loc: jax.Array
+    data_ext: jax.Array
+    col_ext: jax.Array
+    send_sel: jax.Array
+    plan: HaloPlan
+    n_global: int
+    row_starts: tuple[int, ...]
+
+    @property
+    def n_shards(self) -> int:
+        return self.plan.n_shards
+
+    @property
+    def n_own_pad(self) -> int:
+        return self.plan.n_own_pad
+
+    @property
+    def dtype(self):
+        return self.data_loc.dtype
+
+    @property
+    def nnz_stored(self) -> int:
+        """Stored slots (incl. ELL padding) across all shards."""
+        return int(
+            np.prod(self.data_loc.shape, dtype=np.int64)
+            + np.prod(self.data_ext.shape, dtype=np.int64)
+        )
+
+    def spmv_flops(self) -> int:
+        """2*nnz useful flops (upper bound incl. ELL padding slots)."""
+        return 2 * self.nnz_stored
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+
+def _pad2(a: np.ndarray, rows: int, k: int, dtype) -> np.ndarray:
+    out = np.zeros((rows, k), dtype=dtype)
+    if a.size:
+        out[: a.shape[0], : a.shape[1]] = a
+    return out
+
+
+def _rows_to_ell(rows_entries, n_rows: int, k: int, dtype):
+    """rows_entries: list over rows of (cols int64 array, vals array)."""
+    data = np.zeros((n_rows, k), dtype=dtype)
+    col = np.zeros((n_rows, k), dtype=np.int32)
+    for i, (c, v) in enumerate(rows_entries):
+        m = len(c)
+        if m:
+            data[i, :m] = v
+            col[i, :m] = c
+    return data, col
+
+
+def partition_csr(
+    a_csr,
+    n_shards: int,
+    *,
+    max_ring: int = 3,
+    partition: RowPartition | None = None,
+    dtype=np.float64,
+    force_allgather: bool = False,
+) -> DistELL:
+    """Partition a host scipy CSR matrix into a DistELL.
+
+    Chooses ring mode iff every off-shard coupling reaches at most
+    ``max_ring`` shards away; otherwise falls back to allgather mode.
+    ``force_allgather=True`` always uses allgather mode — this is the
+    Ginkgo-analog baseline layout (full-vector gather, no halo
+    minimization).
+    """
+    a = a_csr.tocsr()
+    n = a.shape[0]
+    part = partition or balanced_partition(n, n_shards)
+    R = part.max_own
+
+    indptr, indices, vals = a.indptr, a.indices.astype(np.int64), a.data
+
+    # --- pass 1: discover shifts + per-(shard,shift) needed columns --------
+    owners_cache = {}
+    needed: dict[int, list[set]] = {}  # shift -> per-shard set of global cols
+    shifts_seen: set[int] = set()
+    for s in range(n_shards):
+        lo, hi = part.owner_range(s)
+        cols = indices[indptr[lo] : indptr[hi]]
+        own_mask = (cols >= lo) & (cols < hi)
+        ext_cols = np.unique(cols[~own_mask])
+        owners = part.owner_of(ext_cols)
+        owners_cache[s] = (ext_cols, owners)
+        for d in np.unique(owners - s):
+            shifts_seen.add(int(d))
+
+    mode = "ring" if all(abs(d) <= max_ring for d in shifts_seen) else "allgather"
+    if force_allgather:
+        mode = "allgather"
+    shifts = tuple(sorted(shifts_seen, key=lambda d: (abs(d), d)))
+
+    if mode == "ring":
+        # recv_lists[k][i]: sorted global cols shard i receives from i+shifts[k]
+        recv_lists = [[np.zeros(0, np.int64) for _ in range(n_shards)] for _ in shifts]
+        for s in range(n_shards):
+            ext_cols, owners = owners_cache[s]
+            for k, d in enumerate(shifts):
+                sel = owners == s + d
+                recv_lists[k][s] = ext_cols[sel]
+        widths = tuple(
+            max((len(recv_lists[k][i]) for i in range(n_shards)), default=0)
+            for k in range(len(shifts))
+        )
+        plan = HaloPlan("ring", shifts, widths, R, n_shards)
+
+        # send_sel[j]: for shift k, shard j sends x_own[sel] to j - shifts[k];
+        # the receiver (j - d) needs recv_lists[k][j - d] (cols owned by j).
+        W = sum(widths)
+        send_sel = np.zeros((n_shards, max(W, 1)), np.int32)
+        for j in range(n_shards):
+            off = 0
+            jlo, _ = part.owner_range(j)
+            for k, d in enumerate(shifts):
+                i = j - d  # receiver
+                if 0 <= i < n_shards:
+                    g = recv_lists[k][i]
+                    send_sel[j, off : off + len(g)] = (g - jlo).astype(np.int32)
+                off += widths[k]
+    else:
+        plan = HaloPlan("allgather", (), (), R, n_shards)
+        send_sel = np.zeros((n_shards, 1), np.int32)
+        recv_lists = None
+
+    # --- pass 2: build split local/ext ELL blocks ---------------------------
+    k_loc_max, k_ext_max = 1, 1
+    per_shard = []
+    for s in range(n_shards):
+        lo, hi = part.owner_range(s)
+        loc_rows, ext_rows = [], []
+        # Map global ext col -> x_ext position for this shard.
+        if mode == "ring":
+            ext_map = {}
+            for k in range(len(shifts)):
+                base = plan.buf_offset(k)
+                for p, g in enumerate(recv_lists[k][s]):
+                    ext_map[int(g)] = base + p
+        for r in range(lo, hi):
+            cs = indices[indptr[r] : indptr[r + 1]]
+            vs = vals[indptr[r] : indptr[r + 1]]
+            own = (cs >= lo) & (cs < hi)
+            loc_rows.append(((cs[own] - lo).astype(np.int64), vs[own]))
+            ec, ev = cs[~own], vs[~own]
+            if mode == "ring":
+                lidx = np.fromiter(
+                    (ext_map[int(g)] for g in ec), dtype=np.int64, count=len(ec)
+                )
+            else:
+                # padded global layout: owner * R + (g - owner_start)
+                owners = part.owner_of(ec)
+                starts = np.asarray(part.row_starts, np.int64)[owners]
+                lidx = owners * R + (ec - starts)
+            ext_rows.append((lidx, ev))
+            k_loc_max = max(k_loc_max, int(own.sum()))
+            k_ext_max = max(k_ext_max, len(ec))
+        per_shard.append((loc_rows, ext_rows))
+
+    S = n_shards
+    data_loc = np.zeros((S, R, k_loc_max), dtype)
+    col_loc = np.zeros((S, R, k_loc_max), np.int32)
+    data_ext = np.zeros((S, R, k_ext_max), dtype)
+    col_ext = np.zeros((S, R, k_ext_max), np.int32)
+    for s, (loc_rows, ext_rows) in enumerate(per_shard):
+        dl, cl = _rows_to_ell(loc_rows, R, k_loc_max, dtype)
+        de, ce = _rows_to_ell(ext_rows, R, k_ext_max, dtype)
+        data_loc[s], col_loc[s] = dl, cl
+        data_ext[s], col_ext[s] = de, ce
+
+    return DistELL(
+        data_loc=jnp.asarray(data_loc),
+        col_loc=jnp.asarray(col_loc),
+        data_ext=jnp.asarray(data_ext),
+        col_ext=jnp.asarray(col_ext),
+        send_sel=jnp.asarray(send_sel),
+        plan=plan,
+        n_global=n,
+        row_starts=part.row_starts,
+    )
+
+
+def partition_stencil(p, n_shards: int, dtype=np.float64, mode: str = "ring") -> DistELL:
+    """Build a DistELL for a Poisson stencil problem WITHOUT materializing the
+    global matrix: per-shard cost is O(n_local * k).
+
+    Slab (z-plane) partition; both stencils reach exactly +-1 plane, so the
+    halo plan is always ring mode with shifts (-1, +1) and width = nx*ny
+    (except at single-shard, where there is no exchange).
+
+    ``mode="allgather"`` builds the Ginkgo-analog layout instead (external
+    columns in padded-global layout; full-vector gather at SpMV time).
+    """
+    from repro.matrices.poisson import stencil_offsets, stencil_values
+
+    part = plane_partition(p.n, p.plane, n_shards)
+    R = part.max_own
+    H = p.plane
+    offs = stencil_offsets(p.stencil)
+    k = len(offs)
+    svals = stencil_values(p)
+    # Entries per row reaching planes z-1 / z / z+1.
+    off_dz = offs[:, 2]
+    k_ext = max(int((off_dz == -1).sum()), int((off_dz == 1).sum()))
+
+    if n_shards > 1 and mode == "ring":
+        shifts, widths = (-1, 1), (H, H)
+    else:
+        shifts, widths = (), ()
+    plan = HaloPlan(mode if n_shards > 1 else "ring", shifts, widths, R, n_shards)
+
+    S = n_shards
+    data_loc = np.zeros((S, R, k), dtype)
+    col_loc = np.zeros((S, R, k), np.int32)
+    data_ext = np.zeros((S, R, max(k_ext, 1)), dtype)
+    col_ext = np.zeros((S, R, max(k_ext, 1)), np.int32)
+    W = sum(widths)
+    send_sel = np.zeros((S, max(W, 1)), np.int32)
+
+    for s in range(S):
+        lo, hi = part.owner_range(s)
+        z0, z1 = lo // H, hi // H
+        n_own = hi - lo
+        zz, yy, xx = np.meshgrid(
+            np.arange(z0, z1), np.arange(p.ny), np.arange(p.nx), indexing="ij"
+        )
+        coords = np.stack([xx.ravel(), yy.ravel(), zz.ravel()], axis=1)
+        nbr = coords[:, None, :] + offs[None, :, :]  # (n_own, k, 3)
+        valid = (
+            (nbr[..., 0] >= 0)
+            & (nbr[..., 0] < p.nx)
+            & (nbr[..., 1] >= 0)
+            & (nbr[..., 1] < p.ny)
+            & (nbr[..., 2] >= 0)
+            & (nbr[..., 2] < p.nz)
+        )
+        gcol = nbr[..., 0] + p.nx * (nbr[..., 1] + p.ny * nbr[..., 2])
+        vals = np.broadcast_to(svals[None, :], valid.shape) * valid
+
+        own = valid & (gcol >= lo) & (gcol < hi)
+        ext = valid & ~own
+        # local part
+        dl = np.where(own, vals, 0.0).astype(dtype)
+        cl = np.where(own, gcol - lo, 0).astype(np.int32)
+        data_loc[s, :n_own], col_loc[s, :n_own] = dl, cl
+        # ext part: left plane (z0-1) -> buffer 0; right plane (z1) -> buffer 1
+        if S > 1:
+            left = ext & (gcol < lo)
+            right = ext & (gcol >= hi)
+            # position within plane = gcol mod H
+            pos = (gcol % H).astype(np.int64)
+            if mode == "ring":
+                lcol = np.where(left, R + pos, 0) + np.where(right, R + H + pos, 0)
+            else:
+                gsafe = np.where(ext, gcol, lo)
+                owners = part.owner_of(gsafe.ravel()).reshape(gsafe.shape)
+                starts = np.asarray(part.row_starts, np.int64)[owners]
+                lcol = np.where(ext, owners * R + (gsafe - starts), 0)
+            de = np.where(ext, vals, 0.0).astype(dtype)
+            # compact ext entries into k_ext slots per row
+            order = np.argsort(~ext, axis=1, kind="stable")  # ext first
+            de_s = np.take_along_axis(de, order, axis=1)[:, :k_ext]
+            ce_s = np.take_along_axis(
+                np.where(ext, lcol, 0).astype(np.int32), order, axis=1
+            )[:, :k_ext]
+            data_ext[s, :n_own], col_ext[s, :n_own] = de_s, ce_s
+            # send selectors: shift -1 (recv from left): shard j sends its LAST
+            # plane to j+1 <=> under perm (j, j-(-1))... define per plan.perm:
+            # shift d=-1: receiver i gets from i-1; sender j sends to j+1 its
+            # last plane rows [n_own-H, n_own).
+            # shift d=+1: sender j sends to j-1 its first plane rows [0, H).
+            off = 0
+            for kk, d in enumerate(shifts):
+                if d == -1:
+                    sel = np.arange(n_own - H, n_own, dtype=np.int32)
+                else:
+                    sel = np.arange(0, H, dtype=np.int32)
+                send_sel[s, off : off + H] = sel
+                off += widths[kk]
+
+    return DistELL(
+        data_loc=jnp.asarray(data_loc),
+        col_loc=jnp.asarray(col_loc),
+        data_ext=jnp.asarray(data_ext),
+        col_ext=jnp.asarray(col_ext),
+        send_sel=jnp.asarray(send_sel),
+        plan=plan,
+        n_global=p.n,
+        row_starts=part.row_starts,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Distributed vectors (host <-> device layout helpers)
+# ---------------------------------------------------------------------------
+
+
+def pad_vector(x: np.ndarray, mat: DistELL) -> np.ndarray:
+    """Global vector -> (S, R) padded shard layout."""
+    S, R = mat.n_shards, mat.n_own_pad
+    out = np.zeros((S, R), x.dtype)
+    for s in range(S):
+        lo, hi = mat.row_starts[s], mat.row_starts[s + 1]
+        out[s, : hi - lo] = x[lo:hi]
+    return out
+
+
+def unpad_vector(xp: np.ndarray, mat: DistELL) -> np.ndarray:
+    """(S, R) padded shard layout -> global vector."""
+    xp = np.asarray(xp)
+    parts = []
+    for s in range(mat.n_shards):
+        lo, hi = mat.row_starts[s], mat.row_starts[s + 1]
+        parts.append(xp[s, : hi - lo])
+    return np.concatenate(parts)

@@ -1,0 +1,193 @@
+"""Local (per-shard) sparse-matrix formats and pure-jnp SpMV implementations.
+
+The paper's library stores matrices in CSR with 4-byte *local* column indices
+(global→local shift + compaction). We keep the same discipline:
+
+* all device-resident column indices are ``int32`` and index a *local extended
+  vector* ``x_ext = [halo_lo | x_own | halo_hi]`` (see ``core/partition.py``);
+* the global 64-bit index space only exists on the host at partition time.
+
+Formats:
+
+* ``CSR``  — data/col/row_ids triple (row_ids instead of indptr so that SpMV is
+  a single ``segment_sum``; TPU/XLA lowers this to a scatter-add).
+* ``ELL``  — (n, k) padded rows; the TPU-friendly jnp format (dense gather +
+  reduction, no scatter). Default on-device format for stencil matrices.
+* ``BCSR`` — dense (br, bc) blocks + block-column indices; the Pallas-kernel
+  format (see ``kernels/spmv_bcsr.py``).
+
+Padding conventions: padded entries carry ``data == 0`` and ``col == 0`` so any
+gather stays in bounds and contributes nothing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _register(cls, data_fields, meta_fields):
+    return partial(
+        jax.tree_util.register_dataclass,
+        data_fields=data_fields,
+        meta_fields=meta_fields,
+    )(cls)
+
+
+@partial(_register, data_fields=("data", "col", "row_ids"), meta_fields=("n_rows", "n_cols"))
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """CSR stored as COO-with-sorted-rows (row_ids) for segment_sum SpMV."""
+
+    data: jax.Array  # (nnz,)
+    col: jax.Array  # (nnz,) int32, local indices
+    row_ids: jax.Array  # (nnz,) int32, non-decreasing; padding rows use n_rows
+    n_rows: int
+    n_cols: int
+
+    @property
+    def nnz(self) -> int:
+        return self.data.shape[0]
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        """y = A @ x, x of length n_cols. Padding row_ids==n_rows are dropped."""
+        contrib = self.data * x[self.col]
+        y = jax.ops.segment_sum(contrib, self.row_ids, num_segments=self.n_rows + 1)
+        return y[: self.n_rows]
+
+
+@partial(_register, data_fields=("data", "col"), meta_fields=("n_cols",))
+@dataclasses.dataclass(frozen=True)
+class ELL:
+    """ELLPACK: fixed k slots per row. Padded slots: data=0, col=0."""
+
+    data: jax.Array  # (n_rows, k)
+    col: jax.Array  # (n_rows, k) int32
+    n_cols: int
+
+    @property
+    def n_rows(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.data.shape[1]
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        return jnp.einsum("rk,rk->r", self.data, x[self.col])
+
+
+@partial(
+    _register,
+    data_fields=("blocks", "bcol", "brow_ids"),
+    meta_fields=("n_brows", "n_bcols", "br", "bc"),
+)
+@dataclasses.dataclass(frozen=True)
+class BCSR:
+    """Block-CSR with dense (br, bc) blocks; the Pallas SpMV format.
+
+    Block rows are padded to a uniform number of blocks per block-row when
+    used by the Pallas kernel (see kernels/spmv_bcsr.py); here we keep the
+    general ragged form with brow_ids for the jnp reference path.
+    """
+
+    blocks: jax.Array  # (nnzb, br, bc)
+    bcol: jax.Array  # (nnzb,) int32
+    brow_ids: jax.Array  # (nnzb,) int32, padding uses n_brows
+    n_brows: int
+    n_bcols: int
+    br: int
+    bc: int
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        xb = x.reshape(self.n_bcols, self.bc)
+        contrib = jnp.einsum("nij,nj->ni", self.blocks, xb[self.bcol])
+        yb = jax.ops.segment_sum(contrib, self.brow_ids, num_segments=self.n_brows + 1)
+        return yb[: self.n_brows].reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Host-side conversions (numpy; used at partition/setup time only).
+# ---------------------------------------------------------------------------
+
+
+def csr_from_scipy(a, pad_nnz_to: int | None = None, dtype=np.float32) -> CSR:
+    """Build a device CSR from a scipy.sparse CSR matrix (host)."""
+    a = a.tocsr()
+    n_rows, n_cols = a.shape
+    nnz = a.nnz
+    row_ids = np.repeat(np.arange(n_rows, dtype=np.int32), np.diff(a.indptr))
+    data = a.data.astype(dtype)
+    col = a.indices.astype(np.int32)
+    if pad_nnz_to is not None and pad_nnz_to > nnz:
+        pad = pad_nnz_to - nnz
+        data = np.concatenate([data, np.zeros(pad, dtype)])
+        col = np.concatenate([col, np.zeros(pad, np.int32)])
+        row_ids = np.concatenate([row_ids, np.full(pad, n_rows, np.int32)])
+    return CSR(
+        data=jnp.asarray(data),
+        col=jnp.asarray(col),
+        row_ids=jnp.asarray(row_ids),
+        n_rows=n_rows,
+        n_cols=n_cols,
+    )
+
+
+def ell_from_scipy(a, k: int | None = None, dtype=np.float32, n_cols: int | None = None):
+    """Build an ELL matrix (host). k defaults to max nnz/row."""
+    a = a.tocsr()
+    n_rows, a_cols = a.shape
+    n_cols = a_cols if n_cols is None else n_cols
+    counts = np.diff(a.indptr)
+    kmax = int(counts.max()) if n_rows else 0
+    if k is None:
+        k = kmax
+    if kmax > k:
+        raise ValueError(f"row with {kmax} nnz exceeds requested k={k}")
+    data = np.zeros((n_rows, k), dtype)
+    col = np.zeros((n_rows, k), np.int32)
+    for i in range(n_rows):
+        lo, hi = a.indptr[i], a.indptr[i + 1]
+        c = hi - lo
+        data[i, :c] = a.data[lo:hi]
+        col[i, :c] = a.indices[lo:hi]
+    return ELL(data=jnp.asarray(data), col=jnp.asarray(col), n_cols=n_cols)
+
+
+def bcsr_from_scipy(a, br: int, bc: int, dtype=np.float32) -> BCSR:
+    """Build a BCSR matrix with dense (br, bc) blocks (host).
+
+    The matrix is zero-padded up to multiples of the block size; blocks with
+    any nonzero are materialized densely.
+    """
+    import scipy.sparse as sp
+
+    a = a.tocsr()
+    n, m = a.shape
+    n_brows = -(-n // br)
+    n_bcols = -(-m // bc)
+    ap = sp.csr_matrix((a.data, a.indices, a.indptr), shape=(n, m))
+    ap.resize(n_brows * br, n_bcols * bc)
+    coo = ap.tocoo()
+    bi = coo.row // br
+    bj = coo.col // bc
+    keys = bi.astype(np.int64) * n_bcols + bj
+    uniq, inv = np.unique(keys, return_inverse=True)
+    nnzb = len(uniq)
+    blocks = np.zeros((nnzb, br, bc), dtype)
+    blocks[inv, coo.row % br, coo.col % bc] = coo.data
+    brow_ids = (uniq // n_bcols).astype(np.int32)
+    bcol = (uniq % n_bcols).astype(np.int32)
+    return BCSR(
+        blocks=jnp.asarray(blocks),
+        bcol=jnp.asarray(bcol),
+        brow_ids=jnp.asarray(brow_ids),
+        n_brows=n_brows,
+        n_bcols=n_bcols,
+        br=br,
+        bc=bc,
+    )

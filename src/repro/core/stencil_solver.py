@@ -1,0 +1,128 @@
+"""Matrix-free distributed stencil CG (beyond-paper optimization, §Perf).
+
+The paper's benchmarks are structured 7/27-point Poisson stencils stored in
+CSR; on TPU the roofline-optimal formulation drops the matrix entirely:
+y = A x becomes shift-and-add on the local (nz_loc, ny, nx) grid, and the
+halo exchange shrinks to ONE boundary plane per neighbor. Per SpMV this
+removes ALL matrix-value and column-index HBM traffic:
+
+    ELL 7pt:  7*(8+4) B/row matrix traffic + 12 B/row vector r/w  = 96 B/row
+    matfree:  ~16 B/row (read x once + write y once, f64)          ~6x less
+
+(27pt: 27*(8+4)+12 = 336 B/row vs the same ~16 B/row: ~21x.) The same idea
+with f32 halves it again. The single-node kernel-level version of this
+operator is kernels/spmv_stencil.py (Pallas, VMEM-tiled); this module is the
+shard_map-distributed form used by the production-mesh dry-run and solvers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.cg import (
+    SolveResult,
+    _BODIES,
+    identity_precond,
+)
+
+
+def _shift_yx(x, dy, dx):
+    """Zero-fill shift along (y, x) of a (nz, ny, nx) block."""
+    nz, ny, nx = x.shape
+    out = x
+    if dy:
+        pad = ((0, 0), (dy, 0), (0, 0)) if dy > 0 else ((0, 0), (0, -dy), (0, 0))
+        out = jnp.pad(out, pad)
+        out = out[:, :ny, :] if dy > 0 else out[:, -dy : ny - dy, :]
+    if dx:
+        pad = ((0, 0), (0, 0), (dx, 0)) if dx > 0 else ((0, 0), (0, 0), (0, -dx))
+        out = jnp.pad(out, pad)
+        out = out[:, :, :nx] if dx > 0 else out[:, :, -dx : nx - dx]
+    return out
+
+
+def make_matvec(p, n_shards: int, axis: str = "shards"):
+    """Per-shard matrix-free stencil operator (inside shard_map).
+
+    v is the local flattened slab (nz_loc * ny * nx,). Requires a uniform
+    slab partition (p.nz % n_shards == 0).
+    """
+    assert p.nz % n_shards == 0, "matrix-free path needs uniform slabs"
+    nz_loc = p.nz // n_shards
+
+    fwd = tuple((j, j + 1) for j in range(n_shards - 1))
+    bwd = tuple((j, j - 1) for j in range(1, n_shards))
+
+    def A(v: jax.Array) -> jax.Array:
+        x3 = v.reshape(nz_loc, p.ny, p.nx)
+        if n_shards > 1:
+            prev = lax.ppermute(x3[-1], axis, fwd)  # from left neighbor
+            nxt = lax.ppermute(x3[0], axis, bwd)  # from right neighbor
+        else:
+            prev = jnp.zeros_like(x3[0])
+            nxt = jnp.zeros_like(x3[0])
+        ext = jnp.concatenate([prev[None], x3, nxt[None]], axis=0)
+        c = ext[1:-1]
+        zm, zp = ext[:-2], ext[2:]
+        if p.stencil == "7pt":
+            ax, ay, az = p.aniso
+            y = 2.0 * (ax + ay + az) * c
+            y = y - ax * (_shift_yx(c, 0, 1) + _shift_yx(c, 0, -1))
+            y = y - ay * (_shift_yx(c, 1, 0) + _shift_yx(c, -1, 0))
+            y = y - az * (zm + zp)
+        else:  # 27pt
+            s9 = jnp.zeros_like(ext)
+            for dy in (-1, 0, 1):
+                for dx in (-1, 0, 1):
+                    s9 = s9 + _shift_yx(ext, dy, dx)
+            y = 27.0 * c - (s9[:-2] + s9[1:-1] + s9[2:])
+        return y.reshape(-1)
+
+    return A
+
+
+def make_stencil_solver_fn(
+    mesh,
+    p,
+    n_shards: int,
+    *,
+    variant: str = "hs",
+    tol: float = 1e-8,
+    maxiter: int = 100,
+    s: int = 2,
+    axis: str = "shards",
+):
+    """Jitted matrix-free distributed CG: (b, x0) -> SolveResult.
+
+    b/x0: (n_shards, R) with R = (nz/n_shards) * ny * nx. Accepts
+    ShapeDtypeStructs (dry-run) or real arrays (execution).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    pre = identity_precond()
+    body = _BODIES[variant]
+    kw = dict(tol=tol, maxiter=maxiter, axis=axis)
+    if variant == "sstep":
+        kw["s"] = s
+    A = make_matvec(p, n_shards, axis)
+
+    def fn(b, x0):
+        x, iters, rr, bb = body(A, pre, (), b[0], x0[0], **kw)
+        return x[None], iters, rr, bb
+
+    mapped = shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(P("shards", None), P("shards", None)),
+        out_specs=(P("shards", None), P(), P(), P()),
+    )
+
+    @jax.jit
+    def solve(b, x0):
+        x, iters, rr, bb = mapped(b, x0)
+        return SolveResult(x=x, iters=iters, rr=rr, bb=bb)
+
+    return solve

@@ -1,0 +1,52 @@
+"""Distributed dense-vector operations (per-shard view, inside shard_map).
+
+The paper's library provides dot / axpy / norm in a distributed-memory
+setting with GPU-side local work; the communication-reduction discipline
+(C2) shows up here as **fused reductions**: any group of inner products
+needed at the same algorithmic point is packed into a single ``lax.psum``
+of a small vector, producing exactly one collective.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def pdot(x: jax.Array, y: jax.Array, axis: str) -> jax.Array:
+    """Global <x, y> — ONE all-reduce."""
+    return lax.psum(jnp.vdot(x, y), axis)
+
+
+def pnorm2(x: jax.Array, axis: str) -> jax.Array:
+    """Global ||x||^2 — ONE all-reduce."""
+    return pdot(x, x, axis)
+
+
+def fused_dots(pairs, axis: str) -> jax.Array:
+    """Global inner products for a list of (x, y) pairs — ONE all-reduce.
+
+    Returns a (len(pairs),) vector. This is the building block of the
+    communication-reduced CG variants: local partial dots are stacked and
+    reduced together.
+    """
+    local = jnp.stack([jnp.vdot(x, y) for x, y in pairs])
+    return lax.psum(local, axis)
+
+
+def fused_blocks(parts, axis: str) -> jax.Array:
+    """Fuse arbitrary local reduction blocks into ONE all-reduce.
+
+    ``parts`` is a list of arrays (any shapes); they are flattened,
+    concatenated, psum-ed once, and returned as one flat vector — callers
+    re-split with known sizes.  Used by s-step CG to reduce the whole Gram
+    matrix + moment vector in a single collective.
+    """
+    flat = jnp.concatenate([p.reshape(-1) for p in parts])
+    return lax.psum(flat, axis)
+
+
+def axpy(alpha, x: jax.Array, y: jax.Array) -> jax.Array:
+    """alpha*x + y (local; no communication)."""
+    return alpha * x + y

@@ -1,0 +1,19 @@
+"""Energy measurement methodology (the paper's C4), adapted to this runtime.
+
+The paper samples internal sensors (LIKWID/RAPL for the CPU, NVML via the
+powerMonitor tool for GPUs), integrates the power-time curve, and splits
+energy into *static* (P_idle * T) and *dynamic* (total - static) parts.
+
+This container has neither TPUs nor accessible RAPL counters, so the power
+*source* is a calibrated analytical model (model.py) driven by the same
+roofline activity terms the dry-run produces; everything else — region
+markers, per-device power-time curves, integration, static/dynamic
+decomposition, power-peak extraction, 5-run averaging — reproduces the
+paper's methodology exactly (monitor.py / accounting.py). Absolute Joules
+are model outputs; like the paper, the analysis emphasizes *relative*
+comparisons between library variants.
+"""
+
+from repro.energy.accounting import OpCounts, CostModel  # noqa: F401
+from repro.energy.model import PowerModel  # noqa: F401
+from repro.energy.monitor import PowerMonitor  # noqa: F401

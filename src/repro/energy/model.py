@@ -1,0 +1,79 @@
+"""Calibrated analytical power model (replaces hardware sensors — DESIGN §4).
+
+Per-chip instantaneous power:
+
+    P(t) = P_idle + e_flop * FLOP/s + e_hbm * B_hbm/s + e_ici * B_ici/s,
+    clamped to P_peak.
+
+Calibration (documented, per published energy-cost-of-data-movement studies
+[Kestor'13, Delestrac'24] and the TPU v5e envelope in roofline/hw.py):
+
+* a roofline-saturating bf16 matmul (197 TFLOP/s + ~819 GB/s) draws P_peak;
+* an HBM-saturating stream (819 GB/s, negligible flops) draws ~65% of the
+  dynamic envelope — data movement dominates FP energy;
+* ICI transfer energy per byte is ~2x HBM energy per byte.
+
+Solving those three constraints for (e_flop, e_hbm, e_ici):
+
+    e_hbm  = 0.65 * (P_peak - P_idle) / HBM_bw            [J/B]
+    e_flop = (0.35 * (P_peak - P_idle)) / peak_flops       [J/FLOP]
+    e_ici  = 2 * e_hbm                                     [J/B]
+
+The host (CPU) model is LIKWID-socket-scoped: P_idle plus an active
+increment while the host drives collectives/launch work.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.roofline.hw import DEFAULT_CHIP, DEFAULT_HOST, ChipSpec, HostSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerModel:
+    chip: ChipSpec = DEFAULT_CHIP
+    host: HostSpec = DEFAULT_HOST
+    hbm_fraction: float = 0.65  # share of dynamic envelope at HBM saturation
+    ici_hbm_ratio: float = 2.0  # ICI J/B relative to HBM J/B
+
+    @property
+    def dyn_envelope(self) -> float:
+        return self.chip.p_peak_w - self.chip.p_idle_w
+
+    @property
+    def e_hbm(self) -> float:  # J/B
+        return self.hbm_fraction * self.dyn_envelope / self.chip.hbm_bw
+
+    @property
+    def e_flop(self) -> float:  # J/FLOP
+        return (1.0 - self.hbm_fraction) * self.dyn_envelope / self.chip.peak_flops_bf16
+
+    @property
+    def e_ici(self) -> float:  # J/B
+        return self.ici_hbm_ratio * self.e_hbm
+
+    def chip_power(self, flops_per_s: float, hbm_bps: float, ici_bps: float) -> float:
+        """Instantaneous per-chip power [W] for the given activity rates."""
+        p = (
+            self.chip.p_idle_w
+            + self.e_flop * flops_per_s
+            + self.e_hbm * hbm_bps
+            + self.e_ici * ici_bps
+        )
+        return min(p, self.chip.p_peak_w)
+
+    def host_power(self, active_fraction: float = 0.0) -> float:
+        """Host socket power; ``active_fraction`` in [0, 1] scales the
+        active increment (the paper's CPU contribution is small — it mostly
+        drives communication)."""
+        return self.host.p_idle_w + active_fraction * self.host.p_active_w
+
+    # Convenience idle levels (static power in the paper's terminology).
+    @property
+    def chip_static_w(self) -> float:
+        return self.chip.p_idle_w
+
+    @property
+    def host_static_w(self) -> float:
+        return self.host.p_idle_w

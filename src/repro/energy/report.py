@@ -1,0 +1,97 @@
+"""Table / CSV rendering of energy results in the paper's formats."""
+
+from __future__ import annotations
+
+import csv
+import io
+
+
+def fmt_table(rows: list[dict], columns: list[tuple[str, str]], title: str = "") -> str:
+    """rows = list of dicts; columns = [(key, header)]. Plain-text table."""
+    widths = [
+        max(len(h), *(len(_fmt(r.get(k, ""))) for r in rows)) if rows else len(h)
+        for k, h in columns
+    ]
+    out = io.StringIO()
+    if title:
+        out.write(f"== {title} ==\n")
+    out.write(
+        "  ".join(h.ljust(w) for (k, h), w in zip(columns, widths)) + "\n"
+    )
+    out.write("  ".join("-" * w for w in widths) + "\n")
+    for r in rows:
+        out.write(
+            "  ".join(_fmt(r.get(k, "")).ljust(w) for (k, h), w in zip(columns, widths))
+            + "\n"
+        )
+    return out.getvalue()
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1000 or abs(v) < 1e-3:
+            return f"{v:.3e}"
+        return f"{v:.4f}"
+    return str(v)
+
+
+def write_csv(path: str, rows: list[dict]):
+    if not rows:
+        return
+    keys = []
+    for r in rows:  # union of keys, first-seen order (rows may be ragged)
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys)
+        w.writeheader()
+        for r in rows:
+            w.writerow(r)
+
+
+# Column presets matching the paper's tables -------------------------------
+
+SPMV_COLUMNS = [  # Table 7 analog
+    ("n_shards", "#GPUs"),
+    ("matrix", "matrix"),
+    ("library", "library"),
+    ("time", "time (s)"),
+    ("de_gpu", "GPU dyn E (J)"),
+    ("de_cpu", "CPU dyn E (J)"),
+    ("de_total", "total dyn E (J)"),
+    ("gpu_power_peak", "GPU peak (W)"),
+]
+
+STATIC_DYNAMIC_COLUMNS = [  # Tables 2-6 analog
+    ("n_shards", "#GPUs"),
+    ("library", "library"),
+    ("gpu_pct", "GPU %"),
+    ("cpu_pct", "CPU %"),
+    ("total_pct", "total %"),
+]
+
+CG_COLUMNS = [  # Table 8 analog
+    ("n_shards", "#GPUs"),
+    ("matrix", "matrix"),
+    ("library", "library"),
+    ("iters", "iters"),
+    ("time", "runtime (s)"),
+    ("de_gpu", "GPU dyn E (J)"),
+    ("de_cpu", "CPU dyn E (J)"),
+    ("de_total", "total dyn E (J)"),
+    ("gpu_power_peak", "GPU peak (W)"),
+]
+
+PCG_COLUMNS = [  # Fig 11-16 analog
+    ("n_shards", "#GPUs"),
+    ("library", "library"),
+    ("iters", "iters"),
+    ("setup_time", "setup (s)"),
+    ("solve_time", "solve (s)"),
+    ("de_total", "total dyn E (J)"),
+    ("de_per_iter", "dyn E/iter (J)"),
+    ("gpu_power_peak", "GPU peak (W)"),
+]

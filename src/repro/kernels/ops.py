@@ -1,0 +1,49 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU backends (this container) and False on
+TPU — kernels are *written for* TPU (explicit BlockSpec VMEM tiling) and
+*validated* in interpret mode against the pure-jnp oracles in ref.py.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref  # noqa: F401  (re-exported oracle module)
+from repro.kernels.fused_reductions import fused_dots3 as _fused_dots3
+from repro.kernels.jacobi_stencil import jacobi_stencil_sweep as _jacobi
+from repro.kernels.spmv_bcsr import bcsr_spmv as _bcsr_spmv
+from repro.kernels.spmv_bcsr import pack_bcsr  # noqa: F401
+from repro.kernels.spmv_stencil import stencil_spmv as _stencil_spmv
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def stencil_spmv(x, *, stencil="7pt", aniso=(1.0, 1.0, 1.0), bz=8, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _stencil_spmv(x, stencil=stencil, aniso=aniso, bz=bz, interpret=interpret)
+
+
+def bcsr_spmv(blocks, bcol, x, *, n_brows, bpr, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _bcsr_spmv(
+        blocks, bcol, x, n_brows=n_brows, bpr=bpr, interpret=interpret
+    )
+
+
+def fused_dots3(p, w, r, *, chunk=65536, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fused_dots3(p, w, r, chunk=chunk, interpret=interpret)
+
+
+def jacobi_stencil_sweep(
+    x, b, dinv, *, stencil="7pt", aniso=(1.0, 1.0, 1.0), omega=1.0, bz=8,
+    interpret=None,
+):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _jacobi(
+        x, b, dinv, stencil=stencil, aniso=aniso, omega=omega, bz=bz,
+        interpret=interpret,
+    )

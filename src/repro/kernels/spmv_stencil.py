@@ -1,0 +1,109 @@
+"""Matrix-free stencil SpMV Pallas kernel (7pt / 27pt, Dirichlet).
+
+TPU adaptation of the paper's CSR SpMV hot spot (see DESIGN.md §2): the
+benchmark matrices are structured stencils, and on TPU the roofline-optimal
+formulation is **matrix-free shift-and-add** on the 3-D grid held in VMEM —
+no matrix values, no column indices, no gathers. Per output element the HBM
+traffic drops from ~(8B value + 4B index) * k + vector traffic (CSR/ELL) to
+~2 grid reads + 1 write, a >6x arithmetic-intensity gain for the 7-point
+stencil; this is the beyond-paper optimization recorded separately in
+EXPERIMENTS.md §Perf.
+
+Tiling: grid over z-slabs of ``bz`` planes. The kernel reads its own
+(bz, ny, nx) block plus ONE boundary plane from each z-neighbor (passed as
+two extra (1, ny, nx) views of the same array, clamped at the edges and
+masked by program_id) — HBM reads are bz+2 planes per bz planes of output,
+i.e. within 2/bz of the minimum. x/y-direction neighbors live inside the
+block; their shifted reads are VMEM-local. Lane dim = nx (pad to a multiple
+of 128 for hardware alignment); sublane = ny.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _shift_yx(x: jax.Array, dy: int, dx: int) -> jax.Array:
+    """Zero-fill shift within (z, y, x) block along y/x only."""
+    z, ny, nx = x.shape
+    out = x
+    if dy:
+        pad = ((0, 0), (dy, 0), (0, 0)) if dy > 0 else ((0, 0), (0, -dy), (0, 0))
+        out = jnp.pad(out, pad)
+        out = out[:, : ny, :] if dy > 0 else out[:, -dy : ny - dy, :]
+    if dx:
+        pad = ((0, 0), (0, 0), (dx, 0)) if dx > 0 else ((0, 0), (0, 0), (0, -dx))
+        out = jnp.pad(out, pad)
+        out = out[:, :, : nx] if dx > 0 else out[:, :, -dx : nx - dx]
+    return out
+
+
+def _stencil_kernel(prev_ref, cur_ref, next_ref, y_ref, *, stencil, aniso, nzb):
+    i = pl.program_id(0)
+    c = cur_ref[...]  # (bz, ny, nx)
+    dt = c.dtype
+    # Boundary planes from neighbor blocks; zero at the global z edges.
+    pmask = jnp.where(i > 0, 1, 0).astype(dt)
+    nmask = jnp.where(i < nzb - 1, 1, 0).astype(dt)
+    prev_plane = prev_ref[...] * pmask  # (1, ny, nx)
+    next_plane = next_ref[...] * nmask
+
+    if stencil == "7pt":
+        ax, ay, az = aniso
+        zm = jnp.concatenate([prev_plane, c[:-1]], axis=0)
+        zp = jnp.concatenate([c[1:], next_plane], axis=0)
+        y = (2.0 * (ax + ay + az)) * c
+        y = y - ax * (_shift_yx(c, 0, 1) + _shift_yx(c, 0, -1))
+        y = y - ay * (_shift_yx(c, 1, 0) + _shift_yx(c, -1, 0))
+        y = y - az * (zm + zp)
+    else:  # 27pt
+        ext = jnp.concatenate([prev_plane, c, next_plane], axis=0)  # (bz+2,..)
+        s9 = jnp.zeros_like(ext)
+        for dy in (-1, 0, 1):
+            for dx in (-1, 0, 1):
+                s9 = s9 + _shift_yx(ext, dy, dx)
+        s27 = s9[:-2] + s9[1:-1] + s9[2:]
+        y = 27.0 * c - s27
+    y_ref[...] = y
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stencil", "aniso", "bz", "interpret"),
+)
+def stencil_spmv(
+    x: jax.Array,
+    *,
+    stencil: str = "7pt",
+    aniso: tuple = (1.0, 1.0, 1.0),
+    bz: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = A_stencil @ x for x of shape (nz, ny, nx); nz % bz == 0."""
+    nz, ny, nx = x.shape
+    assert nz % bz == 0, f"nz={nz} must be a multiple of bz={bz}"
+    nzb = nz // bz
+    kernel = functools.partial(
+        _stencil_kernel, stencil=stencil, aniso=aniso, nzb=nzb
+    )
+    # Plane views: block index along z is in *plane* units ((1, ny, nx)
+    # blocks); clamped at the global edges (masked inside the kernel).
+    prev_spec = pl.BlockSpec(
+        (1, ny, nx), lambda i: (jnp.maximum(i * bz - 1, 0), 0, 0)
+    )
+    next_spec = pl.BlockSpec(
+        (1, ny, nx), lambda i: (jnp.minimum(i * bz + bz, nz - 1), 0, 0)
+    )
+    cur_spec = pl.BlockSpec((bz, ny, nx), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(nzb,),
+        in_specs=[prev_spec, cur_spec, next_spec],
+        out_specs=pl.BlockSpec((bz, ny, nx), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nz, ny, nx), x.dtype),
+        interpret=interpret,
+    )(x, x, x)

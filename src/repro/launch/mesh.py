@@ -1,0 +1,43 @@
+"""Mesh construction for single-pod and multi-pod deployments.
+
+``make_production_mesh`` is a function (not a module-level constant) so that
+importing this module never touches JAX device state; callers decide when the
+device backend is initialized (the dry-run launcher forces 512 host devices
+*before* importing anything from ``repro``).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The production target mesh.
+
+    Single pod: 256 chips as (data=16, model=16).
+    Multi-pod: 2 pods x 256 chips as (pod=2, data=16, model=16); the ``pod``
+    axis is an outer pure-data axis (it only appears in gradient/optimizer
+    collectives), which is what lets it scale to O(100) pods.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_solver_mesh(n_shards: int | None = None):
+    """1-D mesh for the sparse-solver side (block-row partition).
+
+    The paper distributes matrices in blocks of contiguous rows across all
+    ranks; the JAX analog is a single flattened ``shards`` axis over every
+    addressable device (or the first ``n_shards`` of them).
+    """
+    devs = np.asarray(jax.devices())
+    if n_shards is not None:
+        devs = devs[:n_shards]
+    return jax.sharding.Mesh(devs, ("shards",))
+
+
+def flatten_to_solver_mesh(mesh: jax.sharding.Mesh):
+    """Reinterpret a production mesh's devices as a 1-D solver mesh."""
+    return jax.sharding.Mesh(mesh.devices.reshape(-1), ("shards",))

@@ -1,0 +1,176 @@
+"""Sparse-solver driver: the paper's workload end-to-end.
+
+    python -m repro.launch.solve --problem poisson7 --side 32 --shards 4 \\
+        --variant fcg --devices 4
+    python -m repro.launch.solve --problem g3_circuit --scale 0.01 --amg
+
+Prints runtime + iteration counts + the full energy report (powerMonitor
+analog), for both the BCMGX-analog and the Ginkgo-analog paths.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--problem", default="poisson7",
+                    help="poisson7 | poisson27 | <suitesparse name>")
+    ap.add_argument("--side", type=int, default=24)
+    ap.add_argument("--scale", type=float, default=0.01)
+    ap.add_argument("--shards", type=int, default=0, help="0 = all devices")
+    ap.add_argument("--variant", default="hs", choices=["hs", "fcg", "sstep"])
+    ap.add_argument("--op", default="cg", choices=["cg", "spmv"])
+    ap.add_argument("--amg", action="store_true", help="PCG with AMG")
+    ap.add_argument("--amgx-analog", action="store_true",
+                    help="PCG with the plain-aggregation (AmgX-analog) AMG")
+    ap.add_argument("--tol", type=float, default=1e-8)
+    ap.add_argument("--maxiter", type=int, default=200)
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--repeats", type=int, default=1)
+    return ap.parse_args(argv)
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}"
+        )
+    import time
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np
+
+    from repro.core.baselines import make_naive_solver
+    from repro.core.cg import make_solver
+    from repro.core.partition import pad_vector, partition_csr, unpad_vector
+    from repro.core.spmv import shard_matrix, shard_vector
+    from repro.energy.accounting import CostModel, cg_iteration_counts
+    from repro.energy.monitor import PowerMonitor
+    from repro.launch.mesh import make_solver_mesh
+    from repro.matrices import poisson
+    from repro.matrices.suitesparse import TABLE1, load_or_generate
+
+    n_shards = args.shards or len(jax.devices())
+    mesh = make_solver_mesh(n_shards)
+
+    if args.problem.startswith("poisson"):
+        stencil = "7pt" if args.problem == "poisson7" else "27pt"
+        p = poisson.cube(args.side, stencil)
+        a = poisson.poisson_scipy(p)
+        name = f"{stencil}-{args.side}^3"
+    else:
+        a = load_or_generate(args.problem, scale=args.scale)
+        name = args.problem
+    n = a.shape[0]
+    b = np.ones(n)
+    print(f"problem={name} n={n} nnz={a.nnz} shards={n_shards}")
+
+    precond = None
+    amg_info = None
+    setup_time = 0.0
+    if args.amg or args.amgx_analog:
+        if args.amgx_analog:
+            from repro.core.amg.baseline import build_amgx_analog as builder
+        else:
+            from repro.core.amg import build_amg as builder
+
+        t0 = time.perf_counter()
+        precond, amg_info = builder(a, n_shards)
+        setup_time = time.perf_counter() - t0
+        print(
+            f"AMG: {amg_info.n_levels} levels rows={amg_info.level_rows} "
+            f"opcx={amg_info.operator_complexity:.2f} setup={setup_time:.4f}s"
+        )
+
+    mat = shard_matrix(mesh, partition_csr(a, n_shards))
+    matg = shard_matrix(mesh, partition_csr(a, n_shards, force_allgather=True))
+
+    bp = shard_vector(mesh, pad_vector(b, mat))
+    x0 = shard_vector(mesh, np.zeros_like(pad_vector(b, mat)))
+
+    if args.op == "spmv":
+        from repro.core.baselines import make_naive_spmv
+        from repro.core.spmv import make_spmv
+        from repro.energy.accounting import spmv_counts
+
+        for label, m, fn in [
+            ("BCMGX-analog", mat, make_spmv(mesh, mat)),
+            ("Ginkgo-analog", matg, make_naive_spmv(mesh, matg)),
+        ]:
+            y = fn(m, bp)
+            jax.block_until_ready(y)
+            t0 = time.perf_counter()
+            for _ in range(100):
+                y = fn(m, bp)
+            jax.block_until_ready(y)
+            wall = (time.perf_counter() - t0) / 100
+            overlap = label == "BCMGX-analog"
+            counts = spmv_counts(m, overlap)
+            mon = PowerMonitor(n_devices=n_shards, cost=CostModel())
+            mon.idle(0.01)
+            t_model = mon.region(
+                "spmv", counts, n_shards=n_shards, overlap=overlap, repeats=100
+            )
+            mon.idle(0.01)
+            e = mon.energy()
+            print(
+                f"{label:14s} iters=100 relres=0.0e+00 "
+                f"wall={wall:.6f}s modeled={t_model/100:.4e}s "
+                f"DE={e['de_total']:.4f}J peak={e['gpu_power_peak']:.0f}W "
+                f"DEgpu={e['de_gpu']:.4f}J DEcpu={e['de_cpu']:.4f}J"
+            )
+        return
+
+    solver = make_solver(
+        mesh, mat, variant=args.variant, precond=precond,
+        tol=args.tol, maxiter=args.maxiter,
+    )
+    naive = make_naive_solver(mesh, matg, tol=args.tol, maxiter=args.maxiter)
+
+    bcmgx_label = "BCMGX-analog"
+    if args.amgx_analog:
+        bcmgx_label = "AmgX-analog"
+    for label, fn, m in [(bcmgx_label, solver, mat), ("Ginkgo-analog", naive, matg)]:
+        if label == "Ginkgo-analog" and (args.amg or args.amgx_analog):
+            continue  # paper compares PCG against AmgX, not Ginkgo
+        res = fn(bp, x0)  # warmup/compile
+        jax.block_until_ready(res.x)
+        t0 = time.perf_counter()
+        for _ in range(args.repeats):
+            res = fn(bp, x0)
+            jax.block_until_ready(res.x)
+        wall = (time.perf_counter() - t0) / args.repeats
+        iters = int(res.iters)
+        # energy report from the powerMonitor analog
+        variant = args.variant if label != "Ginkgo-analog" else "naive"
+        counts = cg_iteration_counts(m, variant)
+        if precond is not None:
+            from repro.energy.accounting import vcycle_counts
+
+            counts = counts + vcycle_counts(amg_info, m)
+        mon = PowerMonitor(n_devices=n_shards, cost=CostModel())
+        mon.idle(0.01)
+        t_model = mon.region(
+            "cg", counts, n_shards=n_shards,
+            overlap=(label != "Ginkgo-analog"), repeats=max(iters, 1),
+        )
+        mon.idle(0.01)
+        e = mon.energy()
+        print(
+            f"{label:14s} iters={iters} relres={float(res.rel_residual):.2e} "
+            f"wall={wall:.4f}s modeled={t_model:.4e}s "
+            f"DE={e['de_total']:.4f}J peak={e['gpu_power_peak']:.0f}W "
+            f"DEgpu={e['de_gpu']:.4f}J DEcpu={e['de_cpu']:.4f}J "
+            f"setup={setup_time:.4f}s solve={wall:.4f}s"
+        )
+
+
+if __name__ == "__main__":
+    main()

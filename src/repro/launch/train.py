@@ -1,0 +1,141 @@
+"""End-to-end training driver.
+
+Parses args BEFORE importing jax so ``--devices N`` can force host device
+count (never set globally — see dryrun.py note).
+
+Examples (CPU container):
+
+    # ~100M-class model (xlstm-350m smoke-scaled up) for a few hundred steps
+    python -m repro.launch.train --arch xlstm-350m --smoke --steps 300 \\
+        --batch 8 --seq 256 --devices 4
+
+    # resume after a kill: same command; restores from --ckpt-dir/LATEST
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-350m")
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--devices", type=int, default=0, help="force host devices")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--moment-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--dtype", default="float32")
+    return ap.parse_args(argv)
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}"
+        )
+
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.data.synthetic import TokenStream
+    from repro.dist import checkpoint as ckpt
+    from repro.dist.sharding import batch_specs, param_specs, shardings_of
+    from repro.models import transformer as tfm
+    from repro.train.loop import make_train_step
+    from repro.train.optimizer import OptConfig, init_opt_state
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    cfg = dataclasses.replace(cfg, dtype=args.dtype)
+
+    n_dev = len(jax.devices())
+    mesh = jax.sharding.Mesh(
+        np.asarray(jax.devices()).reshape(n_dev, 1), ("data", "model")
+    )
+    print(f"arch={cfg.name} devices={n_dev} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    opt_cfg = OptConfig(lr=args.lr, moment_dtype=args.moment_dtype, warmup_steps=20)
+    stream = TokenStream(cfg.vocab_size, args.seq, args.batch)
+
+    params = tfm.init_params(cfg, jax.random.key(0))
+    opt_state = init_opt_state(params, opt_cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"params: {n_params/1e6:.2f}M")
+
+    start_step = 0
+    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        sh = (
+            shardings_of(param_specs(params, mesh), mesh),
+            jax.tree.map(
+                lambda x: jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+                opt_state,
+            ),
+        )
+        # opt moments reuse param rules
+        sh = (sh[0], {
+            "mu": shardings_of(param_specs(opt_state["mu"], mesh), mesh),
+            "nu": shardings_of(param_specs(opt_state["nu"], mesh), mesh),
+            "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            "skipped": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        })
+        (params, opt_state), start_step, _ = ckpt.restore(args.ckpt_dir, shardings=sh)
+        print(f"restored step {start_step} from {args.ckpt_dir}")
+
+    step_fn = make_train_step(
+        cfg, opt_cfg, microbatches=args.microbatches, kv_chunk=256
+    )
+    p_sh = shardings_of(param_specs(params, mesh), mesh)
+    o_sh = {
+        "mu": shardings_of(param_specs(opt_state["mu"], mesh), mesh),
+        "nu": shardings_of(param_specs(opt_state["nu"], mesh), mesh),
+        "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        "skipped": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+    }
+    example = stream.batch_at(0)
+    b_sh = shardings_of(batch_specs(example, mesh, args.batch), mesh)
+    jitted = jax.jit(
+        step_fn, in_shardings=(p_sh, o_sh, b_sh), out_shardings=(p_sh, o_sh, None)
+    )
+
+    t_start = time.perf_counter()
+    losses = []
+    for step in range(start_step, args.steps):
+        batch = jax.device_put(stream.batch_at(step), b_sh)
+        params, opt_state, metrics = jitted(params, opt_state, batch)
+        if (step + 1) % args.log_every == 0 or step == start_step:
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            dt = time.perf_counter() - t_start
+            print(
+                f"step {step+1:5d} loss {loss:8.4f} gnorm "
+                f"{float(metrics['grad_norm']):8.3f} skipped "
+                f"{int(metrics['skipped'])} ({dt:.1f}s)",
+                flush=True,
+            )
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, step + 1, (params, opt_state))
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, args.steps, (params, opt_state))
+    print("done.")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,304 @@
+"""Attention: GQA (+ qk-norm, bias, explicit head_dim) and MLA.
+
+Full-sequence paths use **blockwise (flash-style) attention** — an online-
+softmax scan over KV chunks — so 32k-prefill activation memory stays
+O(S * chunk) per head instead of O(S^2); this is what makes the prefill_32k
+dry-run cells fit. Decode paths attend one query position against the whole
+cache.
+
+MLA (MiniCPM3/DeepSeek): queries/keys split into a no-PE part (projected
+from a low-rank latent) and a small RoPE part; the decode cache stores only
+the (kv_lora + rope) latent per position — the architecture's KV-cache
+compression is preserved faithfully.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import flags
+
+from repro.models.layers import (
+    KeyGen,
+    apply_rope,
+    init_linear,
+    init_rmsnorm,
+    linear,
+    normal_init,
+    rmsnorm,
+)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Blockwise softmax attention core
+# ---------------------------------------------------------------------------
+
+
+def blockwise_attention(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, KVH, hd)
+    v: jax.Array,  # (B, Sk, KVH, hd)
+    *,
+    causal: bool,
+    q_offset: int | jax.Array = 0,  # global position of q[0] (decode/prefill)
+    kv_chunk: int = 1024,
+    scale: float | None = None,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks (flash-style, jnp-level).
+
+    v may have a different head dim than q/k (MLA).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KVH, _ = k.shape
+    hdv = v.shape[-1]
+    groups = H // KVH
+    scale = (hd**-0.5) if scale is None else scale
+    # bf16-score mode: operands stay in their native (bf16) dtype — no
+    # upcasts at all — and the MXU accumulates f32. Baseline mode upcasts
+    # q/k/v to f32 first (numerically identical softmax stats either way).
+    if flags.ATTN_SCORE_BF16:
+        op_cast = lambda t: t
+        qf = q * jnp.asarray(scale, q.dtype)
+    else:
+        op_cast = lambda t: t.astype(jnp.float32)
+        qf = q.astype(jnp.float32) * scale
+    # fold q heads into kv-head groups: (B, Sq, KVH, G, hd)
+    qf = qf.reshape(B, Sq, KVH, groups, hd)
+
+    nchunks = -(-Sk // kv_chunk)
+    Sk_pad = nchunks * kv_chunk
+    if Sk_pad != Sk:
+        pad = [(0, 0), (0, Sk_pad - Sk), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    kc = k.reshape(B, nchunks, kv_chunk, KVH, hd)
+    vc = v.reshape(B, nchunks, kv_chunk, KVH, hdv)
+
+    q_pos = jnp.asarray(q_offset) + jnp.arange(Sq)  # (Sq,)
+
+    def step(carry, inp):
+        m, l, acc = carry  # (B,Sq,KVH,G), (B,Sq,KVH,G), (B,Sq,KVH,G,hd)
+        kb, vb, c0 = inp  # (B, kv_chunk, KVH, hd), ..., scalar chunk start
+        s = jnp.einsum(
+            "bqkgd,bckd->bqkgc", qf, op_cast(kb),
+            preferred_element_type=jnp.float32,
+        )  # (B,Sq,KVH,G,C) f32
+        kv_pos = c0 + jnp.arange(kv_chunk)
+        valid = kv_pos < Sk
+        if causal:
+            mask = (kv_pos[None, :] <= q_pos[:, None]) & valid[None, :]
+        else:
+            mask = jnp.broadcast_to(valid[None, :], (Sq, kv_chunk))
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        p_op = p.astype(vb.dtype) if flags.ATTN_SCORE_BF16 else p
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p_op, op_cast(vb),
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KVH, groups), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KVH, groups), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KVH, groups, hdv), jnp.float32)
+    kc_t = jnp.moveaxis(kc, 1, 0)  # (nchunks, B, C, KVH, hd)
+    vc_t = jnp.moveaxis(vc, 1, 0)
+    starts = jnp.arange(nchunks) * kv_chunk
+    (m, l, acc), _ = lax.scan(step, (m0, l0, a0), (kc_t, vc_t, starts), unroll=flags.scan_unroll())
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, hdv).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_cache: jax.Array,  # (B, Smax, KVH, hd)
+    v_cache: jax.Array,
+    pos: jax.Array,  # scalar: index of the new token
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """One-step attention against the cache (positions > pos masked)."""
+    B, _, H, hd = q.shape
+    _, Smax, KVH, _ = k_cache.shape
+    hdv = v_cache.shape[-1]
+    groups = H // KVH
+    scale = (hd**-0.5) if scale is None else scale
+    qf = (q * scale).astype(jnp.float32).reshape(B, KVH, groups, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache.astype(jnp.float32))
+    mask = jnp.arange(Smax)[None, None, None, :] <= pos
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hdv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block-level attention (projections + rope + qk-norm)
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(kg: KeyGen, cfg, dtype) -> dict:
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    p = {
+        "wq": init_linear(kg, d, h * hd, dtype, bias=cfg.qkv_bias),
+        "wk": init_linear(kg, d, kvh * hd, dtype, bias=cfg.qkv_bias),
+        "wv": init_linear(kg, d, kvh * hd, dtype, bias=cfg.qkv_bias),
+        "wo": init_linear(kg, h * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = init_rmsnorm(kg, hd, dtype)
+        p["knorm"] = init_rmsnorm(kg, hd, dtype)
+    return p
+
+
+def _gqa_qkv(x, p, cfg, pos):
+    B = x.shape[0]
+    S = x.shape[1]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = linear(x, p["wq"]).reshape(B, S, h, hd)
+    k = linear(x, p["wk"]).reshape(B, S, kvh, hd)
+    v = linear(x, p["wv"]).reshape(B, S, kvh, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["qnorm"]["scale"], cfg.rmsnorm_eps)
+        k = rmsnorm(k, p["knorm"]["scale"], cfg.rmsnorm_eps)
+    if cfg.causal:  # encoders (hubert) use learned/no positions; RoPE for LMs
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_full(x: jax.Array, p: dict, cfg, *, q_offset=0, kv_chunk=1024):
+    """Full-sequence GQA (train / prefill). Returns (out, (k, v))."""
+    B, S, _ = x.shape
+    pos = jnp.asarray(q_offset) + jnp.arange(S)[None, :]
+    q, k, v = _gqa_qkv(x, p, cfg, pos)
+    o = blockwise_attention(
+        q, k, v, causal=cfg.causal, q_offset=q_offset, kv_chunk=kv_chunk
+    )
+    out = linear(o.reshape(B, S, -1), p["wo"])
+    return out, (k, v)
+
+
+def gqa_decode(x: jax.Array, p: dict, cfg, cache: dict, pos):
+    """One-token GQA against the cache. cache = {k: (B,Smax,KVH,hd), v: ...}."""
+    B = x.shape[0]
+    posv = jnp.full((B, 1), pos)
+    q, k, v = _gqa_qkv(x, p, cfg, posv)
+    kc = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+    vc = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+    o = decode_attention(q, kc, vc, pos)
+    out = linear(o.reshape(B, 1, -1), p["wo"])
+    return out, {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# MLA (MiniCPM3)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(kg: KeyGen, cfg, dtype) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": init_linear(kg, d, m.q_lora_rank, dtype),
+        "q_a_norm": init_rmsnorm(kg, m.q_lora_rank, dtype),
+        "wq_b": init_linear(kg, m.q_lora_rank, h * qk_dim, dtype),
+        "wkv_a": init_linear(kg, d, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_a_norm": init_rmsnorm(kg, m.kv_lora_rank, dtype),
+        "wkv_b": init_linear(
+            kg, m.kv_lora_rank, h * (m.qk_nope_head_dim + m.v_head_dim), dtype
+        ),
+        "wo": init_linear(kg, h * m.v_head_dim, d, dtype),
+    }
+
+
+def _mla_q(x, p, cfg, pos):
+    m = cfg.mla
+    B, S = x.shape[0], x.shape[1]
+    h = cfg.n_heads
+    qa = rmsnorm(linear(x, p["wq_a"]), p["q_a_norm"]["scale"], cfg.rmsnorm_eps)
+    q = linear(qa, p["wq_b"]).reshape(B, S, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv_latent(x, p, cfg, pos):
+    m = cfg.mla
+    kv_a = linear(x, p["wkv_a"])  # (B,S, kv_lora + rope)
+    c_kv, k_rope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(c_kv, p["kv_a_norm"]["scale"], cfg.rmsnorm_eps)
+    k_rope = apply_rope(k_rope[..., None, :], pos, cfg.rope_theta)  # 1 shared head
+    return c_kv, k_rope[..., 0, :]
+
+
+def _mla_expand(c_kv, p, cfg):
+    m = cfg.mla
+    B, S = c_kv.shape[0], c_kv.shape[1]
+    h = cfg.n_heads
+    kv = linear(c_kv, p["wkv_b"]).reshape(
+        B, S, h, m.qk_nope_head_dim + m.v_head_dim
+    )
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    return k_nope, v
+
+
+def mla_full(x: jax.Array, p: dict, cfg, *, q_offset=0, kv_chunk=1024):
+    """Full-sequence MLA. Returns (out, (c_kv, k_rope)) for cache seeding."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    pos = jnp.asarray(q_offset) + jnp.arange(S)[None, :]
+    q_nope, q_rope = _mla_q(x, p, cfg, pos)
+    c_kv, k_rope = _mla_kv_latent(x, p, cfg, pos)
+    k_nope, v = _mla_expand(c_kv, p, cfg)
+    # assemble full q/k with rope part appended; k_rope shared across heads
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, h, m.qk_rope_head_dim))],
+        axis=-1,
+    )
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    o = blockwise_attention(
+        q, k, v, causal=True, q_offset=q_offset, kv_chunk=kv_chunk, scale=scale
+    )
+    out = linear(o.reshape(B, S, -1), p["wo"])
+    return out, (c_kv, k_rope)
+
+
+def mla_decode(x: jax.Array, p: dict, cfg, cache: dict, pos):
+    """One-token MLA against the latent cache {c_kv: (B,Smax,r), k_rope}."""
+    m = cfg.mla
+    B = x.shape[0]
+    h = cfg.n_heads
+    posv = jnp.full((B, 1), pos)
+    q_nope, q_rope = _mla_q(x, p, cfg, posv)  # (B,1,h,*)
+    c_new, kr_new = _mla_kv_latent(x, p, cfg, posv)
+    ckv = lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0)
+    )
+    krc = lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0)
+    )
+    k_nope, v = _mla_expand(ckv, p, cfg)  # (B,Smax,h,*) expanded on the fly
+    Smax = ckv.shape[1]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [
+            k_nope,
+            jnp.broadcast_to(krc[:, :, None, :], (B, Smax, h, m.qk_rope_head_dim)),
+        ],
+        axis=-1,
+    )
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    o = decode_attention(q, k, v, pos, scale=scale)
+    out = linear(o.reshape(B, 1, -1), p["wo"])
+    return out, {"c_kv": ckv, "k_rope": krc}

@@ -1,0 +1,28 @@
+"""Global lowering flags.
+
+``UNROLL_SCANS`` — when True, every static-trip-count ``lax.scan`` in the
+model stack lowers fully unrolled. Used ONLY by the dry-run cost probe:
+XLA's HLO cost analysis counts a while-loop body once regardless of trip
+count, so the rolled (deployable) module under-reports FLOPs/bytes by ~L x.
+Unrolling yields the exact per-step HLO cost; the rolled module still
+provides memory_analysis + the collective schedule. The sLSTM time scan is
+exempt (unrolling 32k time steps is infeasible; its body is <1% of xlstm
+cell cost — see DESIGN.md).
+"""
+
+UNROLL_SCANS = False
+
+# §Perf hillclimb lever: compute attention score/PV matmuls from bf16
+# operands with f32 accumulation (MXU-native) instead of casting inputs to
+# f32 first. Halves the dominant score-tensor HBM traffic; softmax
+# statistics stay f32.
+ATTN_SCORE_BF16 = False
+
+# Same lever for the Mamba2/SSD intra-chunk einsums: bf16 operands, f32
+# accumulation (decay logits/stabilizers stay f32).
+SSD_BF16 = False
+
+
+def scan_unroll():
+    """Value for lax.scan(..., unroll=...)."""
+    return True if UNROLL_SCANS else 1

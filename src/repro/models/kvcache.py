@@ -1,0 +1,75 @@
+"""Cache construction for every architecture family.
+
+``init_cache(cfg, batch, max_len)`` returns the pytree expected by
+``transformer.forward_decode`` (stacking matches the scan structure), filled
+with zeros; ``cache_shapes`` returns the matching ShapeDtypeStruct tree for
+the dry-run (no allocation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import dtype_of
+
+
+def _kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+
+
+def _stack(tree, n: int):
+    return jax.tree.map(lambda a: jnp.zeros((n,) + a.shape, a.dtype), tree)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    dtype = dtype_of(cfg.dtype)
+    if cfg.xlstm is not None:
+        k = cfg.xlstm.slstm_every
+        G = cfg.n_layers // k
+        m_state = xlstm_mod.init_mlstm_state(cfg, batch, dtype)
+        s_state = xlstm_mod.init_slstm_state(cfg, batch)
+        return (_stack(_stack(m_state, k - 1), G), _stack(s_state, G))
+    if cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        G = cfg.n_layers // k
+        T = cfg.n_layers - G * k
+        m_state = ssm_mod.init_mamba2_state(cfg, batch, dtype)
+        kv = _kv_cache(cfg, batch, max_len, dtype)
+        g = (_stack(_stack(m_state, k), G), _stack(kv, G))
+        t = _stack(m_state, T) if T else None
+        return (g, t)
+    if cfg.ssm is not None:
+        return _stack(ssm_mod.init_mamba2_state(cfg, batch, dtype), cfg.n_layers)
+    return _stack(_kv_cache(cfg, batch, max_len, dtype), cfg.n_layers)
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct tree (dry-run: no allocation)."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def cache_bytes(cfg: ArchConfig, batch: int, max_len: int) -> int:
+    tree = cache_shapes(cfg, batch, max_len)
+    return sum(
+        int(np_prod(l.shape)) * l.dtype.itemsize for l in jax.tree.leaves(tree)
+    )
+
+
+def np_prod(shape):
+    out = 1
+    for s in shape:
+        out *= s
+    return out

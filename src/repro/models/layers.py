@@ -1,0 +1,162 @@
+"""Model primitives: norms, projections, RoPE, activations, embeddings.
+
+Pure functions over dict-shaped parameter trees (no framework dependency);
+every ``init_*`` works under ``jax.eval_shape`` so the dry-run can build
+parameter ShapeDtypeStructs without allocating.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[
+        name
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Initializers (keyed, eval_shape-safe)
+# ---------------------------------------------------------------------------
+
+
+def normal_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[-1], 1)
+    scale = (1.0 / np.sqrt(fan_in)) if scale is None else scale
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def zeros_init(key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+class KeyGen:
+    """Deterministic key splitter for init functions."""
+
+    def __init__(self, key):
+        self.key = key
+
+    def __call__(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_rmsnorm(kg, d, dtype):
+    return {"scale": jnp.zeros((d,), dtype)}  # stored as (scale - 1)
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+
+def linear(x: jax.Array, p: dict) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_linear(kg, d_in, d_out, dtype, bias=False):
+    p = {"w": normal_init(kg(), (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Activations / gated MLPs
+# ---------------------------------------------------------------------------
+
+
+def act_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "gelu_plain": lambda x: jax.nn.gelu(x, approximate=True),
+    }[name]
+
+
+def mlp(x: jax.Array, p: dict, act: str) -> jax.Array:
+    """SwiGLU/GeGLU (3 mats) or plain 2-mat MLP (act == *_plain)."""
+    if "wg" in p:
+        g = act_fn(act)(jnp.einsum("...d,df->...f", x, p["wg"]))
+        u = jnp.einsum("...d,df->...f", x, p["wu"])
+        return jnp.einsum("...f,fd->...d", g * u, p["wd"])
+    h = act_fn(act)(jnp.einsum("...d,df->...f", x, p["wu"]))
+    return jnp.einsum("...f,fd->...d", h, p["wd"])
+
+
+def init_mlp(kg, d, d_ff, dtype, act: str):
+    if act.endswith("_plain"):
+        return {
+            "wu": normal_init(kg(), (d, d_ff), dtype),
+            "wd": normal_init(kg(), (d_ff, d), dtype),
+        }
+    return {
+        "wg": normal_init(kg(), (d, d_ff), dtype),
+        "wu": normal_init(kg(), (d, d_ff), dtype),
+        "wd": normal_init(kg(), (d_ff, d), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd) or (..., H, hd) with pos broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return table[tokens]
+
+
+def unembed(x: jax.Array, table_or_head: jax.Array) -> jax.Array:
+    """Logits in f32 (numerics) regardless of param dtype."""
+    return jnp.einsum(
+        "...d,vd->...v", x.astype(jnp.float32), table_or_head.astype(jnp.float32)
+    )
+
+
+def init_embed(kg, vocab_padded, d, dtype):
+    return normal_init(kg(), (vocab_padded, d), dtype, scale=0.02)

@@ -1,0 +1,151 @@
+"""LM-level API: loss, prefill/decode steps, and ``input_specs``.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of an (arch x shape) cell — weak-type-correct, shardable, no
+device allocation — the dry-run contract. Modality frontends are stubs per
+the assignment: audio provides frame embeddings, vlm provides patch
+embeddings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import flags
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer as tfm
+from repro.models.kvcache import cache_shapes, init_cache
+from repro.models.layers import dtype_of, unembed
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy (never materializes (B, S, V) logits)
+# ---------------------------------------------------------------------------
+
+
+def chunked_ce_loss(
+    hidden: jax.Array,  # (B, S, d)
+    head: jax.Array,  # (Vp, d)
+    labels: jax.Array,  # (B, S) int32 in [0, vocab)
+    *,
+    chunk: int = 512,
+) -> jax.Array:
+    B, S, d = hidden.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nch = S // chunk
+    xc = hidden.reshape(B, nch, chunk, d).swapaxes(0, 1)  # (nch, B, chunk, d)
+    lc = labels.reshape(B, nch, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def step(acc, inp):
+        x, lbl = inp
+        logits = unembed(x, head)  # f32 (B, chunk, Vp)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lbl[..., None], axis=-1)[..., 0]
+        return acc + (lse - gold).sum(), None
+
+    total, _ = lax.scan(step, jnp.zeros((), jnp.float32), (xc, lc), unroll=flags.scan_unroll())
+    return total / (B * S)
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict, *, kv_chunk=1024, remat=True):
+    hidden, _, aux = tfm.forward_full(
+        params, cfg, batch, kv_chunk=kv_chunk, remat=remat
+    )
+    ce = chunked_ce_loss(hidden, tfm.head_table(params, cfg), batch["labels"])
+    return ce + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ArchConfig, batch: dict, *, kv_chunk=1024):
+    """Full-prompt forward. Returns (last-position logits, cache-seed)."""
+    hidden, cache, _ = tfm.forward_full(
+        params, cfg, batch, kv_chunk=kv_chunk, remat=False, want_cache=True
+    )
+    logits = unembed(hidden[:, -1:], tfm.head_table(params, cfg))[:, 0]
+    return logits, cache
+
+
+def serve_step(params, cfg: ArchConfig, token: jax.Array, cache, pos):
+    """One decode step: (B,) token ids + cache -> (B, Vp) logits + cache'."""
+    hidden, new_cache = tfm.forward_decode(params, cfg, token, cache, pos)
+    logits = unembed(hidden, tfm.head_table(params, cfg))[:, 0]
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# input_specs — ShapeDtypeStruct stand-ins per (arch x shape)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Model inputs for one cell. Keys depend on kind:
+
+    train:   {batch: {tokens/frames, labels, [patch_embeds]}}
+    prefill: {batch: {tokens/frames, [patch_embeds]}}
+    decode:  {token, cache, pos}
+    """
+    B, S = shape.global_batch, shape.seq_len
+    act = dtype_of(cfg.dtype)
+    if shape.kind in ("train", "prefill"):
+        batch: dict = {}
+        if cfg.family == "audio":
+            batch["frames"] = _sds((B, S, cfg.d_model), act)
+        else:
+            batch["tokens"] = _sds((B, S), jnp.int32)
+        if cfg.n_patches:
+            batch["patch_embeds"] = _sds((B, cfg.n_patches, cfg.d_model), act)
+        if shape.kind == "train":
+            batch["labels"] = _sds((B, S), jnp.int32)
+        return {"batch": batch}
+    # decode: one new token against a cache of length seq_len
+    return {
+        "token": _sds((B,), jnp.int32),
+        "cache": cache_shapes(cfg, B, S),
+        "pos": _sds((), jnp.int32),
+    }
+
+
+def make_inputs(cfg: ArchConfig, shape: ShapeConfig, key=None):
+    """Concrete (small-value) inputs matching input_specs — smoke tests."""
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    B, S = shape.global_batch, shape.seq_len
+    act = dtype_of(cfg.dtype)
+    if shape.kind in ("train", "prefill"):
+        batch: dict = {}
+        if cfg.family == "audio":
+            batch["frames"] = jnp.asarray(
+                rng.standard_normal((B, S, cfg.d_model)), act
+            )
+        else:
+            batch["tokens"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32
+            )
+        if cfg.n_patches:
+            batch["patch_embeds"] = jnp.asarray(
+                rng.standard_normal((B, cfg.n_patches, cfg.d_model)), act
+            )
+        if shape.kind == "train":
+            batch["labels"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32
+            )
+        return {"batch": batch}
+    return {
+        "token": jnp.asarray(rng.integers(0, cfg.vocab_size, (B,)), jnp.int32),
+        "cache": init_cache(cfg, B, S),
+        "pos": jnp.asarray(S - 1, jnp.int32),
+    }

@@ -1,0 +1,92 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity + sort-based dispatch.
+
+Expert-parallel friendly: expert tensors carry a leading E axis (sharded over
+the ``model``/EP mesh axis); tokens are dispatched by a scatter into the
+(E*C, d) buffer and combined by a gather — both well-handled by GSPMD as
+all-to-all-class collectives.
+
+Arctic-style ``dense_residual`` runs a small dense MLP in parallel with the
+routed experts and sums the outputs.
+
+Capacity: C = ceil(T * top_k * capacity_factor / E); overflow tokens are
+dropped (their combine weight contribution is zero) — standard GShard
+semantics, load-balance loss included.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import KeyGen, init_mlp, mlp, normal_init
+
+
+def init_moe(kg: KeyGen, cfg, dtype) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    e, f = m.n_experts, m.d_ff_expert
+    p = {
+        "router": normal_init(kg(), (d, e), jnp.float32, scale=0.02),
+        "wg": normal_init(kg(), (e, d, f), dtype),
+        "wu": normal_init(kg(), (e, d, f), dtype),
+        "wd": normal_init(kg(), (e, f, d), dtype),
+    }
+    if m.dense_residual:
+        p["dense"] = init_mlp(kg, d, m.d_ff_dense, dtype, cfg.mlp_act)
+    return p
+
+
+def moe_ffn(x: jax.Array, p: dict, cfg) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, K = m.n_experts, m.top_k
+    C = max(int(-(-T * K * m.capacity_factor // E)), 1)
+
+    xt = x.reshape(T, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)  # (T, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    # --- capacity assignment: rank of each (token, k) within its expert ----
+    flat_e = top_e.reshape(-1)  # (T*K,) arrival order = token order
+    order = jnp.argsort(flat_e, stable=True)  # group by expert
+    # rank within expert for the sorted sequence
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))  # (E,)
+    rank_sorted = jnp.arange(T * K) - seg_start[sorted_e]
+    rank = jnp.zeros((T * K,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    keep = rank < C
+    slot = jnp.where(keep, flat_e * C + rank, E * C)  # drop slot at the end
+
+    # --- dispatch: scatter tokens into (E*C+1, d) ---------------------------
+    buf = jnp.zeros((E * C + 1, d), x.dtype)
+    tok_idx = jnp.repeat(jnp.arange(T), K)
+    buf = buf.at[slot].set(xt[tok_idx])  # later duplicates overwrite; same token
+    eb = buf[: E * C].reshape(E, C, d)
+
+    # --- expert FFN (E-parallel) --------------------------------------------
+    from repro.models.layers import act_fn
+
+    g = act_fn(cfg.mlp_act)(jnp.einsum("ecd,edf->ecf", eb, p["wg"]))
+    u = jnp.einsum("ecd,edf->ecf", eb, p["wu"])
+    out_e = jnp.einsum("ecf,efd->ecd", g * u, p["wd"])  # (E, C, d)
+
+    # --- combine: gather back and weight ------------------------------------
+    flat_out = jnp.concatenate(
+        [out_e.reshape(E * C, d), jnp.zeros((1, d), out_e.dtype)], axis=0
+    )
+    y = flat_out[slot].reshape(T, K, d)
+    w = (top_p * keep.reshape(T, K)).astype(y.dtype)
+    yt = jnp.einsum("tkd,tk->td", y, w)
+
+    if m.dense_residual:
+        yt = yt + mlp(xt, p["dense"], cfg.mlp_act)
+    return yt.reshape(B, S, d), aux

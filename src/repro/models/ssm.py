@@ -1,0 +1,209 @@
+"""Mamba2 (SSD) block: chunked-parallel training scan + O(1) decode step.
+
+Implements the state-space duality algorithm from the Mamba2 paper: the
+sequence is split into chunks of length Q; within a chunk the output is the
+masked-decay quadratic form, across chunks a (head, P, N) state is carried
+by a linear recurrence — total work O(S * Q) instead of O(S^2), and decode
+is a single state update (this is what makes ``long_500k`` runnable for the
+ssm/hybrid architectures).
+
+Layout: d_inner = expand * d_model, heads H = d_inner / head_dim P,
+state size N = d_state, ngroups = 1 (B/C shared across heads).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import flags
+
+from repro.models.layers import KeyGen, init_rmsnorm, normal_init, rmsnorm
+
+
+def init_mamba2(kg: KeyGen, cfg, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    H = s.n_heads(d)
+    N = s.d_state
+    conv_dim = di + 2 * N  # conv over [x, B, C]
+    return {
+        "in_proj": normal_init(kg(), (d, 2 * di + 2 * N + H), dtype),
+        "conv_w": normal_init(kg(), (s.d_conv, conv_dim), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "a_log": jnp.zeros((H,), jnp.float32),  # A = -exp(a_log)
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "norm": init_rmsnorm(kg, di, dtype),
+        "out_proj": normal_init(kg(), (di, d), dtype),
+    }
+
+
+def _split_proj(xz, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    H = s.n_heads(d)
+    N = s.d_state
+    z, xBC, dt = jnp.split(xz, [di, 2 * di + 2 * N], axis=-1)
+    return z, xBC, dt, di, H, N
+
+
+def _causal_conv(xBC, w, b, state=None):
+    """Depthwise causal conv, width K. state: (B, K-1, C) trailing context."""
+    K = w.shape[0]
+    B, S, C = xBC.shape
+    if state is None:
+        pad = jnp.zeros((B, K - 1, C), xBC.dtype)
+    else:
+        pad = state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)  # (B, S+K-1, C)
+    out = sum(xp[:, k : k + S, :] * w[k][None, None, :] for k in range(K))
+    new_state = xp[:, S:, :]  # last K-1 inputs
+    return jax.nn.silu(out + b), new_state
+
+
+def pick_chunk(S: int, max_q: int) -> int:
+    """Largest divisor of S that is <= max_q (chunked scans need S % Q == 0)."""
+    q = min(S, max_q)
+    while S % q:
+        q -= 1
+    return max(q, 1)
+
+
+def _segsum(a):
+    """a: (..., Q) log-decays -> (..., Q, Q) lower-tri cumulative sums:
+    out[i, j] = sum_{j < t <= i} a[t] for i >= j, -inf otherwise."""
+    Q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]  # (..., i, j)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba2_forward(x: jax.Array, p: dict, cfg, state=None):
+    """Chunked SSD forward. x: (B, S, d). Returns (y, new_state).
+
+    state = {"conv": (B, K-1, conv_dim), "ssm": (B, H, P, N)} or None.
+    S must be a multiple of cfg.ssm.chunk (pad upstream) unless S == 1.
+    """
+    s = cfg.ssm
+    B, S, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xBC, dt, di, H, N = _split_proj(xz, cfg)
+    P = s.head_dim
+
+    conv_state = None if state is None else state["conv"]
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+    xs = xs.reshape(B, S, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["a_log"])  # (H,)
+    da = dt * A  # (B,S,H) log decay per step
+    xdt = xs.astype(jnp.float32) * dt[..., None]  # dt-scaled input
+
+    h0 = (
+        jnp.zeros((B, H, P, N), jnp.float32)
+        if state is None
+        else state["ssm"].astype(jnp.float32)
+    )
+
+    Q = pick_chunk(S, s.chunk)
+    nc = S // Q
+    dac = da.reshape(B, nc, Q, H)
+    xc = xdt.reshape(B, nc, Q, H, P)
+    Bc = Bm.reshape(B, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, Q, N).astype(jnp.float32)
+
+    # intra-chunk (diagonal blocks): decay matrix L (B,nc,H,Q,Q)
+    op_dt = jnp.bfloat16 if flags.SSD_BF16 else jnp.float32
+    L = jnp.exp(_segsum(jnp.moveaxis(dac, -1, 2)))  # (B,nc,H,Q,Q)
+    G = jnp.einsum(
+        "bcqn,bckn->bcqk", Cc.astype(op_dt), Bc.astype(op_dt),
+        preferred_element_type=jnp.float32,
+    )  # (B,nc,Q,Q)
+    y_diag = jnp.einsum(
+        "bcqk,bchqk,bckhp->bcqhp",
+        G.astype(op_dt), L.astype(op_dt), xc.astype(op_dt),
+        preferred_element_type=jnp.float32,
+    )
+
+    # chunk-end states: S_c = sum_j exp(cum_end - cum_j) B_j (x_j dt_j)
+    cum = jnp.cumsum(dac, axis=2)  # (B,nc,Q,H)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,Q,H)
+    S_c = jnp.einsum(
+        "bcqh,bcqn,bcqhp->bchpn",
+        decay_to_end.astype(op_dt), Bc.astype(op_dt), xc.astype(op_dt),
+        preferred_element_type=jnp.float32,
+    )
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H)
+
+    def step(h, inp):
+        dchunk, s_c = inp  # (B,H), (B,H,P,N)
+        h_new = h * dchunk[..., None, None] + s_c
+        return h_new, h  # emit state BEFORE this chunk
+
+    (h_final, h_prevs) = lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S_c, 1, 0)),
+        unroll=flags.scan_unroll(),
+    )
+    h_prev = jnp.moveaxis(h_prevs, 0, 1)  # (B,nc,H,P,N) state entering chunk
+
+    # inter-chunk contribution: y_t += exp(cum_t) C_t . h_prev
+    decay_in = jnp.exp(cum)  # (B,nc,Q,H)
+    y_inter = jnp.einsum(
+        "bcqh,bcqn,bchpn->bcqhp", decay_in, Cc, h_prev
+    )
+
+    y = (y_diag + y_inter).reshape(B, S, H, P)
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"]["scale"], cfg.rmsnorm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    new_state = {"conv": new_conv.astype(x.dtype), "ssm": h_final.astype(jnp.float32)}
+    return out, new_state
+
+
+def mamba2_decode(x: jax.Array, p: dict, cfg, state: dict):
+    """One-token step. x: (B, 1, d)."""
+    s = cfg.ssm
+    B = x.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xBC, dt, di, H, N = _split_proj(xz, cfg)
+    P = s.head_dim
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], state["conv"])
+    xs, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+    xs = xs.reshape(B, 1, H, P).astype(jnp.float32)[:, 0]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    A = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * A)  # (B,H)
+    h = state["ssm"].astype(jnp.float32)
+    Bv = Bm[:, 0].astype(jnp.float32)  # (B,N)
+    Cv = Cm[:, 0].astype(jnp.float32)
+    h = h * decay[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xs, Bv
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cv, h) + xs * p["d_skip"][None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"]["scale"], cfg.rmsnorm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"conv": new_conv.astype(x.dtype), "ssm": h}
+
+
+def init_mamba2_state(cfg, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    H = s.n_heads(d)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, di + 2 * s.d_state), dtype),
+        "ssm": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+    }

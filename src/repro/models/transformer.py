@@ -1,0 +1,345 @@
+"""Model assembly: blocks, scan-over-layers stacks, init, forward paths.
+
+All ten assigned architectures are built from four stack patterns:
+
+* ``uniform``  — dense / moe / audio / vlm: one homogeneous block scanned
+  over L layers (params stacked on a leading L axis — keeps HLO size and
+  compile time O(1) in depth, the production-framework discipline);
+* ``xlstm``    — groups of (slstm_every-1) mLSTM blocks + 1 sLSTM block,
+  scanned over groups with a nested scan inside;
+* ``hybrid``   — zamba2: groups of k Mamba2 blocks followed by ONE shared
+  (weight-tied) attention+MLP block, plus trailing Mamba2 blocks;
+* encoder-only is ``uniform`` with bidirectional attention and no decode.
+
+Every forward path exists in two flavors: full-sequence (train / prefill,
+returning per-layer cache/state) and single-token decode (cache in/out).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import flags
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (
+    KeyGen,
+    dtype_of,
+    embed,
+    init_embed,
+    init_mlp,
+    init_rmsnorm,
+    mlp,
+    rmsnorm,
+    unembed,
+)
+
+
+# ---------------------------------------------------------------------------
+# Standard transformer block (attention + FFN)
+# ---------------------------------------------------------------------------
+
+
+def init_block(kg: KeyGen, cfg: ArchConfig, dtype) -> dict:
+    p = {"ln1": init_rmsnorm(kg, cfg.d_model, dtype)}
+    if cfg.mla is not None:
+        p["attn"] = attn.init_mla(kg, cfg, dtype)
+    else:
+        p["attn"] = attn.init_gqa(kg, cfg, dtype)
+    p["ln2"] = init_rmsnorm(kg, cfg.d_model, dtype)
+    if cfg.moe is not None:
+        p["ffn"] = moe_mod.init_moe(kg, cfg, dtype)
+    else:
+        p["ffn"] = init_mlp(kg, cfg.d_model, cfg.d_ff, dtype, cfg.mlp_act)
+    return p
+
+
+def block_full(x, p, cfg: ArchConfig, *, q_offset=0, kv_chunk=1024):
+    """Full-seq block. Returns (x, cache_seed, aux_loss)."""
+    h = rmsnorm(x, p["ln1"]["scale"], cfg.rmsnorm_eps)
+    if cfg.mla is not None:
+        a, kv = attn.mla_full(h, p["attn"], cfg, q_offset=q_offset, kv_chunk=kv_chunk)
+        cache = {"c_kv": kv[0], "k_rope": kv[1]}
+    else:
+        a, kv = attn.gqa_full(h, p["attn"], cfg, q_offset=q_offset, kv_chunk=kv_chunk)
+        cache = {"k": kv[0], "v": kv[1]}
+    x = x + a
+    h = rmsnorm(x, p["ln2"]["scale"], cfg.rmsnorm_eps)
+    if cfg.moe is not None:
+        f, aux = moe_mod.moe_ffn(h, p["ffn"], cfg)
+    else:
+        f, aux = mlp(h, p["ffn"], cfg.mlp_act), jnp.zeros((), jnp.float32)
+    return x + f, cache, aux
+
+
+def block_decode(x, p, cfg: ArchConfig, cache, pos):
+    h = rmsnorm(x, p["ln1"]["scale"], cfg.rmsnorm_eps)
+    if cfg.mla is not None:
+        a, cache = attn.mla_decode(h, p["attn"], cfg, cache, pos)
+    else:
+        a, cache = attn.gqa_decode(h, p["attn"], cfg, cache, pos)
+    x = x + a
+    h = rmsnorm(x, p["ln2"]["scale"], cfg.rmsnorm_eps)
+    if cfg.moe is not None:
+        f, _ = moe_mod.moe_ffn(h, p["ffn"], cfg)
+    else:
+        f = mlp(h, p["ffn"], cfg.mlp_act)
+    return x + f, cache
+
+
+# ---------------------------------------------------------------------------
+# Parameter init (eval_shape-safe)
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dtype = dtype_of(cfg.dtype)
+    kg = KeyGen(key)
+    params: dict = {"embed": init_embed(kg, cfg.vocab_padded, cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_embed(kg, cfg.vocab_padded, cfg.d_model, dtype)
+    params["final_norm"] = init_rmsnorm(kg, cfg.d_model, dtype)
+
+    def stack(init_fn, n):
+        """Stack n inits on a leading axis (vmapped keys, identical shapes)."""
+        keys = jax.random.split(kg(), n)
+        return jax.vmap(lambda k: init_fn(KeyGen(k)))(keys)
+
+    if cfg.xlstm is not None:
+        k = cfg.xlstm.slstm_every
+        if k <= 0:
+            params["blocks"] = stack(
+                lambda g: xlstm_mod.init_mlstm(g, cfg, dtype), cfg.n_layers
+            )
+        else:
+            G = cfg.n_layers // k
+            assert G * k == cfg.n_layers, "n_layers must divide into slstm groups"
+            params["mlstm"] = stack(
+                lambda g: jax.tree.map(
+                    lambda *xs: jnp.stack(xs),
+                    *[xlstm_mod.init_mlstm(g, cfg, dtype) for _ in range(k - 1)],
+                ),
+                G,
+            )
+            params["slstm"] = stack(
+                lambda g: xlstm_mod.init_slstm(g, cfg, dtype), G
+            )
+    elif cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        G = cfg.n_layers // k
+        T = cfg.n_layers - G * k
+        params["mamba_g"] = stack(
+            lambda g: jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[ssm_mod.init_mamba2(g, cfg, dtype) for _ in range(k)],
+            ),
+            G,
+        )
+        if T:
+            params["mamba_t"] = stack(
+                lambda g: ssm_mod.init_mamba2(g, cfg, dtype), T
+            )
+        params["shared"] = init_block(
+            KeyGen(kg()), dataclasses.replace(cfg, moe=None), dtype
+        )
+    elif cfg.ssm is not None:
+        params["blocks"] = stack(
+            lambda g: ssm_mod.init_mamba2(g, cfg, dtype), cfg.n_layers
+        )
+    else:
+        params["blocks"] = stack(lambda g: init_block(g, cfg, dtype), cfg.n_layers)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head helpers
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params, cfg: ArchConfig, batch: dict) -> jax.Array:
+    if cfg.family == "audio":
+        return batch["frames"].astype(dtype_of(cfg.dtype))
+    x = embed(batch["tokens"], params["embed"])
+    if cfg.n_patches and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype)
+        x = lax.dynamic_update_slice(x, pe, (0, 0, 0))
+    return x
+
+
+def head_table(params, cfg: ArchConfig):
+    return params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward_full(
+    params, cfg: ArchConfig, batch: dict, *, kv_chunk=1024, remat=True,
+    want_cache=False,
+):
+    """Returns (hidden (B,S,d), cache_tree_or_None, aux_loss)."""
+    x = embed_inputs(params, cfg, batch)
+    B, S, _ = x.shape
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.xlstm is not None and "mlstm" in params:
+        def group(x, gp):
+            mp, sp = gp
+
+            def inner(x, lp):
+                y, st = xlstm_mod.mlstm_forward(x, lp, cfg)
+                return y, st
+
+            inner_fn = jax.checkpoint(inner) if remat else inner
+            x, m_states = lax.scan(inner_fn, x, mp, unroll=flags.scan_unroll())
+            x, s_state = xlstm_mod.slstm_forward(x, sp, cfg)
+            return x, (m_states, s_state)
+
+        group_fn = jax.checkpoint(group) if remat else group
+        x, states = lax.scan(group_fn, x, (params["mlstm"], params["slstm"]), unroll=flags.scan_unroll())
+        cache = states if want_cache else None
+        return _finish(x, params, cfg), cache, aux_total
+
+    if cfg.family == "hybrid":
+        def group(x, gp):
+            mp, shared_dummy = gp
+
+            def inner(x, lp):
+                y, st = ssm_mod.mamba2_forward(x, lp, cfg)
+                return y, st
+
+            inner_fn = jax.checkpoint(inner) if remat else inner
+            x, m_states = lax.scan(inner_fn, x, mp, unroll=flags.scan_unroll())
+            x, kv, _ = block_full(x, params["shared"], cfg, kv_chunk=kv_chunk)
+            return x, (m_states, kv)
+
+        G = jax.tree.leaves(params["mamba_g"])[0].shape[0]
+        group_fn = jax.checkpoint(group) if remat else group
+        x, states = lax.scan(
+            group_fn, x, (params["mamba_g"], jnp.zeros((G,), jnp.int32)),
+            unroll=flags.scan_unroll(),
+        )
+        t_states = None
+        if "mamba_t" in params:
+            def trail(x, lp):
+                y, st = ssm_mod.mamba2_forward(x, lp, cfg)
+                return y, st
+
+            trail_fn = jax.checkpoint(trail) if remat else trail
+            x, t_states = lax.scan(trail_fn, x, params["mamba_t"], unroll=flags.scan_unroll())
+        cache = (states, t_states) if want_cache else None
+        return _finish(x, params, cfg), cache, aux_total
+
+    if cfg.ssm is not None:  # pure mamba stack (not among assigned, but supported)
+        def body(x, lp):
+            y, st = ssm_mod.mamba2_forward(x, lp, cfg)
+            return y, st
+
+        body_fn = jax.checkpoint(body) if remat else body
+        x, states = lax.scan(body_fn, x, params["blocks"], unroll=flags.scan_unroll())
+        return _finish(x, params, cfg), (states if want_cache else None), aux_total
+
+    # uniform attention stack
+    def body(carry, lp):
+        x, aux = carry
+        y, kv, a = block_full(x, lp, cfg, kv_chunk=kv_chunk)
+        return (y, aux + a), kv
+
+    body_fn = jax.checkpoint(body) if remat else body
+    (x, aux_total), kvs = lax.scan(body_fn, (x, aux_total), params["blocks"], unroll=flags.scan_unroll())
+    cache = kvs if want_cache else None
+    return _finish(x, params, cfg), cache, aux_total / max(cfg.n_layers, 1)
+
+
+def _finish(x, params, cfg):
+    return rmsnorm(x, params["final_norm"]["scale"], cfg.rmsnorm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode
+# ---------------------------------------------------------------------------
+
+
+def forward_decode(params, cfg: ArchConfig, token: jax.Array, cache, pos):
+    """token: (B,) int32; cache from kvcache.init_cache; pos: scalar int32.
+
+    Returns (hidden (B,1,d), new_cache).
+    """
+    x = embed(token[:, None], params["embed"])
+
+    if cfg.xlstm is not None and "mlstm" in params:
+        m_c, s_c = cache
+
+        def group(x, gp):
+            mp, sp, mc, sc = gp
+
+            def inner(x, lp_c):
+                lp, c = lp_c
+                y, st = xlstm_mod.mlstm_decode(x, lp, cfg, c)
+                return y, st
+
+            x, m_new = lax.scan(inner, x, (mp, mc), unroll=flags.scan_unroll())
+            x, s_new = xlstm_mod.slstm_decode(x, sp, cfg, sc)
+            return x, (m_new, s_new)
+
+        x, (m_new, s_new) = lax.scan(
+            group, x, (params["mlstm"], params["slstm"], m_c, s_c),
+            unroll=flags.scan_unroll(),
+        )
+        return _finish(x, params, cfg), (m_new, s_new)
+
+    if cfg.family == "hybrid":
+        (g_states, kv_caches), t_states = cache
+
+        def group(x, gp):
+            mp, mc, kvc = gp
+
+            def inner(x, lp_c):
+                lp, c = lp_c
+                y, st = ssm_mod.mamba2_decode(x, lp, cfg, c)
+                return y, st
+
+            x, m_new = lax.scan(inner, x, (mp, mc), unroll=flags.scan_unroll())
+            x, kv_new = block_decode(x, params["shared"], cfg, kvc, pos)
+            return x, (m_new, kv_new)
+
+        x, (g_new, kv_new) = lax.scan(
+            group, x, (params["mamba_g"], g_states, kv_caches),
+            unroll=flags.scan_unroll(),
+        )
+        t_new = None
+        if "mamba_t" in params:
+            def trail(x, lp_c):
+                lp, c = lp_c
+                y, st = ssm_mod.mamba2_decode(x, lp, cfg, c)
+                return y, st
+
+            x, t_new = lax.scan(trail, x, (params["mamba_t"], t_states), unroll=flags.scan_unroll())
+        return _finish(x, params, cfg), ((g_new, kv_new), t_new)
+
+    if cfg.ssm is not None:
+        def body(x, lp_c):
+            lp, c = lp_c
+            y, st = ssm_mod.mamba2_decode(x, lp, cfg, c)
+            return y, st
+
+        x, new = lax.scan(body, x, (params["blocks"], cache), unroll=flags.scan_unroll())
+        return _finish(x, params, cfg), new
+
+    def body(x, lp_c):
+        lp, c = lp_c
+        y, c2 = block_decode(x, lp, cfg, c, pos)
+        return y, c2
+
+    x, new_cache = lax.scan(body, x, (params["blocks"], cache), unroll=flags.scan_unroll())
+    return _finish(x, params, cfg), new_cache

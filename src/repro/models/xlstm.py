@@ -1,0 +1,282 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM + recurrent sLSTM.
+
+mLSTM (matrix-memory LSTM) is linear attention with exponential gating; we
+implement the *stabilized chunkwise* form: within a chunk of length Q the
+masked quadratic form, across chunks a carried (H, dk, dv) matrix state, a
+(H, dk) normalizer and a (H,) max-stabilizer — O(S*Q) work, O(1)-state
+decode (runs ``long_500k``).
+
+sLSTM (scalar-memory, exponential gating, per-head recurrence) is a true
+sequential recurrence — implemented as a ``lax.scan`` over time.
+
+Block layout follows the xLSTM paper: pre-norm -> up-projection (factor 2)
+-> causal conv -> gated cell -> down-projection; every
+``cfg.xlstm.slstm_every``-th block is an sLSTM, the rest mLSTM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import flags
+
+from repro.models.layers import KeyGen, init_rmsnorm, normal_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(kg: KeyGen, cfg, dtype) -> dict:
+    d = cfg.d_model
+    di = int(cfg.xlstm.proj_factor * d)
+    H = cfg.n_heads
+    return {
+        "norm": init_rmsnorm(kg, d, dtype),
+        "w_up": normal_init(kg(), (d, 2 * di), dtype),
+        "conv_w": normal_init(kg(), (4, di), dtype, scale=0.5),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": normal_init(kg(), (di, di), dtype),
+        "wk": normal_init(kg(), (di, di), dtype),
+        "wv": normal_init(kg(), (di, di), dtype),
+        "w_if": normal_init(kg(), (di, 2 * H), jnp.float32, scale=0.02),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),  # forget-gate bias init high
+        "out_norm": init_rmsnorm(kg, di, dtype),
+        "w_down": normal_init(kg(), (di, d), dtype),
+    }
+
+
+def _conv_silu(x, w, b, state=None):
+    from repro.models.ssm import _causal_conv
+
+    return _causal_conv(x, w, b, state)
+
+
+def _mlstm_qkvif(xin, p, cfg, conv_state=None):
+    di = p["wq"].shape[0]
+    H = cfg.n_heads
+    B, S, _ = xin.shape
+    xc, new_conv = _conv_silu(xin, p["conv_w"], p["conv_b"], conv_state)
+    dk = di // H
+    q = jnp.einsum("bsd,de->bse", xc, p["wq"]).reshape(B, S, H, dk)
+    k = jnp.einsum("bsd,de->bse", xc, p["wk"]).reshape(B, S, H, dk)
+    v = jnp.einsum("bsd,de->bse", xin, p["wv"]).reshape(B, S, H, dk)
+    gates = jnp.einsum("bsd,dg->bsg", xc.astype(jnp.float32), p["w_if"])
+    i_pre = gates[..., :H] + p["b_i"]
+    f_pre = gates[..., H:] + p["b_f"]
+    log_f = jax.nn.log_sigmoid(f_pre)  # (B,S,H)
+    return q, k, v, i_pre, log_f, new_conv, dk
+
+
+def mlstm_forward(x: jax.Array, p: dict, cfg, state=None):
+    """Chunkwise mLSTM block. x: (B,S,d) -> (y, new_state)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    from repro.models.ssm import pick_chunk
+    Q = pick_chunk(S, cfg.xlstm.chunk)
+    nc = S // Q
+
+    xn = rmsnorm(x, p["norm"]["scale"], cfg.rmsnorm_eps)
+    up = jnp.einsum("bsd,de->bse", xn, p["w_up"])
+    xin, z = jnp.split(up, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    q, k, v, i_pre, log_f, new_conv, dk = _mlstm_qkvif(xin, p, cfg, conv_state)
+    scale = dk**-0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, nc, Q, H, dk)
+    kf = k.astype(jnp.float32).reshape(B, nc, Q, H, dk)
+    vf = v.astype(jnp.float32).reshape(B, nc, Q, H, dk)
+    ic = i_pre.reshape(B, nc, Q, H)
+    lfc = log_f.reshape(B, nc, Q, H)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, dk, dk), jnp.float32)
+        n0 = jnp.zeros((B, H, dk), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = (
+            state["C"].astype(jnp.float32),
+            state["n"].astype(jnp.float32),
+            state["m"],
+        )
+
+    def chunk_step(carry, inp):
+        C, n, m = carry
+        qc, kc, vc, icq, lf = inp  # (B,Q,H,dk) x3, (B,Q,H) x2
+        b = jnp.cumsum(lf, axis=1)  # (B,Q,H) cumulative log decay in chunk
+        # stabilizers
+        a_s = icq - b  # (B,Q,H): i_s - b_s
+        M = lax.cummax(a_s, axis=1)  # running max over s
+        m_intra = b + M
+        m_carry = m[:, None, :] + b
+        m_t = jnp.maximum(m_intra, m_carry)  # (B,Q,H)
+        # intra-chunk decay matrix D_ts = exp(b_t - b_s + i_s - m_t), s <= t
+        Dlog = (
+            b[:, :, None, :] - b[:, None, :, :] + icq[:, None, :, :]
+        )  # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        Dlog = jnp.where(tri[None, :, :, None], Dlog, -jnp.inf)
+        D = jnp.exp(Dlog - m_t[:, :, None, :])
+        G = jnp.einsum("bthd,bshd->btsh", qc, kc)  # (B,t,s,H)
+        num = jnp.einsum("btsh,btsh,bshd->bthd", G, D, vc)
+        den = jnp.einsum("btsh,btsh->bth", G, D)  # q.n intra
+        # carry contribution
+        carry_scale = jnp.exp(m[:, None, :] + b - m_t)  # (B,Q,H)
+        num = num + carry_scale[..., None] * jnp.einsum("bthd,bhde->bthe", qc, C)
+        den = den + carry_scale * jnp.einsum("bthd,bhd->bth", qc, n)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # update carry to end of chunk
+        b_last = b[:, -1, :]  # (B,H)
+        m_new = jnp.maximum(m + b_last, m_intra[:, -1, :])
+        dec_end = jnp.exp(b_last[:, None, :] - b + icq - m_new[:, None, :])
+        C_new = jnp.exp(m + b_last - m_new)[..., None, None] * C + jnp.einsum(
+            "bsh,bshd,bshe->bhde", dec_end, kc, vc
+        )
+        n_new = jnp.exp(m + b_last - m_new)[..., None] * n + jnp.einsum(
+            "bsh,bshd->bhd", dec_end, kc
+        )
+        return (C_new, n_new, m_new), h
+
+    inputs = tuple(
+        jnp.moveaxis(t, 1, 0) for t in (qf, kf, vf, ic, lfc)
+    )
+    (Cf, nf, mf), hs = lax.scan(chunk_step, (C0, n0, m0), inputs, unroll=flags.scan_unroll())
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, -1)  # (B,S,di)
+    h = rmsnorm(h.astype(x.dtype), p["out_norm"]["scale"], cfg.rmsnorm_eps)
+    h = h * jax.nn.silu(z)
+    y = jnp.einsum("bse,ed->bsd", h, p["w_down"])
+    new_state = {
+        "conv": new_conv.astype(x.dtype),
+        "C": Cf,
+        "n": nf,
+        "m": mf,
+    }
+    return x + y, new_state
+
+
+def mlstm_decode(x: jax.Array, p: dict, cfg, state: dict):
+    """One-token mLSTM step. x: (B,1,d)."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    xn = rmsnorm(x, p["norm"]["scale"], cfg.rmsnorm_eps)
+    up = jnp.einsum("bsd,de->bse", xn, p["w_up"])
+    xin, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i_pre, log_f, new_conv, dk = _mlstm_qkvif(
+        xin, p, cfg, state["conv"]
+    )
+    qf = q.astype(jnp.float32)[:, 0] * dk**-0.5  # (B,H,dk)
+    kf = k.astype(jnp.float32)[:, 0]
+    vf = v.astype(jnp.float32)[:, 0]
+    iv = i_pre[:, 0]  # (B,H)
+    lf = log_f[:, 0]
+    C, n, m = state["C"].astype(jnp.float32), state["n"].astype(jnp.float32), state["m"]
+    m_new = jnp.maximum(lf + m, iv)
+    f_s = jnp.exp(lf + m - m_new)
+    i_s = jnp.exp(iv - m_new)
+    C = f_s[..., None, None] * C + i_s[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", kf, vf
+    )
+    n = f_s[..., None] * n + i_s[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), jnp.exp(-m_new)
+    )
+    h = (num / den[..., None]).reshape(B, 1, -1)
+    h = rmsnorm(h.astype(x.dtype), p["out_norm"]["scale"], cfg.rmsnorm_eps)
+    h = h * jax.nn.silu(z)
+    y = jnp.einsum("bse,ed->bsd", h, p["w_down"])
+    return x + y, {"conv": new_conv.astype(x.dtype), "C": C, "n": n, "m": m_new}
+
+
+def init_mlstm_state(cfg, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    di = int(cfg.xlstm.proj_factor * d)
+    H = cfg.n_heads
+    dk = di // H
+    return {
+        "conv": jnp.zeros((batch, 3, di), dtype),
+        "C": jnp.zeros((batch, H, dk, dk), jnp.float32),
+        "n": jnp.zeros((batch, H, dk), jnp.float32),
+        "m": jnp.full((batch, H), -jnp.inf, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(kg: KeyGen, cfg, dtype) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    return {
+        "norm": init_rmsnorm(kg, d, dtype),
+        "w": normal_init(kg(), (d, 4 * d), dtype),  # z, i, f, o pre-acts
+        "r": normal_init(kg(), (H, hd, 4 * hd), dtype, scale=0.02),  # per-head rec
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "out_norm": init_rmsnorm(kg, d, dtype),
+        "w_down": normal_init(kg(), (d, d), dtype),
+    }
+
+
+def _slstm_cell(carry, wx, p, cfg):
+    """One time step. carry = (c, n, h, m), each (B, H, hd)."""
+    c, n, h, m = carry
+    H = cfg.n_heads
+    B = c.shape[0]
+    hd = c.shape[-1]
+    rec = jnp.einsum("bhd,hde->bhe", h.astype(p["r"].dtype), p["r"])  # (B,H,4hd)
+    pre = wx.reshape(B, H, 4 * hd).astype(jnp.float32) + rec.astype(jnp.float32)
+    zp, ip, fp, op = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(zp)
+    o = jax.nn.sigmoid(op)
+    log_f = jax.nn.log_sigmoid(fp)
+    m_new = jnp.maximum(log_f + m, ip)
+    i_s = jnp.exp(ip - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_forward(x: jax.Array, p: dict, cfg, state=None):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    xn = rmsnorm(x, p["norm"]["scale"], cfg.rmsnorm_eps)
+    wx = jnp.einsum("bsd,de->bse", xn, p["w"]) + p["b"].astype(xn.dtype)
+    if state is None:
+        z0 = jnp.zeros((B, H, hd), jnp.float32)
+        carry = (z0, z0, z0, jnp.full((B, H, hd), -jnp.inf, jnp.float32))
+    else:
+        carry = (state["c"], state["n"], state["h"], state["m"])
+
+    def step(carry, wx_t):
+        return _slstm_cell(carry, wx_t, p, cfg)
+
+    carry, hs = lax.scan(step, carry, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    h = rmsnorm(h, p["out_norm"]["scale"], cfg.rmsnorm_eps)
+    y = jnp.einsum("bsd,de->bsd", h, p["w_down"])
+    c, n, hh, m = carry
+    return x + y, {"c": c, "n": n, "h": hh, "m": m}
+
+
+def slstm_decode(x: jax.Array, p: dict, cfg, state: dict):
+    y, new_state = slstm_forward(
+        x, p, cfg, state={k: state[k] for k in ("c", "n", "h", "m")}
+    )
+    return y, new_state
+
+
+def init_slstm_state(cfg, batch: int):
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, H, hd), -jnp.inf)}

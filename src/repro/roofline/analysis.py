@@ -1,0 +1,197 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, all in seconds-per-step on the
+target chip (TPU v5e constants in roofline/hw.py):
+
+    compute    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory     = HLO_bytes / (chips x HBM_bw)
+    collective = collective_bytes_per_device / link_bw
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``. Collective
+bytes are NOT in cost_analysis: ``collective_bytes`` parses the
+post-SPMD-partitioning HLO (``compiled.as_text()``) and sums the operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction (operand size = bytes each participant
+contributes per instruction execution).
+
+Also reported: MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) and the
+ratio MODEL_FLOPS / HLO_FLOPs — how much of the compiled compute is
+"useful" (catches remat/redundancy waste), and the dominant term.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.roofline.hw import DEFAULT_CHIP, ChipSpec
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "e4m3": 1, "e5m2": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# shape literal like  bf16[8,128]{1,0}  or f32[] ; capture dtype + dims
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# "%name = <result-shapes> <kind>(" — operands print WITHOUT inline shapes in
+# optimized HLO, so bytes are derived from the RESULT shape + replica groups.
+_INSTR_RE = re.compile(
+    r"=\s*(?P<res>(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<async>-start|-done)?\("
+)
+# replica_groups=[G,P]<=...  (G groups of P participants) or explicit {{...}}
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _participants(line: str) -> int | None:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return None
+
+
+def collective_bytes(hlo_text: str, default_participants: int = 1) -> dict:
+    """Per-device operand bytes per collective kind, from post-SPMD HLO text.
+
+    Conventions (operand = what each participant contributes once):
+      all-gather         operand = result / participants
+      all-reduce         operand = result
+      reduce-scatter     operand = result * participants
+      all-to-all         operand = result
+      collective-permute operand = result
+
+    Async pairs: ``-start`` ops are counted (their result carries the
+    payload shape), ``-done`` ops skipped.
+    """
+    out: dict[str, float] = {k: 0.0 for k in COLLECTIVE_OPS}
+    count: dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        if m.group("async") == "-done":
+            continue
+        kind = m.group("kind")
+        res = m.group("res")
+        shapes = _SHAPE_RE.findall(res)
+        if m.group("async") == "-start" and len(shapes) > 1:
+            # start-op result is a (operand, result) tuple: keep the result
+            shapes = shapes[len(shapes) // 2 :]
+        b = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        p = _participants(line) or default_participants
+        if kind == "all-gather":
+            b = b / max(p, 1)
+        elif kind == "reduce-scatter":
+            b = b * max(p, 1)
+        out[kind] += b
+        count[kind] += 1
+    out_all = {f"{k}_bytes": v for k, v in out.items()}
+    out_all.update({f"{k}_count": count[k] for k in COLLECTIVE_OPS})
+    out_all["total_bytes"] = sum(out.values())
+    out_all["total_count"] = sum(count.values())
+    return out_all
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    model_flops: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline-optimal step time (perfect overlap of the three engines)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (global)."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-flops utilization at the roofline-optimal step time."""
+        if self.step_s <= 0:
+            return 0.0
+        chip = DEFAULT_CHIP
+        return self.model_flops / (self.step_s * self.chips * chip.peak_flops_bf16)
+
+
+def roofline(
+    *,
+    hlo_flops_per_device: float,
+    hlo_bytes_per_device: float,
+    collective_bytes_per_device: float,
+    chips: int,
+    model_flops: float = 0.0,
+    chip: ChipSpec = DEFAULT_CHIP,
+    dtype_peak: str = "bf16",
+) -> RooflineTerms:
+    peak = chip.peak_flops_bf16 if dtype_peak == "bf16" else chip.peak_flops_f32
+    return RooflineTerms(
+        compute_s=hlo_flops_per_device / peak,
+        memory_s=hlo_bytes_per_device / chip.hbm_bw,
+        collective_s=collective_bytes_per_device / chip.ici_bw,
+        hlo_flops=hlo_flops_per_device,
+        hlo_bytes=hlo_bytes_per_device,
+        coll_bytes=collective_bytes_per_device,
+        model_flops=model_flops,
+        chips=chips,
+    )
+
+
+def model_flops_train(cfg, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) for one training step."""
+    n = cfg.active_param_count()
+    d_tokens = shape.global_batch * shape.seq_len
+    return 6.0 * n * d_tokens
+
+
+def model_flops_decode(cfg, shape) -> float:
+    """2*N_active per generated token (forward only) x batch."""
+    n = cfg.active_param_count()
+    return 2.0 * n * shape.global_batch
+
+
+def model_flops_prefill(cfg, shape) -> float:
+    n = cfg.active_param_count()
+    return 2.0 * n * shape.global_batch * shape.seq_len

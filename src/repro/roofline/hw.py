@@ -1,0 +1,60 @@
+"""Hardware constants for the roofline/energy models.
+
+Target platform: Google TPU v5e (the dry-run target). The container itself is
+CPU-only; these constants parameterize the analytical models only and are never
+used to configure XLA.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    """Per-chip capability + power envelope."""
+
+    name: str
+    # Compute.
+    peak_flops_bf16: float  # FLOP/s
+    peak_flops_f32: float  # FLOP/s
+    # Memory.
+    hbm_bytes: float
+    hbm_bw: float  # bytes/s
+    vmem_bytes: float
+    # Interconnect (per-link, per-direction).
+    ici_bw: float  # bytes/s per link
+    ici_links: int  # links per chip
+    # Power model (see energy/model.py for calibration notes).
+    p_idle_w: float
+    p_peak_w: float
+
+
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    peak_flops_f32=98.5e12,
+    hbm_bytes=16 * 2**30,
+    hbm_bw=819e9,
+    vmem_bytes=128 * 2**20,
+    ici_bw=50e9,
+    ici_links=4,
+    p_idle_w=60.0,
+    p_peak_w=215.0,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class HostSpec:
+    """Host (CPU socket) power envelope — LIKWID/RAPL-style socket scope."""
+
+    name: str
+    p_idle_w: float
+    p_active_w: float  # additional power when the host is driving collectives/IO
+
+
+HOST_XEON = HostSpec(name="xeon_gold_2s", p_idle_w=90.0, p_active_w=35.0)
+
+# Default platform used across roofline + energy accounting.
+DEFAULT_CHIP = TPU_V5E
+DEFAULT_HOST = HOST_XEON

@@ -1,0 +1,113 @@
+"""Training step + loop: microbatch accumulation, NaN-skip, checkpointing.
+
+``make_train_step`` builds the jitted SPMD step:
+
+* loss/grad over ``microbatches`` gradient-accumulation slices
+  (``lax.scan``; activation memory scales with the slice, not the global
+  batch);
+* collectives are GSPMD-inserted from the param/batch shardings (DP
+  gradient reduction, FSDP all-gathers, TP reductions);
+* NaN/Inf guard: a non-finite loss or gradient norm skips the optimizer
+  update (params/opt state pass through) and bumps ``opt_state["skipped"]``
+  — the in-step half of the fault story (dist/fault.py has the host side).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import flags
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.train.optimizer import OptConfig, adamw_update, global_norm
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt_cfg: OptConfig,
+    *,
+    microbatches: int = 1,
+    kv_chunk: int = 1024,
+    remat: bool = True,
+    nan_guard: bool = True,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def loss_of(params, batch):
+        return lm.loss_fn(params, cfg, batch, kv_chunk=kv_chunk, remat=remat)
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            return jax.value_and_grad(loss_of)(params, batch)
+
+        def mb(batch_tree, i):
+            return jax.tree.map(
+                lambda x: x.reshape((microbatches, -1) + x.shape[1:])[i], batch_tree
+            )
+
+        def acc_step(carry, i):
+            loss_acc, g_acc = carry
+            l, g = jax.value_and_grad(loss_of)(params, mb(batch, i))
+            g_acc = jax.tree.map(jnp.add, g_acc, g)
+            return (loss_acc + l, g_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = lax.scan(
+            acc_step, (jnp.zeros(()), g0), jnp.arange(microbatches),
+            unroll=flags.scan_unroll(),
+        )
+        scale = 1.0 / microbatches
+        return loss * scale, jax.tree.map(lambda g: g * scale, grads)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        gnorm = global_norm(grads)
+        new_params, new_opt, _ = adamw_update(grads, opt_state, params, opt_cfg)
+        if nan_guard:
+            ok = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+            new_params = jax.tree.map(
+                lambda new, old: jnp.where(ok, new, old), new_params, params
+            )
+            new_opt = {
+                "mu": jax.tree.map(
+                    lambda new, old: jnp.where(ok, new, old),
+                    new_opt["mu"],
+                    opt_state["mu"],
+                ),
+                "nu": jax.tree.map(
+                    lambda new, old: jnp.where(ok, new, old),
+                    new_opt["nu"],
+                    opt_state["nu"],
+                ),
+                "step": jnp.where(ok, new_opt["step"], opt_state["step"]),
+                "skipped": opt_state["skipped"] + jnp.where(ok, 0, 1).astype(jnp.int32),
+            }
+        metrics = {"loss": loss, "grad_norm": gnorm, "skipped": new_opt["skipped"]}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def jit_train_step(train_step, mesh, params, opt_state, batch_tree, global_batch):
+    """Wrap with explicit in/out shardings for the production mesh."""
+    from repro.dist.sharding import batch_specs, param_specs, shardings_of
+
+    pspec = shardings_of(param_specs(params, mesh), mesh)
+    ospec = {
+        "mu": shardings_of(param_specs(opt_state["mu"], mesh), mesh),
+        "nu": shardings_of(param_specs(opt_state["nu"], mesh), mesh),
+        "step": jax.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        "skipped": jax.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+    }
+    bspec = shardings_of(batch_specs(batch_tree, mesh, global_batch), mesh)
+    return jax.jit(
+        train_step,
+        in_shardings=(pspec, ospec, bspec),
+        out_shardings=(pspec, ospec, None),
+        donate_argnums=(0, 1),
+    )

@@ -1,0 +1,88 @@
+"""AdamW with optional reduced-precision moments (distributed-friendly).
+
+Optimizer state mirrors the parameter pytree, so the FSDP sharding rules in
+dist/sharding.py apply verbatim (ZeRO-style sharded optimizer). ``bf16
+moments`` halve optimizer memory — a standard large-scale trick; the first
+moment keeps an f32 master only when requested.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"  # "bfloat16" halves optimizer memory
+    warmup_steps: int = 100
+    grad_clip: float = 1.0
+
+
+def _mdt(cfg: OptConfig):
+    return jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+
+
+def init_opt_state(params, cfg: OptConfig):
+    mdt = _mdt(cfg)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+        "skipped": jnp.zeros((), jnp.int32),  # NaN-guard counter (fault.py)
+    }
+
+
+def schedule(cfg: OptConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(grads, opt_state, params, cfg: OptConfig):
+    """One AdamW step. Returns (new_params, new_opt_state, grad_norm)."""
+    mdt = _mdt(cfg)
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        mu_new = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+        nu_new = b2 * nu.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = mu_new / bc1
+        vhat = nu_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), mu_new.astype(mdt), nu_new.astype(mdt)
+
+    out = jax.tree.map(upd, params, grads, opt_state["mu"], opt_state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {
+        "mu": new_mu,
+        "nu": new_nu,
+        "step": step,
+        "skipped": opt_state["skipped"],
+    }
+    return new_params, new_state, gnorm

@@ -1,0 +1,131 @@
+"""AMG components: matching properties, JAX/numpy matcher equivalence,
+aggregation, hierarchy quality."""
+
+import numpy as np
+import pytest
+import scipy.sparse as sp
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.amg.aggregation import (
+    compose_matchings,
+    decoupled_aggregate,
+    match_to_aggregates,
+    tentative_prolongator,
+)
+from repro.core.amg.galerkin import l1_diagonal, rap
+from repro.core.amg.matching import (
+    compatible_weights,
+    greedy_scan_matching_np,
+    locally_dominant_matching_jax,
+    locally_dominant_matching_np,
+    plain_weights,
+    weights_to_ell,
+)
+from repro.matrices.poisson import cube, poisson_scipy
+
+
+def _sym_weights(n, density, seed):
+    a = sp.random(n, n, density=density, format="csr", random_state=seed)
+    a = a + a.T
+    a.setdiag(0)
+    a.eliminate_zeros()
+    a.data = np.abs(a.data) + 0.1
+    return a.tocsr()
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(6, 60), density=st.floats(0.05, 0.4), seed=st.integers(0, 99))
+def test_matching_is_valid(n, density, seed):
+    """match is an involution with no self-pair conflicts."""
+    w = _sym_weights(n, density, seed)
+    wd, wc = weights_to_ell(w)
+    for matcher in (locally_dominant_matching_np, greedy_scan_matching_np):
+        match = matcher(wd, wc)
+        assert (match[match] == np.arange(n)).all()  # involution
+        paired = match != np.arange(n)
+        if paired.any():
+            # every matched pair is a real edge
+            i = np.nonzero(paired)[0]
+            for a_, b_ in zip(i, match[i]):
+                assert w[a_, b_] != 0
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_jax_matcher_equals_numpy(seed):
+    w = _sym_weights(40, 0.2, seed)
+    wd, wc = weights_to_ell(w)
+    m_np = locally_dominant_matching_np(wd, wc)
+    m_jx = np.asarray(locally_dominant_matching_jax(wd, wc))
+    np.testing.assert_array_equal(m_np, m_jx)
+
+
+def test_compatible_weights_formula():
+    a = sp.csr_matrix(np.array([[2.0, -1.0], [-1.0, 3.0]]))
+    w = compatible_weights(a)
+    # c_01 = 1 - 2*(-1)*1*1 / (2+3) = 1.4
+    assert np.isclose(w[0, 1], 1.4)
+    p = plain_weights(a)
+    assert np.isclose(p[0, 1], 1.0)
+
+
+def test_aggregates_have_bounded_size():
+    p = cube(10, "7pt")
+    a = poisson_scipy(p)
+    agg = compose_matchings(a, sweeps=3, weighting_fn=compatible_weights)
+    sizes = np.bincount(agg)
+    assert sizes.max() <= 8
+    assert agg.min() == 0 and agg.max() + 1 <= p.n
+    # good coarsening on Poisson: mean size near 8
+    assert sizes.mean() > 4.0
+
+
+def test_tentative_prolongator_columns_unit_norm():
+    agg = np.array([0, 0, 1, 1, 1, 2])
+    w = np.random.default_rng(0).uniform(0.5, 2.0, 6)
+    p = tentative_prolongator(agg, w)
+    norms = np.sqrt(np.asarray(p.multiply(p).sum(axis=0)).ravel())
+    np.testing.assert_allclose(norms, 1.0, rtol=1e-12)
+
+
+def test_decoupled_aggregation_is_block_diagonal():
+    p = cube(8, "7pt")
+    a = poisson_scipy(p)
+    row_starts = (0, 128, 256, 384, 512)
+    P_, coarse_starts = decoupled_aggregate(a, row_starts)
+    coo = P_.tocoo()
+    owners_fine = np.searchsorted(np.asarray(row_starts[1:]), coo.row, side="right")
+    owners_coarse = np.searchsorted(np.asarray(coarse_starts[1:]), coo.col, side="right")
+    assert (owners_fine == owners_coarse).all()
+
+
+def test_rap_preserves_spd():
+    p = cube(6, "7pt")
+    a = poisson_scipy(p)
+    P_, _ = decoupled_aggregate(a, (0, a.shape[0]))
+    ac = rap(a, P_)
+    assert (np.abs(ac - ac.T) > 1e-12).nnz == 0
+    evals = np.linalg.eigvalsh(ac.toarray())
+    assert evals.min() > 0
+
+
+def test_l1_diagonal_dominates():
+    p = cube(5, "7pt")
+    a = poisson_scipy(p)
+    d = l1_diagonal(a)
+    # D_l1 >= |offdiag row sum| guarantees convergent Jacobi
+    offdiag = np.abs(a).sum(axis=1).A1 - np.abs(a.diagonal())
+    assert (d >= a.diagonal() + offdiag - 1e-12).all()
+
+
+def test_hierarchy_coarsens_geometrically(single_mesh):
+    from repro.core.amg import AMGParams, build_amg
+
+    p = cube(12, "7pt")
+    a = poisson_scipy(p)
+    pre, info = build_amg(a, 1, AMGParams(coarse_size=50))
+    rows = info.level_rows
+    assert len(rows) >= 3
+    for i in range(len(rows) - 1):
+        assert rows[i + 1] <= rows[i] / 3  # near the 8x target
+    assert info.operator_complexity < 1.6

@@ -1,0 +1,127 @@
+"""Energy model + monitor + accounting invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.partition import HaloPlan
+from repro.energy.accounting import (
+    CostModel,
+    OpCounts,
+    cg_iteration_counts,
+    dot_counts,
+    spmv_counts,
+)
+from repro.energy.model import PowerModel
+from repro.energy.monitor import PowerMonitor
+
+
+def test_power_model_calibration_points():
+    m = PowerModel()
+    # roofline-saturating matmul draws peak
+    assert m.chip_power(m.chip.peak_flops_bf16, m.chip.hbm_bw, 0) == m.chip.p_peak_w
+    # HBM stream draws idle + 65% envelope
+    assert np.isclose(
+        m.chip_power(0, m.chip.hbm_bw, 0),
+        m.chip.p_idle_w + 0.65 * (m.chip.p_peak_w - m.chip.p_idle_w),
+    )
+    # idle
+    assert m.chip_power(0, 0, 0) == m.chip.p_idle_w
+    # clamped
+    assert m.chip_power(1e18, 1e14, 1e13) == m.chip.p_peak_w
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    flops=st.floats(0, 1e15),
+    hbm=st.floats(0, 1e12),
+    ici=st.floats(0, 1e11),
+)
+def test_power_is_monotone_and_bounded(flops, hbm, ici):
+    m = PowerModel()
+    p = m.chip_power(flops, hbm, ici)
+    assert m.chip.p_idle_w <= p <= m.chip.p_peak_w
+    assert p >= m.chip_power(flops * 0.5, hbm * 0.5, ici * 0.5) - 1e-9
+
+
+def test_monitor_energy_identities():
+    mon = PowerMonitor(n_devices=4)
+    mon.idle(0.1)
+    c = OpCounts(flops=1e9, hbm_bytes=4e9, ici_bytes=1e7, n_collectives=2)
+    mon.region("work", c, n_shards=4, repeats=10)
+    mon.idle(0.1)
+    e = mon.energy()
+    # TE = SE + DE (per component)
+    assert np.isclose(e["te_gpu"], e["se_gpu"] + e["de_gpu"])
+    assert np.isclose(e["te_cpu"], e["se_cpu"] + e["de_cpu"])
+    # static energy = P_idle * T * n_devices
+    assert np.isclose(e["se_gpu"], 60.0 * e["runtime"] * 4)
+    # dynamic >= 0, peak within envelope
+    assert e["de_gpu"] > 0
+    assert 60.0 <= e["gpu_power_peak"] <= 215.0
+    # curve covers the whole duration
+    ts, pc, ph = mon.curve(hz=2000)
+    assert ts[-1] == pytest.approx(e["runtime"])
+    assert pc.max() == pytest.approx(e["gpu_power_peak"], abs=1.0)
+
+
+def test_opcounts_algebra():
+    a = OpCounts(1, 2, 3, 4)
+    b = OpCounts(10, 20, 30, 40)
+    s = a + b
+    assert (s.flops, s.hbm_bytes, s.ici_bytes, s.n_collectives) == (11, 22, 33, 44)
+    d = 2 * a
+    assert d.flops == 2 and d.n_collectives == 8
+
+
+def _fake_mat(n_shards=8, R=1000, mode="ring"):
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.core.partition import DistELL
+
+    if mode == "ring":
+        plan = HaloPlan("ring", (-1, 1), (100, 100), R, n_shards)
+    else:
+        plan = HaloPlan("allgather", (), (), R, n_shards)
+    z = jnp.zeros((n_shards, R, 7))
+    zi = jnp.zeros((n_shards, R, 7), jnp.int32)
+    return DistELL(z, zi, z[:, :, :1], zi[:, :, :1], zi[:, :, 0],
+                   plan, R * n_shards, tuple(range(0, R * (n_shards + 1), R)))
+
+
+def test_comm_reduction_ordering():
+    """The paper's claim structure: fused/ring variants cost less than naive."""
+    mat_ring = _fake_mat(mode="ring")
+    mat_ag = _fake_mat(mode="allgather")
+    cm = CostModel()
+    c_hs = cg_iteration_counts(mat_ring, "hs")
+    c_fcg = cg_iteration_counts(mat_ring, "fcg")
+    c_sstep = cg_iteration_counts(mat_ring, "sstep")
+    c_naive = cg_iteration_counts(mat_ag, "naive")
+    # reduction counts (net of the SpMV halo collectives) strictly ordered:
+    # sstep (1/s) < fcg (1) < hs (2) < naive (3)
+    sp_ring = spmv_counts(mat_ring).n_collectives
+    sp_ag = spmv_counts(mat_ag).n_collectives
+    red = lambda c, sp: c.n_collectives - sp
+    assert red(c_sstep, sp_ring) < red(c_fcg, sp_ring) < red(c_hs, sp_ring)
+    assert red(c_hs, sp_ring) < red(c_naive, sp_ag)
+    # ici bytes: ring << allgather
+    assert c_hs.ici_bytes < c_naive.ici_bytes / 3
+    # modeled time: naive (serialized) slower than hs (overlapped)
+    t_hs, _ = cm.times(c_hs, 8, overlap=True)
+    t_naive, _ = cm.times(c_naive, 8, overlap=False)
+    assert t_naive > t_hs
+    # energy ordering follows
+    _, _, de_hs, _ = cm.device_energy(c_hs, 8, True)
+    _, _, de_naive, _ = cm.device_energy(c_naive, 8, False)
+    assert de_naive > de_hs
+
+
+def test_spmv_counts_scale_with_halo():
+    small = spmv_counts(_fake_mat(mode="ring"))
+    big = spmv_counts(_fake_mat(mode="allgather"))
+    assert big.ici_bytes > small.ici_bytes
+    assert small.flops == big.flops

@@ -1,0 +1,131 @@
+"""Sharding-rule validity across all archs + roofline/HLO-parsing units."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.dist.sharding import axis_size, batch_specs, cache_specs, param_specs
+from repro.models import lm, transformer as tfm
+from repro.models.kvcache import cache_shapes
+from repro.roofline import analysis as ra
+
+SINGLE = AbstractMesh((16, 16), ("data", "model"))
+MULTI = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _check_specs(tree_sds, specs, mesh):
+    flat_s = jax.tree.leaves(tree_sds)
+    flat_p = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_s) == len(flat_p)
+    for leaf, spec in zip(flat_s, flat_p):
+        for dim, name in enumerate(spec):
+            if name is None:
+                continue
+            assert leaf.shape[dim] % axis_size(mesh, name) == 0, (
+                leaf.shape, spec, dim,
+            )
+
+
+@pytest.mark.parametrize("mesh", [SINGLE, MULTI], ids=["single", "multi"])
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_param_specs_divisible_all_archs(name, mesh):
+    cfg = get_config(name)
+    params_sds = jax.eval_shape(lambda: tfm.init_params(cfg, jax.random.key(0)))
+    specs = param_specs(params_sds, mesh)
+    _check_specs(params_sds, specs, mesh)
+
+
+@pytest.mark.parametrize("mesh", [SINGLE, MULTI], ids=["single", "multi"])
+@pytest.mark.parametrize("shape_name", ["train_4k", "decode_32k", "long_500k"])
+@pytest.mark.parametrize("name", ["qwen3-8b", "zamba2-7b", "xlstm-350m", "arctic-480b"])
+def test_input_cache_specs_divisible(name, shape_name, mesh):
+    cfg = get_config(name)
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode" and cfg.is_encoder_only:
+        pytest.skip("no decode")
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        pytest.skip("quadratic")
+    specs_in = lm.input_specs(cfg, shape)
+    if "batch" in specs_in:
+        specs = batch_specs(specs_in["batch"], mesh, shape.global_batch)
+        _check_specs(specs_in["batch"], specs, mesh)
+    else:
+        cs = cache_specs(specs_in["cache"], mesh, shape.global_batch, shape.seq_len)
+        _check_specs(specs_in["cache"], cs, mesh)
+
+
+def test_param_specs_use_model_and_data_axes():
+    cfg = get_config("qwen3-8b")
+    params_sds = jax.eval_shape(lambda: tfm.init_params(cfg, jax.random.key(0)))
+    specs = param_specs(params_sds, SINGLE)
+    names = set()
+    for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+        for n in s:
+            if n is not None:
+                names.add(n)
+    assert "model" in names and "data" in names  # TP + FSDP both active
+
+
+def test_moe_expert_axis_sharded():
+    cfg = get_config("arctic-480b")
+    params_sds = jax.eval_shape(lambda: tfm.init_params(cfg, jax.random.key(0)))
+    specs = param_specs(params_sds, SINGLE)
+    wg = specs["blocks"]["ffn"]["wg"]
+    assert wg[1] == "model"  # E axis = expert parallelism
+
+
+# ---------------------------------------------------------------------------
+# Roofline / HLO collective parsing
+# ---------------------------------------------------------------------------
+
+FAKE_HLO = """
+HloModule test
+%x1 = bf16[128,1024]{1,0} all-gather(%p0), channel_id=1, replica_groups=[2,8]<=[16], dimensions={0}
+%x2 = f32[512]{0} all-reduce(%p1), replica_groups=[1,16]<=[16], to_apply=%sum
+%x3 = f32[64,32]{1,0} reduce-scatter(%p2), replica_groups=[2,8]<=[16], dimensions={0}
+%x4 = bf16[16,16]{1,0} all-to-all(%p3), replica_groups=[4,4]<=[16]
+%x5 = f64[100]{0} collective-permute(%p4), source_target_pairs={{0,1}}
+%x6 = (f32[4]{0}, f32[4]{0}) all-reduce-start(%p5), replica_groups=[1,16]<=[16]
+%x7 = f32[4]{0} all-reduce-done(%x6)
+"""
+
+
+def test_collective_bytes_parser():
+    out = ra.collective_bytes(FAKE_HLO)
+    # all-gather: result / participants = operand shard
+    assert out["all-gather_bytes"] == 128 * 1024 * 2 / 8
+    # all-reduce: result (incl. -start result half, not -done)
+    assert out["all-reduce_bytes"] == 512 * 4 + 4 * 4
+    # reduce-scatter: result * participants = unscattered operand
+    assert out["reduce-scatter_bytes"] == 64 * 32 * 4 * 8
+    assert out["all-to-all_bytes"] == 16 * 16 * 2
+    assert out["collective-permute_bytes"] == 100 * 8
+    assert out["total_count"] == 6
+
+
+def test_roofline_terms_math():
+    t = ra.roofline(
+        hlo_flops_per_device=197e12 * 0.5,  # half a second of compute
+        hlo_bytes_per_device=819e9 * 0.25,
+        collective_bytes_per_device=50e9 * 0.1,
+        chips=256,
+        model_flops=197e12 * 0.5 * 256 * 0.8,
+    )
+    assert np.isclose(t.compute_s, 0.5)
+    assert np.isclose(t.memory_s, 0.25)
+    assert np.isclose(t.collective_s, 0.1)
+    assert t.dominant == "compute"
+    assert np.isclose(t.step_s, 0.5)
+    assert np.isclose(t.useful_ratio, 0.8)
+    assert np.isclose(t.mfu, 0.8)
+
+
+def test_model_flops_formulas():
+    cfg = get_config("arctic-480b")
+    shape = SHAPES["train_4k"]
+    mf = ra.model_flops_train(cfg, shape)
+    # MoE uses ACTIVE params
+    assert mf == 6.0 * cfg.active_param_count() * shape.global_batch * shape.seq_len
+    assert cfg.active_param_count() < cfg.param_count() / 10
