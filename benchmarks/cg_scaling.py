@@ -62,10 +62,13 @@ def run(shard_counts=SHARD_COUNTS) -> list[dict]:
     return rows
 
 
-def main():
+def main(smoke: bool = False):
+    from benchmarks.common import set_smoke
+
+    set_smoke(smoke)
     from repro.energy.report import STATIC_DYNAMIC_COLUMNS, fmt_table
 
-    rows = run()
+    rows = run(shard_counts=(1, 2, 4) if smoke else SHARD_COUNTS)
     weak7 = [r for r in rows if r["stencil"] == "7pt" and r["mode"] == "weak"]
     cols = [
         ("n_shards", "#GPUs"), ("library", "library"), ("time", "time (s)"),
@@ -76,9 +79,10 @@ def main():
     print(fmt_table(weak7, STATIC_DYNAMIC_COLUMNS, "Table 4 analog"))
     w27 = [r for r in rows if r["stencil"] == "27pt" and r["mode"] == "weak"]
     print(fmt_table(w27, STATIC_DYNAMIC_COLUMNS, "Table 5 analog"))
-    sel = {r["library"]: r for r in weak7 if r["n_shards"] == 64}
+    top = max(r["n_shards"] for r in weak7)
+    sel = {r["library"]: r for r in weak7 if r["n_shards"] == top}
     print(
-        "7pt weak @64 energy/iter ratios vs BCMGX-hs: "
+        f"7pt weak @{top} energy/iter ratios vs BCMGX-hs: "
         + ", ".join(
             f"{k}: {v['de_per_iter']/sel['BCMGX-hs']['de_per_iter']:.2f}x"
             for k, v in sel.items()

@@ -28,6 +28,15 @@ OUT = os.path.join(REPO, "runs", "bench")
 
 SHARD_COUNTS = (1, 2, 4, 8, 16, 32, 64)  # the paper's GPU counts
 
+_SMOKE = False
+
+
+def set_smoke(on: bool):
+    """Smoke-mode runs write '<name>_smoke.csv' so toy-size rows never
+    overwrite the canonical full-size result ledger."""
+    global _SMOKE
+    _SMOKE = bool(on)
+
 
 def ensure_out():
     os.makedirs(OUT, exist_ok=True)
@@ -91,6 +100,8 @@ def write_results(name: str, rows: list[dict]):
     from repro.energy.report import write_csv
 
     ensure_out()
+    if _SMOKE:
+        name = f"{name}_smoke"
     path = os.path.join(OUT, f"{name}.csv")
     write_csv(path, rows)
     return path

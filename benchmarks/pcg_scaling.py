@@ -91,27 +91,34 @@ def modeled(iters_by_lib: dict, shard_counts=SHARD_COUNTS) -> list[dict]:
     return rows
 
 
-def run(exec_side: int = 20, exec_shards: int = 4):
+def run(exec_side: int = 20, exec_shards: int = 4, shard_counts=SHARD_COUNTS):
     ex = executed(exec_side, exec_shards)
     iters_by_lib = {
         "BCMGX": next(r["iters"] for r in ex if r["library"] == "BCMGX-analog"),
         "AmgX": next(r["iters"] for r in ex if r["library"] == "AmgX-analog"),
     }
-    mo = modeled(iters_by_lib)
+    mo = modeled(iters_by_lib, shard_counts=shard_counts)
     write_results("pcg_executed", ex)
     return ex, mo
 
 
-def main():
+def main(smoke: bool = False):
+    from benchmarks.common import set_smoke
+
+    set_smoke(smoke)
     from repro.energy.report import fmt_table
 
-    ex, mo = run()
+    if smoke:
+        ex, mo = run(exec_side=10, exec_shards=2, shard_counts=(1, 2))
+    else:
+        ex, mo = run()
     cols_ex = [
         ("library", "library"), ("n_shards", "#GPUs"), ("iters", "iters"),
         ("setup_s", "setup (s)"), ("solve_s", "solve (s)"),
         ("relres", "relres"), ("de_total", "dyn E (J)"),
     ]
-    print(fmt_table(ex, cols_ex, "Fig 11 analog (EXECUTED, CPU, 4 shards)"))
+    shards = ex[0]["n_shards"] if ex else 0
+    print(fmt_table(ex, cols_ex, f"Fig 11 analog (EXECUTED, CPU, {shards} shards)"))
     weak = [r for r in mo if r["mode"] == "weak"]
     cols = [
         ("n_shards", "#GPUs"), ("library", "library"), ("iters", "iters"),

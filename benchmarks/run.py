@@ -1,16 +1,21 @@
 """Run every benchmark (one per paper table/figure) and print the tables.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast | --smoke]
 
 Modeled scaling tables evaluate at the paper's sizes through the roofline
 cost/energy model (no allocation); executed tables run real solves in
 multi-device subprocesses at CPU-tractable scales. See benchmarks/common.py
 for the modeled/executed distinction.
+
+``--smoke`` executes EVERY benchmark at toy size (tiny shard counts,
+shrunken executed problems) so the perf scripts cannot rot silently — CI
+runs this mode on every push.
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
@@ -21,6 +26,7 @@ BENCHES = [
     ("cg_scaling (Fig 7-10, Tab 4-5)", "benchmarks.cg_scaling"),
     ("pcg_scaling (Fig 11-16, Tab 6)", "benchmarks.pcg_scaling"),
     ("suitesparse (Tab 7-8)", "benchmarks.suitesparse"),
+    ("hotpath_fusion (§Perf)", "benchmarks.hotpath_fusion"),
     ("roofline_table (§Roofline)", "benchmarks.roofline_table"),
 ]
 
@@ -29,17 +35,24 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="skip the executed (subprocess) benchmarks")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run every benchmark at toy size (CI rot check)")
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
 
     import importlib
 
+    if args.smoke:
+        from benchmarks.common import set_smoke
+
+        set_smoke(True)
     failures = []
     for title, modname in BENCHES:
         if args.only and args.only not in modname:
             continue
-        if args.fast and modname in (
-            "benchmarks.pcg_scaling", "benchmarks.suitesparse"
+        if args.fast and not args.smoke and modname in (
+            "benchmarks.pcg_scaling", "benchmarks.suitesparse",
+            "benchmarks.hotpath_fusion",
         ):
             print(f"=== {title}: SKIPPED (--fast) ===\n")
             continue
@@ -47,7 +60,10 @@ def main(argv=None):
         t0 = time.perf_counter()
         try:
             mod = importlib.import_module(modname)
-            mod.main()
+            kw = {}
+            if args.smoke and "smoke" in inspect.signature(mod.main).parameters:
+                kw["smoke"] = True
+            mod.main(**kw)
             print(f"[{title}] done in {time.perf_counter()-t0:.1f}s", flush=True)
         except Exception as e:  # pragma: no cover
             import traceback

@@ -16,11 +16,12 @@ MATRICES = list(TABLE1)
 SHARDS = (1, 2, 4)
 
 
-def run(scale: float = 0.01, maxiter: int = 100) -> list[dict]:
+def run(scale: float = 0.01, maxiter: int = 100, matrices=MATRICES,
+        shards=SHARDS) -> list[dict]:
     rows = []
     for op in ("spmv", "cg"):
-        for name in MATRICES:
-            for s in SHARDS:
+        for name in matrices:
+            for s in shards:
                 try:
                     out = run_solver_subprocess(
                         ["--problem", name, "--scale", str(scale), "--op", op,
@@ -54,10 +55,18 @@ def run(scale: float = 0.01, maxiter: int = 100) -> list[dict]:
     return rows
 
 
-def main():
+def main(smoke: bool = False):
+    from benchmarks.common import set_smoke
+
+    set_smoke(smoke)
     from repro.energy.report import fmt_table
 
-    rows = run()
+    rows = run(
+        scale=0.004 if smoke else 0.01,
+        maxiter=30 if smoke else 100,
+        matrices=MATRICES[:1] if smoke else MATRICES,
+        shards=(1, 2) if smoke else SHARDS,
+    )
     for table, title in (("7", "Table 7 analog: SpMV"), ("8", "Table 8 analog: CG")):
         sel = [r for r in rows if r.get("table") == table and "error" not in r]
         cols = [

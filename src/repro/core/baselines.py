@@ -110,6 +110,7 @@ def make_naive_solver(
         mesh=mesh,
         in_specs=(mat_specs, pre.specs, P("shards", None), P("shards", None)),
         out_specs=(P("shards", None), P(), P(), P()),
+        check_rep=False,  # jax 0.4.37: no replication rule for while_loop
     )
 
     @jax.jit

@@ -38,6 +38,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.partition import DistELL
 from repro.core.spmv import dist_specs, local_block, spmv_shard
 from repro.core.vectors import fused_blocks, fused_dots, pdot
+from repro.kernels import dispatch as kd
 
 
 class Preconditioner(NamedTuple):
@@ -53,6 +54,10 @@ class Preconditioner(NamedTuple):
     specs: Any  # matching PartitionSpec pytree
     apply: Callable[[Any, jax.Array, str], jax.Array]
     localize: Callable[[Any], Any] = None  # type: ignore[assignment]
+    # True for the identity preconditioner: lets the solver bodies skip the
+    # apply AND reuse the fused-kernel residual norm for (r, z) — one fewer
+    # full-vector sweep per iteration.
+    is_identity: bool = False
 
 
 def _default_localize(data):
@@ -63,7 +68,8 @@ def _default_localize(data):
 
 def identity_precond() -> Preconditioner:
     return Preconditioner(
-        data=(), specs=(), apply=lambda data, r, axis: r, localize=lambda d: d
+        data=(), specs=(), apply=lambda data, r, axis: r,
+        localize=lambda d: d, is_identity=True,
     )
 
 
@@ -89,8 +95,15 @@ class SolveResult:
 # ---------------------------------------------------------------------------
 
 
-def _hs_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis):
-    """Hestenes–Stiefel PCG; 2 all-reduces/iter (one fused)."""
+def _hs_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis, ops):
+    """Hestenes–Stiefel PCG; 2 all-reduces/iter (one fused).
+
+    Hot-loop vector work runs through the kernel dispatch ``ops``: with the
+    identity preconditioner each iteration is 3 full-vector HBM sweeps
+    outside the SpMV (p·w dot; fused x/r update + ||r||²; p update) instead
+    of the ~6 of the op-by-op formulation. A non-trivial preconditioner adds
+    one sweep for the fused (r·z, r·r) reduction.
+    """
     r = b - A(x0)
     z = pre.apply(pdata, r, axis)
     d0 = fused_dots([(r, z), (r, r), (b, b)], axis)
@@ -103,16 +116,23 @@ def _hs_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis):
 
     def body(c):
         i, x, r, z, p, rz, rr = c
-        w = A(p)
-        pw = pdot(p, w, axis)  # all-reduce 1
-        alpha = rz / pw
-        x = x + alpha * p
-        r = r - alpha * w
-        z = pre.apply(pdata, r, axis)
-        d = fused_dots([(r, z), (r, r)], axis)  # all-reduce 2 (fused)
-        rz_new, rr = d[0], d[1]
-        beta = rz_new / rz
-        p = z + beta * p
+        with kd.ledger_section("iteration"):
+            w = A(p)
+            pw = lax.psum(ops.fused_dots_n([(p, w)])[0], axis)  # all-reduce 1
+            alpha = rz / pw
+            # x += alpha p ; r -= alpha w ; local r'.r' — ONE pass
+            x, r, rr_loc = ops.fused_axpy2_dots(alpha, p, x, -alpha, w, r)
+            if pre.is_identity:
+                z = r
+                rr = lax.psum(rr_loc[0], axis)  # all-reduce 2
+                rz_new = rr
+            else:
+                z = pre.apply(pdata, r, axis)
+                rz_loc = ops.fused_dots_n([(r, z)])[0]
+                d = lax.psum(jnp.stack([rz_loc, rr_loc[0]]), axis)  # AR 2 (fused)
+                rz_new, rr = d[0], d[1]
+            beta = rz_new / rz
+            p = ops.axpy(beta, p, z)
         return (i + 1, x, r, z, p, rz_new, rr)
 
     i0 = jnp.asarray(0, jnp.int32)
@@ -120,11 +140,14 @@ def _hs_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis):
     return c[1], c[0], c[6], bb
 
 
-def _fcg_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis):
+def _fcg_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis, ops):
     """Single-synchronization (communication-reduced flexible) CG.
 
     Chronopoulos–Gear two-term recurrence: ONE fused all-reduce per
-    iteration.
+    iteration. Hot-loop vector work runs through the kernel dispatch
+    ``ops`` in 3 full-vector HBM sweeps outside the SpMV: the fused triple
+    dot (reads {r, u, w} once — u aliases r under the identity
+    preconditioner), the fused p/s update, and the fused x/r update.
     """
     r = b - A(x0)
     u = pre.apply(pdata, r, axis)
@@ -144,16 +167,17 @@ def _fcg_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis):
 
     def body(c):
         i, x, r, p, s, gamma, alpha, rr = c
-        u = pre.apply(pdata, r, axis)
-        w = A(u)
-        d = fused_dots([(r, u), (w, u), (r, r)], axis)  # the ONE all-reduce
-        gamma_new, delta, rr = d[0], d[1], d[2]
-        beta = gamma_new / gamma
-        alpha_new = gamma_new / (delta - beta * gamma_new / alpha)
-        p = u + beta * p
-        s = w + beta * s
-        x = x + alpha_new * p
-        r = r - alpha_new * s
+        with kd.ledger_section("iteration"):
+            u = r if pre.is_identity else pre.apply(pdata, r, axis)
+            w = A(u)
+            d = lax.psum(  # the ONE all-reduce
+                ops.fused_dots_n([(r, u), (w, u), (r, r)]), axis
+            )
+            gamma_new, delta, rr = d[0], d[1], d[2]
+            beta = gamma_new / gamma
+            alpha_new = gamma_new / (delta - beta * gamma_new / alpha)
+            p, s = ops.fused_axpy2(beta, p, u, beta, s, w)  # p=u+βp ; s=w+βs
+            x, r = ops.fused_axpy2(alpha_new, p, x, -alpha_new, s, r)
         return (i + 1, x, r, p, s, gamma_new, alpha_new, rr)
 
     i0 = jnp.asarray(1, jnp.int32)
@@ -218,6 +242,8 @@ def _sstep_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, s, axis):
         (lambda v: lax.pcast(v, (axis,), to="varying"))
         if hasattr(lax, "pcast")
         else (lambda v: lax.pvary(v, (axis,)))
+        if hasattr(lax, "pvary")
+        else (lambda v: v)  # check_rep=False: no replication tracking needed
     )
     Q0 = _pvary(jnp.zeros((R, s), dt))
     c = lax.while_loop(cond, body, (i0, x0, r, Q0, Q0, eye, bb))
@@ -243,6 +269,7 @@ def make_solver(
     maxiter: int = 100,
     s: int = 2,
     axis: str = "shards",
+    kernels: str | None = None,
 ):
     """Build a jitted distributed solver: (b, x0) -> SolveResult.
 
@@ -255,7 +282,14 @@ def make_solver(
     body = _BODIES[variant]
     kw = dict(tol=tol, maxiter=maxiter, axis=axis)
     if variant == "sstep":
+        if kernels not in (None, "auto"):
+            raise ValueError(
+                "kernels= only routes the hs/fcg bodies; the sstep body "
+                "does its vector work in blocked Gram algebra"
+            )
         kw["s"] = s
+    else:
+        kw["ops"] = kd.ops_for(kernels)
 
     mat_specs = dist_specs(mat)
 
@@ -273,6 +307,7 @@ def make_solver(
         mesh=mesh,
         in_specs=(mat_specs, pre.specs, P("shards", None), P("shards", None)),
         out_specs=(P("shards", None), P(), P(), P()),
+        check_rep=False,  # jax 0.4.37: no replication rule for while_loop
     )
 
     @jax.jit
@@ -293,6 +328,7 @@ def make_solver_fn(
     maxiter: int = 100,
     s: int = 2,
     axis: str = "shards",
+    kernels: str | None = None,
 ):
     """Lowerable variant: returns jitted fn(mat, b, x0) with the matrix as a
     runtime argument — accepts ShapeDtypeStruct trees, which is what the
@@ -306,7 +342,14 @@ def make_solver_fn(
     body = _BODIES[variant]
     kw = dict(tol=tol, maxiter=maxiter, axis=axis)
     if variant == "sstep":
+        if kernels not in (None, "auto"):
+            raise ValueError(
+                "kernels= only routes the hs/fcg bodies; the sstep body "
+                "does its vector work in blocked Gram algebra"
+            )
         kw["s"] = s
+    else:
+        kw["ops"] = kd.ops_for(kernels)
     mat_specs = dist_specs(mat_like)
     localize = pre.localize or _default_localize
 
@@ -322,6 +365,7 @@ def make_solver_fn(
         mesh=mesh,
         in_specs=(mat_specs, pre.specs, P("shards", None), P("shards", None)),
         out_specs=(P("shards", None), P(), P(), P()),
+        check_rep=False,  # jax 0.4.37: no replication rule for while_loop
     )
 
     @jax.jit

@@ -1,4 +1,4 @@
-"""Matrix-free distributed stencil CG (beyond-paper optimization, §Perf).
+"""Matrix-free distributed stencil CG (beyond-paper optimization).
 
 The paper's benchmarks are structured 7/27-point Poisson stencils stored in
 CSR; on TPU the roofline-optimal formulation drops the matrix entirely:
@@ -6,13 +6,22 @@ y = A x becomes shift-and-add on the local (nz_loc, ny, nx) grid, and the
 halo exchange shrinks to ONE boundary plane per neighbor. Per SpMV this
 removes ALL matrix-value and column-index HBM traffic:
 
-    ELL 7pt:  7*(8+4) B/row matrix traffic + 12 B/row vector r/w  = 96 B/row
-    matfree:  ~16 B/row (read x once + write y once, f64)          ~6x less
+    format        matrix B/row   vector B/row   total B/row   vs matfree
+    ELL 7pt       7*(8+4) = 84   ~16            ~100          ~6x
+    ELL 27pt      27*(8+4)= 324  ~16            ~340          ~21x
+    matrix-free   0              ~16            ~16           1x
 
-(27pt: 27*(8+4)+12 = 336 B/row vs the same ~16 B/row: ~21x.) The same idea
-with f32 halves it again. The single-node kernel-level version of this
-operator is kernels/spmv_stencil.py (Pallas, VMEM-tiled); this module is the
-shard_map-distributed form used by the production-mesh dry-run and solvers.
+(f32 halves the matrix-free number again.) The single-node kernel-level
+version of this operator is kernels/spmv_stencil.py (Pallas, VMEM-tiled);
+this module is the shard_map-distributed form used by the production-mesh
+dry-run and solvers.
+
+The local slab SpMV dispatches through ``kernels/dispatch.py``: on TPU the
+VMEM-tiled ``stencil_spmv_halo`` Pallas kernel runs the whole local
+operator in one call (halo planes received via ``ppermute`` feed the
+kernel's prev/next boundary inputs); on CPU the jnp reference executes the
+identical math, and tests force ``kernels='interpret'`` to validate the
+kernel code path.
 """
 
 from __future__ import annotations
@@ -27,31 +36,20 @@ from repro.core.cg import (
     _BODIES,
     identity_precond,
 )
+from repro.kernels import dispatch as kd
 
 
-def _shift_yx(x, dy, dx):
-    """Zero-fill shift along (y, x) of a (nz, ny, nx) block."""
-    nz, ny, nx = x.shape
-    out = x
-    if dy:
-        pad = ((0, 0), (dy, 0), (0, 0)) if dy > 0 else ((0, 0), (0, -dy), (0, 0))
-        out = jnp.pad(out, pad)
-        out = out[:, :ny, :] if dy > 0 else out[:, -dy : ny - dy, :]
-    if dx:
-        pad = ((0, 0), (0, 0), (dx, 0)) if dx > 0 else ((0, 0), (0, 0), (0, -dx))
-        out = jnp.pad(out, pad)
-        out = out[:, :, :nx] if dx > 0 else out[:, :, -dx : nx - dx]
-    return out
-
-
-def make_matvec(p, n_shards: int, axis: str = "shards"):
+def make_matvec(p, n_shards: int, axis: str = "shards",
+                kernels: str | None = None):
     """Per-shard matrix-free stencil operator (inside shard_map).
 
     v is the local flattened slab (nz_loc * ny * nx,). Requires a uniform
-    slab partition (p.nz % n_shards == 0).
+    slab partition (p.nz % n_shards == 0). ``kernels`` selects the SpMV
+    backend (None = auto; see kernels/dispatch.py).
     """
     assert p.nz % n_shards == 0, "matrix-free path needs uniform slabs"
     nz_loc = p.nz // n_shards
+    ops = kd.ops_for(kernels)
 
     fwd = tuple((j, j + 1) for j in range(n_shards - 1))
     bwd = tuple((j, j - 1) for j in range(1, n_shards))
@@ -64,21 +62,9 @@ def make_matvec(p, n_shards: int, axis: str = "shards"):
         else:
             prev = jnp.zeros_like(x3[0])
             nxt = jnp.zeros_like(x3[0])
-        ext = jnp.concatenate([prev[None], x3, nxt[None]], axis=0)
-        c = ext[1:-1]
-        zm, zp = ext[:-2], ext[2:]
-        if p.stencil == "7pt":
-            ax, ay, az = p.aniso
-            y = 2.0 * (ax + ay + az) * c
-            y = y - ax * (_shift_yx(c, 0, 1) + _shift_yx(c, 0, -1))
-            y = y - ay * (_shift_yx(c, 1, 0) + _shift_yx(c, -1, 0))
-            y = y - az * (zm + zp)
-        else:  # 27pt
-            s9 = jnp.zeros_like(ext)
-            for dy in (-1, 0, 1):
-                for dx in (-1, 0, 1):
-                    s9 = s9 + _shift_yx(ext, dy, dx)
-            y = 27.0 * c - (s9[:-2] + s9[1:-1] + s9[2:])
+        y = ops.stencil_matvec(
+            x3, prev, nxt, stencil=p.stencil, aniso=tuple(p.aniso)
+        )
         return y.reshape(-1)
 
     return A
@@ -94,11 +80,14 @@ def make_stencil_solver_fn(
     maxiter: int = 100,
     s: int = 2,
     axis: str = "shards",
+    kernels: str | None = None,
 ):
     """Jitted matrix-free distributed CG: (b, x0) -> SolveResult.
 
     b/x0: (n_shards, R) with R = (nz/n_shards) * ny * nx. Accepts
-    ShapeDtypeStructs (dry-run) or real arrays (execution).
+    ShapeDtypeStructs (dry-run) or real arrays (execution). ``kernels``
+    selects the hot-path backend for both the slab SpMV and the fused
+    vector ops (None = auto).
     """
     from jax.experimental.shard_map import shard_map
 
@@ -107,7 +96,9 @@ def make_stencil_solver_fn(
     kw = dict(tol=tol, maxiter=maxiter, axis=axis)
     if variant == "sstep":
         kw["s"] = s
-    A = make_matvec(p, n_shards, axis)
+    else:
+        kw["ops"] = kd.ops_for(kernels)
+    A = make_matvec(p, n_shards, axis, kernels=kernels)
 
     def fn(b, x0):
         x, iters, rr, bb = body(A, pre, (), b[0], x0[0], **kw)
@@ -118,6 +109,7 @@ def make_stencil_solver_fn(
         mesh=mesh,
         in_specs=(P("shards", None), P("shards", None)),
         out_specs=(P("shards", None), P(), P(), P()),
+        check_rep=False,  # jax 0.4.37: no replication rule for while_loop
     )
 
     @jax.jit

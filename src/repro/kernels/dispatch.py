@@ -1,0 +1,263 @@
+"""Backend-aware kernel dispatch for the solver hot path.
+
+The repo carries three implementations of every hot-path op:
+
+* ``pallas``    — the compiled Pallas TPU kernel (VMEM tiling, fused HBM
+  passes). Only meaningful on a TPU backend; f64 calls fall back to ``jnp``
+  (Mosaic has no f64).
+* ``interpret`` — the same Pallas kernel run in interpret mode: exact kernel
+  semantics on CPU, used by tests to validate the TPU code path.
+* ``jnp``       — the pure-jnp reference (kernels/ref.py oracles). The
+  default on CPU/GPU, where XLA fusion already does the right thing.
+
+Selection: explicit argument > ``set_backend``/``use_backend`` override >
+``REPRO_KERNELS`` env var > auto (TPU -> pallas, else jnp). Resolution
+happens at TRACE time — a jitted solver bakes in whichever backend was
+active when it was traced; build a fresh solver to switch.
+
+Solvers obtain an :class:`OpSet` via :func:`ops_for` and call ops through
+it. Every op invocation is recorded in the active :class:`SweepLedger`
+(enabled with :func:`record_sweeps`), tagged with the current
+:func:`ledger_section` — since ``lax.while_loop`` traces its body exactly
+once, tracing a solver under the ledger yields the per-iteration HBM
+sweep count directly. That is the accounting ``benchmarks/hotpath_fusion.py``
+and the acceptance tests check: each vector op here streams its operands in
+ONE pass, so "calls to vector ops per iteration" == "full-vector HBM sweeps
+per iteration".
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.fused_reductions import (
+    fused_axpy,
+    fused_axpy2,
+    fused_axpy2_dots,
+    fused_dots_n,
+)
+from repro.kernels.spmv_stencil import pick_bz, stencil_spmv_halo
+
+BACKENDS = ("pallas", "interpret", "jnp")
+ENV_VAR = "REPRO_KERNELS"
+
+# Ops that stream full-length vectors exactly once per call (1 sweep each).
+VECTOR_OPS = ("axpy", "fused_axpy2", "fused_axpy2_dots", "fused_dots_n")
+# The SpMV is accounted separately (its traffic is the matrix term).
+SPMV_OPS = ("stencil_matvec",)
+
+_override: str | None = None
+
+
+def available_backend() -> str:
+    """Auto resolution from the JAX backend."""
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def resolve(choice: str | None = None) -> str:
+    """Resolve a backend name: explicit > override > env > auto.
+
+    ``None``/``''``/``'auto'`` at any level defers to the next one, so an
+    explicit ``kernels='auto'`` still honors ``use_backend``/``REPRO_KERNELS``.
+    """
+    for cand in (choice, _override, os.environ.get(ENV_VAR)):
+        if cand is None:
+            continue
+        cand = cand.strip().lower()
+        if cand in ("", "auto"):
+            continue  # defer to the next precedence level
+        if cand not in BACKENDS:
+            raise ValueError(
+                f"unknown kernel backend {cand!r}; want one of {BACKENDS} or 'auto'"
+            )
+        return cand
+    return available_backend()
+
+
+def backend() -> str:
+    """The currently active backend (no explicit choice)."""
+    return resolve(None)
+
+
+def set_backend(name: str | None) -> None:
+    """Process-wide override (None restores env/auto resolution)."""
+    global _override
+    if name is not None and name.strip().lower() not in BACKENDS + ("auto",):
+        raise ValueError(f"unknown kernel backend {name!r}")
+    _override = name
+
+
+@contextlib.contextmanager
+def use_backend(name: str | None):
+    """Scoped override: ``with use_backend('interpret'): make_solver(...)``."""
+    global _override
+    prev = _override
+    set_backend(name)
+    try:
+        yield
+    finally:
+        _override = prev
+
+
+# ---------------------------------------------------------------------------
+# Sweep ledger (tracing-time accounting)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SweepLedger:
+    """Counts op calls per section during tracing.
+
+    ``ops[section]`` maps op name -> number of calls; ``entries[section]``
+    counts how many times the section was entered (normally 1 per trace —
+    used to normalize if a body is retraced).
+    """
+
+    ops: dict = dataclasses.field(default_factory=dict)
+    entries: dict = dataclasses.field(default_factory=dict)
+
+    def count(self, section: str, name: str):
+        self.ops.setdefault(section, Counter())[name] += 1
+
+    def enter(self, section: str):
+        self.entries[section] = self.entries.get(section, 0) + 1
+
+    def vector_sweeps(self, section: str = "iteration") -> float:
+        """Full-vector HBM sweeps per section entry (excludes the SpMV)."""
+        c = self.ops.get(section, Counter())
+        n = max(self.entries.get(section, 1), 1)
+        return sum(v for k, v in c.items() if k in VECTOR_OPS) / n
+
+    def spmv_calls(self, section: str = "iteration") -> float:
+        c = self.ops.get(section, Counter())
+        n = max(self.entries.get(section, 1), 1)
+        return sum(v for k, v in c.items() if k in SPMV_OPS) / n
+
+
+_ledger: SweepLedger | None = None
+_section: str = "default"
+
+
+@contextlib.contextmanager
+def record_sweeps():
+    """Activate a ledger; trace (lower/eval_shape) solvers inside."""
+    global _ledger
+    prev = _ledger
+    _ledger = SweepLedger()
+    try:
+        yield _ledger
+    finally:
+        _ledger = prev
+
+
+@contextlib.contextmanager
+def ledger_section(name: str):
+    """Tag ops traced inside with ``name`` (e.g. 'iteration')."""
+    global _section
+    prev = _section
+    _section = name
+    if _ledger is not None:
+        _ledger.enter(name)
+    try:
+        yield
+    finally:
+        _section = prev
+
+
+def _record(name: str):
+    if _ledger is not None:
+        _ledger.count(_section, name)
+
+
+# ---------------------------------------------------------------------------
+# Op set
+# ---------------------------------------------------------------------------
+
+
+def _pallas_mode(backend_name: str, dtype) -> str:
+    """Compiled-pallas f64 calls fall back to jnp (Mosaic has no f64)."""
+    if backend_name == "pallas" and jnp.dtype(dtype) == jnp.dtype("float64"):
+        return "jnp"
+    return backend_name
+
+
+class OpSet:
+    """Hot-path ops bound to one backend. Obtain via :func:`ops_for`."""
+
+    def __init__(self, backend_name: str, *, chunk: int = 65536):
+        assert backend_name in BACKENDS
+        self.backend = backend_name
+        self.chunk = chunk
+
+    def __repr__(self):
+        return f"OpSet(backend={self.backend!r})"
+
+    # -- fused vector ops (1 HBM sweep each) --------------------------------
+
+    def axpy(self, a, x, y):
+        """a*x + y."""
+        _record("axpy")
+        b = _pallas_mode(self.backend, x.dtype)
+        if b == "jnp":
+            return ref.fused_axpy_ref(a, x, y)
+        return fused_axpy(a, x, y, chunk=self.chunk,
+                          interpret=(b == "interpret"))
+
+    def fused_axpy2(self, a1, x1, y1, a2, x2, y2):
+        """(a1*x1 + y1, a2*x2 + y2) in one pass."""
+        _record("fused_axpy2")
+        b = _pallas_mode(self.backend, x1.dtype)
+        if b == "jnp":
+            return ref.fused_axpy2_ref(a1, x1, y1, a2, x2, y2)
+        return fused_axpy2(a1, x1, y1, a2, x2, y2, chunk=self.chunk,
+                           interpret=(b == "interpret"))
+
+    def fused_axpy2_dots(self, a1, x1, y1, a2, x2, y2):
+        """(a1*x1+y1, a2*x2+y2, local [o2.o2]) in one pass."""
+        _record("fused_axpy2_dots")
+        b = _pallas_mode(self.backend, x1.dtype)
+        if b == "jnp":
+            return ref.fused_axpy2_dots_ref(a1, x1, y1, a2, x2, y2)
+        return fused_axpy2_dots(a1, x1, y1, a2, x2, y2, chunk=self.chunk,
+                                interpret=(b == "interpret"))
+
+    def fused_dots_n(self, pairs):
+        """Local partial dots [(x, y), ...] -> (len(pairs),), one pass."""
+        _record("fused_dots_n")
+        b = _pallas_mode(self.backend, pairs[0][0].dtype)
+        if b == "jnp":
+            return ref.fused_dots_n_ref(pairs)
+        return fused_dots_n(pairs, chunk=self.chunk,
+                            interpret=(b == "interpret"))
+
+    # -- SpMV ---------------------------------------------------------------
+
+    def stencil_matvec(self, x3, prev_halo, next_halo, *, stencil="7pt",
+                       aniso=(1.0, 1.0, 1.0)):
+        """Local-slab matrix-free SpMV with explicit z-halo planes."""
+        _record("stencil_matvec")
+        b = _pallas_mode(self.backend, x3.dtype)
+        if b == "jnp":
+            return ref.stencil_halo_ref(
+                x3, prev_halo, next_halo, stencil=stencil, aniso=aniso
+            )
+        return stencil_spmv_halo(
+            x3, prev_halo, next_halo, stencil=stencil, aniso=aniso,
+            bz=pick_bz(x3.shape[0]), interpret=(b == "interpret"),
+        )
+
+
+def ops_for(kernels: str | None = None, *, chunk: int = 65536) -> OpSet:
+    """Resolve a backend choice into a bound :class:`OpSet`.
+
+    ``kernels``: None/'auto' (resolve from override/env/backend) or one of
+    ``BACKENDS``. Solver factories thread their ``kernels=`` argument here.
+    """
+    return OpSet(resolve(kernels), chunk=chunk)

@@ -1,11 +1,32 @@
-"""Fused multi-dot Pallas kernel: [p·w, r·r, p·r] in ONE pass over HBM.
+"""Fused vector-op Pallas kernels: the CG hot path in minimal HBM passes.
 
-CG's per-iteration scalar work reads the same vectors several times when the
-dots are computed separately (3 HBM passes). This kernel computes all three
-partial sums in a single streaming pass (chunked grid, SMEM accumulation) —
-the kernel-level counterpart of the algorithm-level reduction fusion in
-core/vectors.fused_dots. On the CG roofline this removes ~2 vector reads per
-iteration from the memory term.
+CG's per-iteration scalar + vector work reads the same vectors several times
+when expressed as separate ops (dots, axpys). The kernels here stream every
+operand exactly once per call (chunked grid, SMEM scalar accumulation), so
+each call is ONE full-vector HBM sweep:
+
+* ``fused_dots_n``   — N inner products in one pass. Duplicate operands and
+  duplicate pairs are deduplicated statically, so e.g. the fcg triple
+  [(r,u), (w,u), (r,r)] with u==r reads only {r, w} and multiplies once per
+  unique pair.
+* ``fused_axpy``     — a*x + y.
+* ``fused_axpy2``    — two independent axpys (the p/s and x/r update pairs)
+  in one pass.
+* ``fused_axpy2_dots`` — the CG update step ``x += a1*p; r -= a1*w`` PLUS
+  the follow-up reduction ``r_new . r_new`` in the SAME pass: the freshly
+  computed r chunk is still in VMEM when the partial dot accumulates, so the
+  re-read of r that a separate dot would cost disappears from HBM traffic.
+* ``fused_dots3``    — legacy fixed-arity [p.w, r.r, p.r] wrapper (kept for
+  API stability; now handles any length, no shape restriction).
+
+Arbitrary lengths dispatch unconditionally: the grid covers the vector in
+lane-aligned chunks and the (possibly ragged) final block is masked inside
+the kernel — reductions ignore out-of-range lanes, out-of-range output
+writes are clipped by Pallas. No host-side padding copies, so the HBM
+traffic really is one read per operand + one write per output. Scalars
+(alpha/beta) arrive as a small SMEM operand so traced loop-carried values
+work. Accumulation happens in the input dtype, matching the jnp oracles in
+``kernels/ref.py``.
 """
 
 from __future__ import annotations
@@ -14,25 +35,191 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _dots_kernel(p_ref, w_ref, r_ref, out_ref):
-    i = pl.program_id(0)
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
 
-    @pl.when(i == 0)
-    def _init():
-        out_ref[0] = jnp.zeros((), out_ref.dtype)
-        out_ref[1] = jnp.zeros((), out_ref.dtype)
-        out_ref[2] = jnp.zeros((), out_ref.dtype)
 
-    p = p_ref[...]
-    w = w_ref[...]
-    r = r_ref[...]
-    out_ref[0] += jnp.sum(p * w)
-    out_ref[1] += jnp.sum(r * r)
-    out_ref[2] += jnp.sum(p * r)
+def _chunking(n: int, chunk: int) -> tuple[int, int]:
+    """(effective chunk, grid size): lane-aligned, ragged tail allowed."""
+    chunk_eff = min(chunk, _round_up(n, 128))
+    return chunk_eff, -(-n // chunk_eff)
+
+
+def _valid_mask(i, chunk: int, n: int):
+    """(chunk,) bool mask of in-range lanes for grid step ``i``.
+
+    TPU Mosaic requires >=2-D iota, hence the (1, chunk) detour.
+    """
+    lane = lax.broadcasted_iota(jnp.int32, (1, chunk), 1).reshape(chunk)
+    return (i * chunk + lane) < n
+
+
+# ---------------------------------------------------------------------------
+# fused_dots_n — N inner products, one pass, deduplicated reads
+# ---------------------------------------------------------------------------
+
+
+def _dedup_pairs(pairs):
+    """Static dedup: unique operand arrays, unique (i, j) products, and the
+    map from output slot -> unique product."""
+    uniq: list = []
+    ids: dict[int, int] = {}
+
+    def idx(a):
+        if id(a) not in ids:
+            ids[id(a)] = len(uniq)
+            uniq.append(a)
+        return ids[id(a)]
+
+    out_map = []
+    prod_ids: dict[tuple[int, int], int] = {}
+    prods = []
+    for x, y in pairs:
+        key = tuple(sorted((idx(x), idx(y))))
+        if key not in prod_ids:
+            prod_ids[key] = len(prods)
+            prods.append(key)
+        out_map.append(prod_ids[key])
+    return uniq, tuple(prods), tuple(out_map)
+
+
+def fused_dots_n(pairs, *, chunk: int = 65536, interpret: bool = False) -> jax.Array:
+    """Local partial dots for ``pairs = [(x, y), ...]`` — ONE HBM pass.
+
+    Returns a (len(pairs),) vector of LOCAL sums (callers psum once in the
+    distributed setting). Operands shared between pairs (by object identity)
+    are read once; identical pairs are multiplied once.
+    """
+    uniq, prods, out_map = _dedup_pairs(pairs)
+    k = len(prods)
+    (n,) = uniq[0].shape
+    dt = uniq[0].dtype
+    chunk_eff, grid = _chunking(n, chunk)
+    spec = pl.BlockSpec((chunk_eff,), lambda i: (i,))
+
+    def kernel(*refs):
+        out_ref = refs[-1]
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            for j in range(k):
+                out_ref[j] = jnp.zeros((), out_ref.dtype)
+
+        valid = _valid_mask(i, chunk_eff, n)
+        vals = [refs[t][...] for t in range(len(uniq))]
+        zero = jnp.zeros((), dt)
+        for j, (a, b) in enumerate(prods):
+            out_ref[j] += jnp.sum(jnp.where(valid, vals[a] * vals[b], zero))
+
+    partials = pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[spec] * len(uniq),
+        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((k,), dt),
+        interpret=interpret,
+    )(*uniq)
+    if out_map == tuple(range(len(pairs))) and k == len(pairs):
+        return partials
+    return partials[jnp.asarray(out_map, jnp.int32)]
+
+
+# ---------------------------------------------------------------------------
+# fused axpy family
+# ---------------------------------------------------------------------------
+
+
+def _axpy_kernel(a_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = a_ref[0] * x_ref[...] + y_ref[...]
+
+
+def fused_axpy(a, x, y, *, chunk: int = 65536, interpret: bool = False):
+    """a*x + y in one pass; ``a`` may be a traced scalar."""
+    (n,) = x.shape
+    chunk_eff, grid = _chunking(n, chunk)
+    spec = pl.BlockSpec((chunk_eff,), lambda i: (i,))
+    av = jnp.asarray(a, x.dtype).reshape(1)
+    return pl.pallas_call(
+        _axpy_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(av, x, y)
+
+
+def _axpy2_kernel(a_ref, x1_ref, y1_ref, x2_ref, y2_ref, o1_ref, o2_ref):
+    o1_ref[...] = a_ref[0] * x1_ref[...] + y1_ref[...]
+    o2_ref[...] = a_ref[1] * x2_ref[...] + y2_ref[...]
+
+
+def fused_axpy2(a1, x1, y1, a2, x2, y2, *, chunk: int = 65536,
+                interpret: bool = False):
+    """(a1*x1 + y1, a2*x2 + y2) in one pass over all four vectors."""
+    (n,) = x1.shape
+    chunk_eff, grid = _chunking(n, chunk)
+    spec = pl.BlockSpec((chunk_eff,), lambda i: (i,))
+    av = jnp.stack([jnp.asarray(a1, x1.dtype), jnp.asarray(a2, x1.dtype)])
+    return pl.pallas_call(
+        _axpy2_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)] + [spec] * 4,
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((n,), x1.dtype)] * 2,
+        interpret=interpret,
+    )(av, x1, y1, x2, y2)
+
+
+def fused_axpy2_dots(a1, x1, y1, a2, x2, y2, *, chunk: int = 65536,
+                     interpret: bool = False):
+    """CG update + follow-up reduction in ONE pass.
+
+    Returns (o1, o2, d) with o1 = a1*x1 + y1, o2 = a2*x2 + y2 and
+    d = (1,) LOCAL partial [o2 . o2] — the new-residual norm accumulated
+    while the o2 chunk is still in VMEM.
+    """
+    (n,) = x1.shape
+    chunk_eff, grid = _chunking(n, chunk)
+    spec = pl.BlockSpec((chunk_eff,), lambda i: (i,))
+    av = jnp.stack([jnp.asarray(a1, x1.dtype), jnp.asarray(a2, x1.dtype)])
+
+    def kernel(a_ref, x1_ref, y1_ref, x2_ref, y2_ref, o1_ref, o2_ref, d_ref):
+        i = pl.program_id(0)
+        o1_ref[...] = a_ref[0] * x1_ref[...] + y1_ref[...]
+        v2 = a_ref[1] * x2_ref[...] + y2_ref[...]
+        o2_ref[...] = v2
+
+        @pl.when(i == 0)
+        def _init():
+            d_ref[0] = jnp.zeros((), d_ref.dtype)
+
+        valid = _valid_mask(i, chunk_eff, n)
+        d_ref[0] += jnp.sum(jnp.where(valid, v2 * v2, jnp.zeros((), v2.dtype)))
+
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)] + [spec] * 4,
+        out_specs=[spec, spec, pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), x1.dtype),
+            jax.ShapeDtypeStruct((n,), x1.dtype),
+            jax.ShapeDtypeStruct((1,), x1.dtype),
+        ],
+        interpret=interpret,
+    )(av, x1, y1, x2, y2)
+
+
+# ---------------------------------------------------------------------------
+# Legacy fixed-arity wrapper
+# ---------------------------------------------------------------------------
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
@@ -40,16 +227,7 @@ def fused_dots3(
     p: jax.Array, w: jax.Array, r: jax.Array, *, chunk: int = 65536,
     interpret: bool = False,
 ) -> jax.Array:
-    """(n,) vectors -> (3,) [p·w, r·r, p·r]; n % chunk == 0 (pad upstream)."""
-    (n,) = p.shape
-    assert n % chunk == 0, f"n={n} must be a multiple of chunk={chunk}"
-    grid = (n // chunk,)
-    spec = pl.BlockSpec((chunk,), lambda i: (i,))
-    return pl.pallas_call(
-        _dots_kernel,
-        grid=grid,
-        in_specs=[spec, spec, spec],
-        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
-        out_shape=jax.ShapeDtypeStruct((3,), p.dtype),
-        interpret=interpret,
-    )(p, w, r)
+    """(n,) vectors -> (3,) [p·w, r·r, p·r]; any n (masked internally)."""
+    return fused_dots_n(
+        [(p, w), (r, r), (p, r)], chunk=chunk, interpret=interpret
+    )

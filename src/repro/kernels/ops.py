@@ -10,11 +10,17 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import ref  # noqa: F401  (re-exported oracle module)
+from repro.kernels.fused_reductions import fused_axpy as _fused_axpy
+from repro.kernels.fused_reductions import fused_axpy2 as _fused_axpy2
+from repro.kernels.fused_reductions import fused_axpy2_dots as _fused_axpy2_dots
 from repro.kernels.fused_reductions import fused_dots3 as _fused_dots3
+from repro.kernels.fused_reductions import fused_dots_n as _fused_dots_n
 from repro.kernels.jacobi_stencil import jacobi_stencil_sweep as _jacobi
 from repro.kernels.spmv_bcsr import bcsr_spmv as _bcsr_spmv
 from repro.kernels.spmv_bcsr import pack_bcsr  # noqa: F401
+from repro.kernels.spmv_stencil import pick_bz  # noqa: F401
 from repro.kernels.spmv_stencil import stencil_spmv as _stencil_spmv
+from repro.kernels.spmv_stencil import stencil_spmv_halo as _stencil_spmv_halo
 
 
 def _default_interpret() -> bool:
@@ -33,9 +39,44 @@ def bcsr_spmv(blocks, bcol, x, *, n_brows, bpr, interpret=None):
     )
 
 
+def stencil_spmv_halo(
+    x, prev_halo, next_halo, *, stencil="7pt", aniso=(1.0, 1.0, 1.0), bz=8,
+    interpret=None,
+):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _stencil_spmv_halo(
+        x, prev_halo, next_halo, stencil=stencil, aniso=aniso, bz=bz,
+        interpret=interpret,
+    )
+
+
 def fused_dots3(p, w, r, *, chunk=65536, interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
     return _fused_dots3(p, w, r, chunk=chunk, interpret=interpret)
+
+
+def fused_dots_n(pairs, *, chunk=65536, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fused_dots_n(pairs, chunk=chunk, interpret=interpret)
+
+
+def fused_axpy(a, x, y, *, chunk=65536, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fused_axpy(a, x, y, chunk=chunk, interpret=interpret)
+
+
+def fused_axpy2(a1, x1, y1, a2, x2, y2, *, chunk=65536, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fused_axpy2(
+        a1, x1, y1, a2, x2, y2, chunk=chunk, interpret=interpret
+    )
+
+
+def fused_axpy2_dots(a1, x1, y1, a2, x2, y2, *, chunk=65536, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fused_axpy2_dots(
+        a1, x1, y1, a2, x2, y2, chunk=chunk, interpret=interpret
+    )
 
 
 def jacobi_stencil_sweep(

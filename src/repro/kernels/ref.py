@@ -52,6 +52,35 @@ def stencil27_ref(x: jax.Array) -> jax.Array:
     return 27.0 * x - s27
 
 
+def stencil_halo_ref(
+    x: jax.Array,  # (nz_loc, ny, nx) local slab
+    prev_halo: jax.Array,  # (ny, nx) boundary plane from the z- neighbor
+    next_halo: jax.Array,  # (ny, nx) boundary plane from the z+ neighbor
+    *,
+    stencil: str = "7pt",
+    aniso=(1.0, 1.0, 1.0),
+) -> jax.Array:
+    """Local-slab stencil SpMV with explicit z-boundary planes.
+
+    The distributed-operator contract: zeros in the halo planes reproduce the
+    global Dirichlet edges, so ``stencil_halo_ref(x, 0, 0) == stencil*_ref(x)``.
+    """
+    ext = jnp.concatenate([prev_halo[None], x, next_halo[None]], axis=0)
+    c = ext[1:-1]
+    if stencil == "7pt":
+        ax, ay, az = aniso
+        y = 2.0 * (ax + ay + az) * c
+        y = y - ax * (_shift(c, 1, 2) + _shift(c, -1, 2))
+        y = y - ay * (_shift(c, 1, 1) + _shift(c, -1, 1))
+        y = y - az * (ext[:-2] + ext[2:])
+        return y
+    s9 = jnp.zeros_like(ext)
+    for dy in (-1, 0, 1):
+        for dx in (-1, 0, 1):
+            s9 = s9 + _shift(_shift(ext, dx, 2), dy, 1)
+    return 27.0 * c - (s9[:-2] + s9[1:-1] + s9[2:])
+
+
 def jacobi_stencil_ref(
     x: jax.Array, b: jax.Array, dinv: jax.Array, *, stencil: str = "7pt",
     aniso=(1.0, 1.0, 1.0), omega: float = 1.0,
@@ -87,3 +116,22 @@ def bcsr_spmv_ref(
 def fused_dots3_ref(p: jax.Array, w: jax.Array, r: jax.Array) -> jax.Array:
     """[p.w, r.r, p.r] in one definition (kernel computes all in one pass)."""
     return jnp.stack([jnp.vdot(p, w), jnp.vdot(r, r), jnp.vdot(p, r)])
+
+
+def fused_dots_n_ref(pairs) -> jax.Array:
+    """Local partial dots for [(x, y), ...] (kernel: one pass, dedup'd)."""
+    return jnp.stack([jnp.vdot(x, y) for x, y in pairs])
+
+
+def fused_axpy_ref(a, x: jax.Array, y: jax.Array) -> jax.Array:
+    return a * x + y
+
+
+def fused_axpy2_ref(a1, x1, y1, a2, x2, y2):
+    return a1 * x1 + y1, a2 * x2 + y2
+
+
+def fused_axpy2_dots_ref(a1, x1, y1, a2, x2, y2):
+    o1 = a1 * x1 + y1
+    o2 = a2 * x2 + y2
+    return o1, o2, jnp.vdot(o2, o2)[None]

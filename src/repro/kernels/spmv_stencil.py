@@ -1,13 +1,19 @@
 """Matrix-free stencil SpMV Pallas kernel (7pt / 27pt, Dirichlet).
 
-TPU adaptation of the paper's CSR SpMV hot spot (see DESIGN.md §2): the
-benchmark matrices are structured stencils, and on TPU the roofline-optimal
-formulation is **matrix-free shift-and-add** on the 3-D grid held in VMEM —
-no matrix values, no column indices, no gathers. Per output element the HBM
-traffic drops from ~(8B value + 4B index) * k + vector traffic (CSR/ELL) to
-~2 grid reads + 1 write, a >6x arithmetic-intensity gain for the 7-point
-stencil; this is the beyond-paper optimization recorded separately in
-EXPERIMENTS.md §Perf.
+TPU adaptation of the paper's CSR SpMV hot spot: the benchmark matrices are
+structured stencils, and on TPU the roofline-optimal formulation is
+**matrix-free shift-and-add** on the 3-D grid held in VMEM — no matrix
+values, no column indices, no gathers. Per-row HBM traffic (f64 values,
+int32 column indices, read x + write y once):
+
+    format        matrix bytes/row     vector bytes/row   total    vs matfree
+    CSR/ELL 7pt   7*(8+4) = 84         ~16                ~100     ~6x
+    CSR/ELL 27pt  27*(8+4) = 324       ~16                ~340     ~21x
+    matrix-free   0                    ~16                ~16      1x
+
+(f32 halves the vector term again.) The distributed shard_map form of this
+operator lives in core/stencil_solver.py; backend selection between this
+kernel, interpret mode, and the jnp reference is kernels/dispatch.py.
 
 Tiling: grid over z-slabs of ``bz`` planes. The kernel reads its own
 (bz, ny, nx) block plus ONE boundary plane from each z-neighbor (passed as
@@ -16,6 +22,11 @@ masked by program_id) — HBM reads are bz+2 planes per bz planes of output,
 i.e. within 2/bz of the minimum. x/y-direction neighbors live inside the
 block; their shifted reads are VMEM-local. Lane dim = nx (pad to a multiple
 of 128 for hardware alignment); sublane = ny.
+
+``stencil_spmv_halo`` is the distributed variant: instead of zero Dirichlet
+planes at the z-edges it takes explicit boundary planes (the halo received
+from the slab neighbors via ppermute), so a shard_map solver can run the
+whole local SpMV as one kernel call.
 """
 
 from __future__ import annotations
@@ -42,16 +53,8 @@ def _shift_yx(x: jax.Array, dy: int, dx: int) -> jax.Array:
     return out
 
 
-def _stencil_kernel(prev_ref, cur_ref, next_ref, y_ref, *, stencil, aniso, nzb):
-    i = pl.program_id(0)
-    c = cur_ref[...]  # (bz, ny, nx)
-    dt = c.dtype
-    # Boundary planes from neighbor blocks; zero at the global z edges.
-    pmask = jnp.where(i > 0, 1, 0).astype(dt)
-    nmask = jnp.where(i < nzb - 1, 1, 0).astype(dt)
-    prev_plane = prev_ref[...] * pmask  # (1, ny, nx)
-    next_plane = next_ref[...] * nmask
-
+def _stencil_core(c, prev_plane, next_plane, *, stencil, aniso):
+    """Shared 7pt/27pt arithmetic on a (bz, ny, nx) block + boundary planes."""
     if stencil == "7pt":
         ax, ay, az = aniso
         zm = jnp.concatenate([prev_plane, c[:-1]], axis=0)
@@ -68,7 +71,35 @@ def _stencil_kernel(prev_ref, cur_ref, next_ref, y_ref, *, stencil, aniso, nzb):
                 s9 = s9 + _shift_yx(ext, dy, dx)
         s27 = s9[:-2] + s9[1:-1] + s9[2:]
         y = 27.0 * c - s27
-    y_ref[...] = y
+    return y
+
+
+def _stencil_kernel(prev_ref, cur_ref, next_ref, y_ref, *, stencil, aniso, nzb):
+    i = pl.program_id(0)
+    c = cur_ref[...]  # (bz, ny, nx)
+    dt = c.dtype
+    # Boundary planes from neighbor blocks; zero at the global z edges.
+    pmask = jnp.where(i > 0, 1, 0).astype(dt)
+    nmask = jnp.where(i < nzb - 1, 1, 0).astype(dt)
+    prev_plane = prev_ref[...] * pmask  # (1, ny, nx)
+    next_plane = next_ref[...] * nmask
+    y_ref[...] = _stencil_core(
+        c, prev_plane, next_plane, stencil=stencil, aniso=aniso
+    )
+
+
+def _stencil_halo_kernel(
+    hp_ref, prev_ref, cur_ref, next_ref, hn_ref, y_ref, *, stencil, aniso, nzb
+):
+    i = pl.program_id(0)
+    c = cur_ref[...]  # (bz, ny, nx)
+    # Boundary planes: the clamped self-views interior, the supplied halo
+    # planes at the slab edges (zeros arrive there for global-edge shards).
+    prev_plane = jnp.where(i == 0, hp_ref[...], prev_ref[...])
+    next_plane = jnp.where(i == nzb - 1, hn_ref[...], next_ref[...])
+    y_ref[...] = _stencil_core(
+        c, prev_plane, next_plane, stencil=stencil, aniso=aniso
+    )
 
 
 @functools.partial(
@@ -107,3 +138,55 @@ def stencil_spmv(
         out_shape=jax.ShapeDtypeStruct((nz, ny, nx), x.dtype),
         interpret=interpret,
     )(x, x, x)
+
+
+def pick_bz(nz: int, target: int = 8) -> int:
+    """Largest z-block size <= target that divides nz (>= 1 always works)."""
+    for bz in range(min(target, nz), 0, -1):
+        if nz % bz == 0:
+            return bz
+    return 1
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stencil", "aniso", "bz", "interpret"),
+)
+def stencil_spmv_halo(
+    x: jax.Array,
+    prev_halo: jax.Array,
+    next_halo: jax.Array,
+    *,
+    stencil: str = "7pt",
+    aniso: tuple = (1.0, 1.0, 1.0),
+    bz: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Local-slab SpMV with explicit z-boundary planes (distributed form).
+
+    ``x`` is the shard's (nz_loc, ny, nx) slab; ``prev_halo``/``next_halo``
+    are the (ny, nx) boundary planes received from the z-neighbors (zeros at
+    the global edges). nz_loc % bz == 0 (use ``pick_bz``).
+    """
+    nz, ny, nx = x.shape
+    assert nz % bz == 0, f"nz={nz} must be a multiple of bz={bz}"
+    nzb = nz // bz
+    kernel = functools.partial(
+        _stencil_halo_kernel, stencil=stencil, aniso=aniso, nzb=nzb
+    )
+    plane = pl.BlockSpec((1, ny, nx), lambda i: (0, 0, 0))
+    prev_spec = pl.BlockSpec(
+        (1, ny, nx), lambda i: (jnp.maximum(i * bz - 1, 0), 0, 0)
+    )
+    next_spec = pl.BlockSpec(
+        (1, ny, nx), lambda i: (jnp.minimum(i * bz + bz, nz - 1), 0, 0)
+    )
+    cur_spec = pl.BlockSpec((bz, ny, nx), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(nzb,),
+        in_specs=[plane, prev_spec, cur_spec, next_spec, plane],
+        out_specs=pl.BlockSpec((bz, ny, nx), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nz, ny, nx), x.dtype),
+        interpret=interpret,
+    )(prev_halo[None], x, x, x, next_halo[None])

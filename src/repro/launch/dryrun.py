@@ -42,13 +42,19 @@ import jax.numpy as jnp
 
 from repro.configs import ARCHS, SHAPES, applicable_shapes, get_config
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.dist.sharding import (
-    batch_specs,
-    cache_specs,
-    dp_axes,
-    param_specs,
-    shardings_of,
-)
+
+try:  # repro.dist is only needed for the LM cells, not the solver cells
+    from repro.dist.sharding import (
+        batch_specs,
+        cache_specs,
+        dp_axes,
+        param_specs,
+        shardings_of,
+    )
+
+    HAS_DIST = True
+except ModuleNotFoundError:  # pragma: no cover - container without repro.dist
+    HAS_DIST = False
 from repro.launch.mesh import make_production_mesh
 from repro.models import lm, transformer as tfm
 from repro.roofline import analysis as ra
@@ -72,6 +78,11 @@ TRAIN_MICROBATCHES = {"default": 1}
 
 def _cell_fns(cfg: ArchConfig, shape: ShapeConfig, mesh, microbatches: int = 1):
     """Build (jitted fn, example args as SDS) for one cell."""
+    if not HAS_DIST:
+        raise ModuleNotFoundError(
+            "repro.dist is required for LM dry-run cells (solver cells via "
+            "--solver / --solver-matfree work without it)"
+        )
     specs = lm.input_specs(cfg, shape)
     params_sds = jax.eval_shape(lambda: tfm.init_params(cfg, jax.random.key(0)))
     p_sh = shardings_of(param_specs(params_sds, mesh), mesh)
@@ -135,8 +146,15 @@ def _cell_fns(cfg: ArchConfig, shape: ShapeConfig, mesh, microbatches: int = 1):
     return fn, (params_sds, specs["token"], specs["cache"], specs["pos"])
 
 
-def _analyze(compiled, chips: int, model_flops: float) -> dict:
+def _cost_dict(compiled) -> dict:
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # jax<=0.4.x: list of per-program dicts
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def _analyze(compiled, chips: int, model_flops: float) -> dict:
+    cost = _cost_dict(compiled)
     # cost_analysis is per-module (one device's program under SPMD)
     flops = float(cost.get("flops", 0.0))
     bytes_acc = float(cost.get("bytes accessed", 0.0))
@@ -243,7 +261,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str | None,
                 t0 = time.perf_counter()
                 fn_u, args_u = _cell_fns(cfg, shape, mesh, microbatches)
                 compiled_u = fn_u.lower(*args_u).compile()
-                cost_u = compiled_u.cost_analysis() or {}
+                cost_u = _cost_dict(compiled_u)
                 rec["probe_compile_s"] = round(time.perf_counter() - t0, 2)
                 flops_u = float(cost_u.get("flops", 0.0))
                 bytes_u = float(cost_u.get("bytes accessed", 0.0))

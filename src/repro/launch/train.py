@@ -54,8 +54,14 @@ def main(argv=None):
 
     from repro.configs import get_config
     from repro.data.synthetic import TokenStream
-    from repro.dist import checkpoint as ckpt
-    from repro.dist.sharding import batch_specs, param_specs, shardings_of
+
+    try:
+        from repro.dist import checkpoint as ckpt
+        from repro.dist.sharding import batch_specs, param_specs, shardings_of
+    except ModuleNotFoundError as e:  # pragma: no cover
+        raise SystemExit(
+            f"repro.launch.train needs the repro.dist package (missing {e.name})"
+        )
     from repro.models import transformer as tfm
     from repro.train.loop import make_train_step
     from repro.train.optimizer import OptConfig, init_opt_state

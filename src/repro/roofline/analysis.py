@@ -179,6 +179,57 @@ def roofline(
     )
 
 
+# ---------------------------------------------------------------------------
+# CG hot-path HBM traffic model (the kernel-fusion term)
+# ---------------------------------------------------------------------------
+
+# Full-vector HBM *streams* (one read or write of n elements) per CG
+# iteration OUTSIDE the SpMV, and the number of kernel passes ("sweeps")
+# they are grouped into. "unfused" is the op-by-op formulation (every
+# axpy/dot its own pass); "fused" is the dispatch-layer kernel path
+# (fused_dots_n with operand dedup + fused_axpy2[_dots]), identity
+# preconditioner. Derivation in core/cg.py body docstrings.
+CG_HOTPATH = {
+    # variant: {mode: (streams, sweeps)}
+    "hs": {"unfused": (15, 6), "fused": (11, 3)},
+    "fcg": {"unfused": (18, 5), "fused": (14, 3)},
+}
+
+
+def cg_vector_traffic(n: int, *, variant: str = "hs", fused: bool = True,
+                      dtype_bytes: int = 8) -> float:
+    """Vector-op HBM bytes per CG iteration outside the SpMV."""
+    streams, _ = CG_HOTPATH[variant]["fused" if fused else "unfused"]
+    return float(streams) * n * dtype_bytes
+
+
+def cg_vector_sweeps(variant: str = "hs", *, fused: bool = True) -> int:
+    """Full-vector kernel passes per CG iteration outside the SpMV."""
+    return CG_HOTPATH[variant]["fused" if fused else "unfused"][1]
+
+
+def spmv_traffic(n: int, k: int, *, matfree: bool = False,
+                 dtype_bytes: int = 8, idx_bytes: int = 4) -> float:
+    """SpMV HBM bytes per application: ELL (values + local indices + vector
+    r/w) or matrix-free stencil (read x + write y only)."""
+    if matfree:
+        return float(n) * 2 * dtype_bytes
+    return float(n) * (k * (dtype_bytes + idx_bytes) + 2 * dtype_bytes)
+
+
+def cg_iteration_memory_s(
+    n: int, k: int, *, variant: str = "hs", fused: bool = True,
+    matfree: bool = False, dtype_bytes: int = 8,
+    chip: ChipSpec = DEFAULT_CHIP,
+) -> float:
+    """Roofline memory term (seconds) for ONE CG iteration on one chip:
+    one SpMV + the variant's vector-op traffic."""
+    total = spmv_traffic(n, k, matfree=matfree, dtype_bytes=dtype_bytes)
+    total += cg_vector_traffic(n, variant=variant, fused=fused,
+                               dtype_bytes=dtype_bytes)
+    return total / chip.hbm_bw
+
+
 def model_flops_train(cfg, shape) -> float:
     """6*N*D (dense) / 6*N_active*D (MoE) for one training step."""
     n = cfg.active_param_count()

@@ -1,0 +1,104 @@
+"""Deterministic fallback for the tiny hypothesis subset the tests use.
+
+The real ``hypothesis`` is a test dependency (pyproject ``[test]``), but
+this container cannot install packages. Rather than skipping every
+property-based suite, conftest.py registers this stub in ``sys.modules``
+when the real library is absent: ``@given`` then draws ``max_examples``
+deterministic pseudo-random samples per strategy (seeded from the test
+name), which preserves the coverage intent — many sampled cases per
+property — minus shrinking/replay. With hypothesis installed, the stub is
+never imported.
+
+Supported surface: ``given`` (keyword strategies), ``settings``
+(max_examples/deadline ignored otherwise), ``strategies.integers/floats/
+booleans/sampled_from/just``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value, max_value, **_kw):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def just(value):
+    return _Strategy(lambda rng: value)
+
+
+class settings:
+    """Decorator recording max_examples on the wrapped test."""
+
+    def __init__(self, max_examples: int = 20, deadline=None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._stub_max_examples = self.max_examples
+        return fn
+
+
+def given(**strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", 20)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for _ in range(n):
+                draw = {k: s.example_from(rng) for k, s in strategies.items()}
+                fn(*args, **kwargs, **draw)
+
+        # strategy-drawn params are not pytest fixtures: hide the wrapped
+        # signature (functools.wraps would otherwise expose it)
+        params = [
+            p for name, p in inspect.signature(fn).parameters.items()
+            if name not in strategies
+        ]
+        wrapper.__signature__ = inspect.Signature(params)
+        try:
+            del wrapper.__wrapped__
+        except AttributeError:
+            pass
+        return wrapper
+
+    return deco
+
+
+def install():
+    """Register the stub as ``hypothesis`` / ``hypothesis.strategies``."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "just"):
+        setattr(st, name, globals()[name])
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -14,6 +14,14 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
+try:  # real hypothesis when available; deterministic stub otherwise
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import _hypothesis_stub
+
+    _hypothesis_stub.install()
+
 
 def run_multidevice(code: str, n_devices: int = 8, timeout: int = 900, x64: bool = True):
     """Run a python snippet in a subprocess with N host devices; returns stdout."""

@@ -6,7 +6,10 @@ import pytest
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.configs import ARCHS, SHAPES, get_config
-from repro.dist.sharding import axis_size, batch_specs, cache_specs, param_specs
+
+_sharding = pytest.importorskip("repro.dist.sharding")
+axis_size, batch_specs = _sharding.axis_size, _sharding.batch_specs
+cache_specs, param_specs = _sharding.cache_specs, _sharding.param_specs
 from repro.models import lm, transformer as tfm
 from repro.models.kvcache import cache_shapes
 from repro.roofline import analysis as ra
