@@ -1,0 +1,143 @@
+"""CI regression gate for the benchmark energy/time ledgers.
+
+    python -m benchmarks.check_ledgers            # compare against baselines
+    python -m benchmarks.check_ledgers --update   # refresh the baselines
+
+Every benchmark emits a machine-readable JSON ledger (see
+``benchmarks/common.write_ledger``): the ``gate`` side holds deterministic
+quantities — modeled energy/time from the executed-counts trace, iteration
+counts, op counts — and the ``info`` side holds wall-clock measurements.
+
+This checker recursively diffs each emitted ledger's ``gate`` against the
+checked-in baseline in ``benchmarks/baselines/``: numbers must agree within
+``--tol`` (default 5%, relative; tiny values compared absolutely), strings
+and structure must match exactly. Any drift beyond tolerance — more energy
+per iteration, more iterations to converge, lost regions — fails the CI
+``energy-ledger`` job.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import shutil
+import sys
+
+from benchmarks.common import LEDGERS, REPO
+
+BASELINES = os.path.join(REPO, "benchmarks", "baselines")
+
+
+def _diff(base, new, tol: float, path: str, errors: list[str]):
+    if isinstance(base, dict) and isinstance(new, dict):
+        for k in base:
+            if k not in new:
+                errors.append(f"{path}.{k}: missing from new ledger")
+            else:
+                _diff(base[k], new[k], tol, f"{path}.{k}", errors)
+        for k in new:
+            if k not in base:
+                errors.append(f"{path}.{k}: not in baseline (new field)")
+        return
+    if isinstance(base, list) and isinstance(new, list):
+        if len(base) != len(new):
+            errors.append(f"{path}: length {len(base)} -> {len(new)}")
+            return
+        for i, (b, n) in enumerate(zip(base, new)):
+            _diff(b, n, tol, f"{path}[{i}]", errors)
+        return
+    if isinstance(base, bool) or isinstance(new, bool):
+        if base != new:
+            errors.append(f"{path}: {base} -> {new}")
+        return
+    if isinstance(base, (int, float)) and isinstance(new, (int, float)):
+        if math.isclose(base, new, rel_tol=tol, abs_tol=1e-9):
+            return
+        rel = abs(new - base) / max(abs(base), 1e-300)
+        errors.append(f"{path}: {base} -> {new} ({100 * rel:.1f}% drift)")
+        return
+    if base != new:
+        errors.append(f"{path}: {base!r} -> {new!r}")
+
+
+def check_one(name: str, tol: float) -> list[str]:
+    with open(os.path.join(BASELINES, name)) as f:
+        base = json.load(f)
+    led_path = os.path.join(LEDGERS, name)
+    if not os.path.exists(led_path):
+        return [f"{name}: ledger was not emitted (run benchmarks.run --smoke)"]
+    with open(led_path) as f:
+        new = json.load(f)
+    errors: list[str] = []
+    _diff(base.get("gate", {}), new.get("gate", {}), tol, "gate", errors)
+    return [f"{name}: {e}" for e in errors]
+
+
+def _smoke_ledgers() -> list[str]:
+    """CI gates the smoke run only — full-size ledgers stay local."""
+    if not os.path.isdir(LEDGERS):
+        return []
+    return sorted(
+        fn for fn in os.listdir(LEDGERS) if fn.endswith("_smoke.json")
+    )
+
+
+def update_baselines() -> int:
+    os.makedirs(BASELINES, exist_ok=True)
+    n = 0
+    for fn in _smoke_ledgers():
+        shutil.copyfile(os.path.join(LEDGERS, fn), os.path.join(BASELINES, fn))
+        print(f"baseline updated: {fn}")
+        n += 1
+    return n
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tol", type=float, default=0.05,
+                    help="relative tolerance on gated numbers (default 5%%)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy the emitted ledgers over the baselines")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        if update_baselines() == 0:
+            print("no ledgers found — run `python -m benchmarks.run --smoke`")
+            return 1
+        return 0
+
+    if not os.path.isdir(BASELINES):
+        print(f"no baselines directory at {BASELINES}")
+        return 1
+    names = sorted(fn for fn in os.listdir(BASELINES) if fn.endswith(".json"))
+    if not names:
+        print("no baseline ledgers checked in")
+        return 1
+    failures: list[str] = []
+    for name in names:
+        errs = check_one(name, args.tol)
+        status = "OK" if not errs else f"FAIL ({len(errs)} diffs)"
+        print(f"[{status:>14s}] {name}")
+        failures.extend(errs)
+    # every emitted smoke ledger must be gated — a benchmark added without a
+    # baseline would otherwise silently run ungated forever
+    for fn in _smoke_ledgers():
+        if fn not in names:
+            failures.append(
+                f"{fn}: emitted but has no baseline — check one in with "
+                "`python -m benchmarks.check_ledgers --update`"
+            )
+    if failures:
+        print(f"\n{len(failures)} ledger regression(s) beyond "
+              f"{100 * args.tol:.0f}% tolerance:")
+        for e in failures[:50]:
+            print(f"  {e}")
+        return 1
+    print(f"\nall {len(names)} ledgers within {100 * args.tol:.0f}% of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

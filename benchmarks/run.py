@@ -43,9 +43,18 @@ def main(argv=None):
     import importlib
 
     if args.smoke:
-        from benchmarks.common import set_smoke
+        import glob
+        import os
+
+        from benchmarks.common import LEDGERS, set_smoke
 
         set_smoke(True)
+        # full smoke runs drop stale ledgers first so runs/ledgers reflects
+        # exactly this run (check_ledgers --update promotes every
+        # *_smoke.json it finds); --only keeps the others in place
+        if not args.only:
+            for stale in glob.glob(os.path.join(LEDGERS, "*_smoke.json")):
+                os.unlink(stale)
     failures = []
     for title, modname in BENCHES:
         if args.only and args.only not in modname:

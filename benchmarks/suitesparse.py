@@ -42,7 +42,7 @@ def run(scale: float = 0.01, maxiter: int = 100, matrices=MATRICES,
                             matrix=name,
                             n_shards=s,
                             library=lib.replace("-analog", ""),
-                            time=r["wall_s"],
+                            wall_s=r["wall_s"],
                             modeled_s=r["modeled_s"],
                             iters=r["iters"],
                             de_gpu=r["de_gpu"],
@@ -71,7 +71,7 @@ def main(smoke: bool = False):
         sel = [r for r in rows if r.get("table") == table and "error" not in r]
         cols = [
             ("n_shards", "#GPUs"), ("matrix", "matrix"), ("library", "library"),
-            ("time", "time (s)"), ("de_gpu", "GPU dynE (J)"),
+            ("wall_s", "time (s)"), ("de_gpu", "GPU dynE (J)"),
             ("de_cpu", "CPU dynE (J)"), ("de_total", "total dynE (J)"),
             ("gpu_power_peak", "peak (W)"),
         ]

@@ -4,8 +4,6 @@ with idle <-> active transition markers, rendered as ASCII + CSV.
     PYTHONPATH=src python examples/energy_profile.py
 """
 
-import numpy as np
-
 from repro.core.cg import abstract_stencil_dist
 from repro.energy.accounting import CostModel, spmv_counts
 from repro.energy.monitor import PowerMonitor

@@ -10,7 +10,6 @@ assigned hyperparameters live in one file per architecture
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional
 
 

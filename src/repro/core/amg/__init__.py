@@ -9,4 +9,9 @@ never cross shard boundaries — which keeps every inter-shard coupling inside
 the (already halo-planned) system matrices.
 """
 
-from repro.core.amg.hierarchy import AMGParams, build_amg  # noqa: F401
+from repro.core.amg.hierarchy import (  # noqa: F401
+    AMGInfo,
+    AMGParams,
+    build_amg,
+    make_amg_preconditioner,
+)

@@ -14,12 +14,10 @@ component the paper credits for BootCMatchGX's better convergence.
 
 from __future__ import annotations
 
-import dataclasses
-
-from repro.core.amg.hierarchy import AMGParams, build_amg
+from repro.core.amg.hierarchy import AMGParams, make_amg_preconditioner
 
 
 def build_amgx_analog(a_csr, n_shards: int, params: AMGParams | None = None, **kw):
-    params = params or AMGParams()
-    params = dataclasses.replace(params, weighting="plain", matcher="scan")
-    return build_amg(a_csr, n_shards, params, **kw)
+    return make_amg_preconditioner(
+        a_csr, n_shards, params, amgx_analog=True, **kw
+    )

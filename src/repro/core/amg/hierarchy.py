@@ -100,8 +100,15 @@ def build_amg(
     partition: RowPartition | None = None,
     smooth_vec: np.ndarray | None = None,
     dtype=np.float64,
+    kernels: str | None = None,
 ) -> tuple[Preconditioner, AMGInfo]:
-    """Build the distributed AMG preconditioner for ``a_csr``."""
+    """Build the distributed AMG preconditioner for ``a_csr``.
+
+    ``kernels`` selects the dispatch backend (kernels/dispatch.py) the
+    V-cycle's vector updates route through inside the solver's shard_map
+    (None = auto). The apply is region-marked: its executed counts land in
+    the "vcycle" energy region (see energy/trace.py).
+    """
     params = params or AMGParams()
     a = a_csr.tocsr().astype(np.float64)
     n = a.shape[0]
@@ -186,10 +193,15 @@ def build_amg(
     )
 
     n_smooth, omega = params.n_smooth, params.omega
+    from repro.kernels import dispatch as kd
+
+    ops = kd.ops_for(kernels)
 
     def apply(pdata, r, axis):
         lv, dinv_mat = pdata
-        return vcycle_shard(lv, dinv_mat, r, axis, n_smooth=n_smooth, omega=omega)
+        return vcycle_shard(
+            lv, dinv_mat, r, axis, n_smooth=n_smooth, omega=omega, ops=ops
+        )
 
     def localize(pdata):
         lv, dinv_mat = pdata
@@ -201,6 +213,29 @@ def build_amg(
     )
     info = AMGInfo(tuple(level_rows), tuple(level_nnz), nL)
     return pre, info
+
+
+def make_amg_preconditioner(
+    a_csr,
+    n_shards: int,
+    params: AMGParams | None = None,
+    *,
+    amgx_analog: bool = False,
+    kernels: str | None = None,
+    **kw,
+) -> tuple[Preconditioner, AMGInfo]:
+    """One-stop executed-AMG entry point for solvers and benchmarks.
+
+    Builds the hierarchy (host setup) and returns a Preconditioner whose
+    apply runs the *real* V-cycle through the kernel dispatch layer inside
+    ``make_solver``'s shard_map — no synthetic cycle profile anywhere.
+    ``amgx_analog=True`` selects the plain-strength/scan-order matching
+    baseline (the paper's AmgX comparison, C5).
+    """
+    params = params or AMGParams()
+    if amgx_analog:
+        params = dataclasses.replace(params, weighting="plain", matcher="scan")
+    return build_amg(a_csr, n_shards, params, kernels=kernels, **kw)
 
 
 def _balanced(n, n_shards):

@@ -13,6 +13,13 @@ Level data layout (see hierarchy.py):
 
 The coarsest level is solved with a replicated dense inverse applied to the
 all-gathered coarse residual (coarse sizes are a few hundred at most).
+
+Energy accounting: the whole cycle runs inside ``region("vcycle")``
+(energy/trace.py) and its vector updates go through the kernel dispatch
+OpSet, so every SpMV, smoother sweep, transfer, and the coarse solve record
+their executed OpCounts — the "preconditioner" component of the paper's
+per-kernel energy profile. Halo exchanges inside the level SpMVs attribute
+to the "halo" region (innermost marker wins).
 """
 
 from __future__ import annotations
@@ -21,11 +28,13 @@ import dataclasses
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 from jax import lax
 
 from repro.core.partition import DistELL
 from repro.core.spmv import ell_matvec, spmv_shard
+from repro.energy import trace
+from repro.energy.accounting import OpCounts
+from repro.kernels import dispatch as kd
 
 
 def _register(cls, data_fields, meta_fields):
@@ -51,22 +60,45 @@ class AMGLevel:
     dinv: jax.Array  # (S, Rf)
 
 
+def _record_pointwise(op: str, n: int, itemsize: int, reads: int):
+    """Elementwise vector work not covered by a dispatch op (formula shared
+    via energy/trace.py)."""
+    trace.record_op(op, trace.pointwise_counts(n, itemsize, reads))
+
+
 def jacobi_sweeps(
     mat: DistELL, dinv: jax.Array, b: jax.Array, x: jax.Array | None,
-    n: int, omega: float, axis: str,
+    n: int, omega: float, axis: str, ops: kd.OpSet | None = None,
 ) -> jax.Array:
     """n sweeps of (damped) l1-Jacobi; x=None means zero initial guess, in
     which case the first sweep is the free half-sweep x = omega*dinv*b."""
+    ops = ops or kd.ops_for(None)
     if x is None:
+        _record_pointwise("jacobi_scale", b.size, b.dtype.itemsize, 2)
         x = omega * dinv * b
         n = n - 1
     for _ in range(n):
-        x = x + omega * dinv * (b - spmv_shard(mat, x, axis))
+        r = ops.axpy(-1.0, spmv_shard(mat, x, axis), b)  # r = b - A x
+        _record_pointwise("jacobi_scale", b.size, b.dtype.itemsize, 2)
+        x = ops.axpy(omega, dinv * r, x)
     return x
 
 
 def coarse_solve(dense_inv: jax.Array, rc: jax.Array, axis: str) -> jax.Array:
     """Replicated dense inverse applied to the gathered coarse residual."""
+    nc = dense_inv.shape[0]
+    b = rc.dtype.itemsize
+    S = max(nc // max(rc.shape[0], 1), 1)
+    trace.record_op(
+        "coarse_gather",
+        OpCounts(ici_bytes=float(rc.shape[0] * (S - 1) * b),
+                 n_collectives=1.0 if S > 1 else 0.0),
+    )
+    trace.record_op(
+        "coarse_solve",
+        OpCounts(flops=2.0 * nc * nc,
+                 hbm_bytes=float(nc * nc * b + 2 * nc * b)),
+    )
     r_full = lax.all_gather(rc, axis, tiled=True)
     x_full = dense_inv @ r_full
     idx = lax.axis_index(axis)
@@ -75,21 +107,32 @@ def coarse_solve(dense_inv: jax.Array, rc: jax.Array, axis: str) -> jax.Array:
 
 def vcycle_shard(
     levels, dense_inv: jax.Array, b: jax.Array, axis: str,
-    *, n_smooth: int = 4, omega: float = 1.0,
+    *, n_smooth: int = 4, omega: float = 1.0, ops: kd.OpSet | None = None,
 ) -> jax.Array:
-    """One V(n_smooth, n_smooth) cycle applied to b (zero initial guess)."""
+    """One V(n_smooth, n_smooth) cycle applied to b (zero initial guess).
+
+    ``ops`` is the kernel-dispatch OpSet the cycle's vector updates route
+    through (None = resolve the active backend).
+    """
+    ops = ops or kd.ops_for(None)
 
     def down(l: int, bl: jax.Array) -> jax.Array:
         lev = levels[l]
-        x = jacobi_sweeps(lev.mat, lev.dinv, bl, None, n_smooth, omega, axis)
-        r = bl - spmv_shard(lev.mat, x, axis)
+        x = jacobi_sweeps(
+            lev.mat, lev.dinv, bl, None, n_smooth, omega, axis, ops
+        )
+        r = ops.axpy(-1.0, spmv_shard(lev.mat, x, axis), bl)
         rc = ell_matvec(lev.pt_data, lev.pt_col, r)  # restriction (local)
         if l + 1 < len(levels):
             xc = down(l + 1, rc)
         else:
             xc = coarse_solve(dense_inv, rc, axis)
+        _record_pointwise("prolongation", x.size, x.dtype.itemsize, 3)
         x = x + lev.p_data * xc[lev.p_col]  # prolongation (local)
-        x = jacobi_sweeps(lev.mat, lev.dinv, bl, x, n_smooth, omega, axis)
+        x = jacobi_sweeps(
+            lev.mat, lev.dinv, bl, x, n_smooth, omega, axis, ops
+        )
         return x
 
-    return down(0, b)
+    with trace.region("vcycle"):
+        return down(0, b)

@@ -25,8 +25,18 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.cg import Preconditioner, SolveResult, identity_precond
 from repro.core.partition import DistELL
-from repro.core.spmv import dist_specs, ell_matvec, local_block
+from repro.core.spmv import dist_specs, ell_matvec, gather_ext, local_block
 from repro.core.vectors import pdot
+from repro.energy import trace
+from repro.kernels import dispatch as kd
+
+
+def _rec_updates(x: jax.Array, n_updates: int):
+    """Unfused axpy-class updates: 3 streamed vectors each (trace-time)."""
+    trace.record_op(
+        "axpy_unfused",
+        trace.streamed_axpy_counts(x.size, x.dtype.itemsize, n_updates),
+    )
 
 
 def spmv_naive_shard(mat: DistELL, x_own: jax.Array, axis: str) -> jax.Array:
@@ -38,7 +48,8 @@ def spmv_naive_shard(mat: DistELL, x_own: jax.Array, axis: str) -> jax.Array:
     """
     assert mat.plan.mode == "allgather", "naive SpMV needs allgather layout"
     R = mat.n_own_pad
-    x_full = lax.all_gather(x_own, axis, tiled=True)
+    # gather_ext provides the instrumented allgather (region "halo" + counts)
+    x_full = gather_ext(mat, x_own, axis)
     idx = lax.axis_index(axis)
     x_own_from_full = lax.dynamic_slice_in_dim(x_full, idx * R, R)
     y = ell_matvec(mat.data_loc, mat.col_loc, x_own_from_full)
@@ -48,11 +59,14 @@ def spmv_naive_shard(mat: DistELL, x_own: jax.Array, axis: str) -> jax.Array:
 
 def _cg_unfused_body(mat, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis):
     """HS PCG with 3 *separate* all-reduces per iteration (no fusion)."""
-    r = b - spmv_naive_shard(mat, x0, axis)
-    z = pre.apply(pdata, r, axis)
-    rz = pdot(r, z, axis)  # separate
-    rr = pdot(r, r, axis)  # separate
-    bb = pdot(b, b, axis)  # separate
+    with trace.region("spmv"):
+        r = b - spmv_naive_shard(mat, x0, axis)
+    with trace.region("precond"):
+        z = pre.apply(pdata, r, axis)
+    with trace.region("reductions"):
+        rz = pdot(r, z, axis)  # separate
+        rr = pdot(r, r, axis)  # separate
+        bb = pdot(b, b, axis)  # separate
     tol2 = tol * tol * bb
 
     def cond(c):
@@ -61,16 +75,23 @@ def _cg_unfused_body(mat, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, ax
 
     def body(c):
         i, x, r, z, p, rz, rr = c
-        w = spmv_naive_shard(mat, p, axis)
-        pw = pdot(p, w, axis)  # all-reduce 1
-        alpha = rz / pw
-        x = x + alpha * p
-        r = r - alpha * w
-        z = pre.apply(pdata, r, axis)
-        rz_new = pdot(r, z, axis)  # all-reduce 2
-        rr = pdot(r, r, axis)  # all-reduce 3
-        beta = rz_new / rz
-        p = z + beta * p
+        with kd.ledger_section("iteration"):
+            with trace.region("spmv"):
+                w = spmv_naive_shard(mat, p, axis)
+            with trace.region("reductions"):
+                pw = pdot(p, w, axis)  # all-reduce 1
+                alpha = rz / pw
+                _rec_updates(x, 2)  # two unfused axpy-class updates
+                x = x + alpha * p
+                r = r - alpha * w
+            with trace.region("precond"):
+                z = pre.apply(pdata, r, axis)
+            with trace.region("reductions"):
+                rz_new = pdot(r, z, axis)  # all-reduce 2
+                rr = pdot(r, r, axis)  # all-reduce 3
+                beta = rz_new / rz
+                _rec_updates(x, 1)
+                p = z + beta * p
         return (i + 1, x, r, z, p, rz_new, rr)
 
     i0 = jnp.asarray(0, jnp.int32)

@@ -38,6 +38,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.partition import DistELL
 from repro.core.spmv import dist_specs, local_block, spmv_shard
 from repro.core.vectors import fused_blocks, fused_dots, pdot
+from repro.energy import trace
 from repro.kernels import dispatch as kd
 
 
@@ -103,10 +104,17 @@ def _hs_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis, ops):
     outside the SpMV (p·w dot; fused x/r update + ||r||²; p update) instead
     of the ~6 of the op-by-op formulation. A non-trivial preconditioner adds
     one sweep for the fused (r·z, r·r) reduction.
+
+    Components are region-marked (energy/trace.py): the SpMV, the fused
+    reductions/updates, and the preconditioner apply each attribute their
+    executed counts to their own energy region.
     """
-    r = b - A(x0)
-    z = pre.apply(pdata, r, axis)
-    d0 = fused_dots([(r, z), (r, r), (b, b)], axis)
+    with trace.region("spmv"):
+        r = b - A(x0)
+    with trace.region("precond"):
+        z = pre.apply(pdata, r, axis)
+    with trace.region("reductions"):
+        d0 = fused_dots([(r, z), (r, r), (b, b)], axis)
     rz, rr, bb = d0[0], d0[1], d0[2]
     tol2 = tol * tol * bb
 
@@ -117,22 +125,31 @@ def _hs_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis, ops):
     def body(c):
         i, x, r, z, p, rz, rr = c
         with kd.ledger_section("iteration"):
-            w = A(p)
-            pw = lax.psum(ops.fused_dots_n([(p, w)])[0], axis)  # all-reduce 1
-            alpha = rz / pw
-            # x += alpha p ; r -= alpha w ; local r'.r' — ONE pass
-            x, r, rr_loc = ops.fused_axpy2_dots(alpha, p, x, -alpha, w, r)
+            with trace.region("spmv"):
+                w = A(p)
+            with trace.region("reductions"):
+                pw = lax.psum(ops.fused_dots_n([(p, w)])[0], axis)  # all-reduce 1
+                trace.record_collective(1, w.dtype.itemsize)
+                alpha = rz / pw
+                # x += alpha p ; r -= alpha w ; local r'.r' — ONE pass
+                x, r, rr_loc = ops.fused_axpy2_dots(alpha, p, x, -alpha, w, r)
             if pre.is_identity:
                 z = r
-                rr = lax.psum(rr_loc[0], axis)  # all-reduce 2
+                with trace.region("reductions"):
+                    rr = lax.psum(rr_loc[0], axis)  # all-reduce 2
+                    trace.record_collective(1, w.dtype.itemsize)
                 rz_new = rr
             else:
-                z = pre.apply(pdata, r, axis)
-                rz_loc = ops.fused_dots_n([(r, z)])[0]
-                d = lax.psum(jnp.stack([rz_loc, rr_loc[0]]), axis)  # AR 2 (fused)
+                with trace.region("precond"):
+                    z = pre.apply(pdata, r, axis)
+                with trace.region("reductions"):
+                    rz_loc = ops.fused_dots_n([(r, z)])[0]
+                    d = lax.psum(jnp.stack([rz_loc, rr_loc[0]]), axis)  # AR 2 (fused)
+                    trace.record_collective(2, w.dtype.itemsize)
                 rz_new, rr = d[0], d[1]
             beta = rz_new / rz
-            p = ops.axpy(beta, p, z)
+            with trace.region("reductions"):
+                p = ops.axpy(beta, p, z)
         return (i + 1, x, r, z, p, rz_new, rr)
 
     i0 = jnp.asarray(0, jnp.int32)
@@ -148,11 +165,18 @@ def _fcg_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis, ops):
     ``ops`` in 3 full-vector HBM sweeps outside the SpMV: the fused triple
     dot (reads {r, u, w} once — u aliases r under the identity
     preconditioner), the fused p/s update, and the fused x/r update.
+
+    Components are region-marked (energy/trace.py) exactly as in the HS
+    body: spmv / reductions / precond.
     """
-    r = b - A(x0)
-    u = pre.apply(pdata, r, axis)
-    w = A(u)
-    d0 = fused_dots([(r, u), (w, u), (r, r), (b, b)], axis)
+    with trace.region("spmv"):
+        r = b - A(x0)
+    with trace.region("precond"):
+        u = pre.apply(pdata, r, axis)
+    with trace.region("spmv"):
+        w = A(u)
+    with trace.region("reductions"):
+        d0 = fused_dots([(r, u), (w, u), (r, r), (b, b)], axis)
     gamma, delta, rr, bb = d0[0], d0[1], d0[2], d0[3]
     tol2 = tol * tol * bb
 
@@ -168,16 +192,23 @@ def _fcg_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis, ops):
     def body(c):
         i, x, r, p, s, gamma, alpha, rr = c
         with kd.ledger_section("iteration"):
-            u = r if pre.is_identity else pre.apply(pdata, r, axis)
-            w = A(u)
-            d = lax.psum(  # the ONE all-reduce
-                ops.fused_dots_n([(r, u), (w, u), (r, r)]), axis
-            )
-            gamma_new, delta, rr = d[0], d[1], d[2]
-            beta = gamma_new / gamma
-            alpha_new = gamma_new / (delta - beta * gamma_new / alpha)
-            p, s = ops.fused_axpy2(beta, p, u, beta, s, w)  # p=u+βp ; s=w+βs
-            x, r = ops.fused_axpy2(alpha_new, p, x, -alpha_new, s, r)
+            if pre.is_identity:
+                u = r
+            else:
+                with trace.region("precond"):
+                    u = pre.apply(pdata, r, axis)
+            with trace.region("spmv"):
+                w = A(u)
+            with trace.region("reductions"):
+                d = lax.psum(  # the ONE all-reduce
+                    ops.fused_dots_n([(r, u), (w, u), (r, r)]), axis
+                )
+                trace.record_collective(3, w.dtype.itemsize)
+                gamma_new, delta, rr = d[0], d[1], d[2]
+                beta = gamma_new / gamma
+                alpha_new = gamma_new / (delta - beta * gamma_new / alpha)
+                p, s = ops.fused_axpy2(beta, p, u, beta, s, w)  # p=u+βp ; s=w+βs
+                x, r = ops.fused_axpy2(alpha_new, p, x, -alpha_new, s, r)
         return (i + 1, x, r, p, s, gamma_new, alpha_new, rr)
 
     i0 = jnp.asarray(1, jnp.int32)
@@ -194,29 +225,41 @@ def _sstep_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, s, axis):
     """
     dt = b.dtype
     R = b.shape[0]
-    r = b - A(x0)
-    bb = pdot(b, b, axis)
+    with trace.region("spmv"):
+        r = b - A(x0)
+    with trace.region("reductions"):
+        bb = pdot(b, b, axis)
     tol2 = tol * tol * bb
     eye = jnp.eye(s, dtype=dt)
 
     def build_basis(r):
         def one(carry, _):
             u = carry
-            p = pre.apply(pdata, u, axis)
-            w = A(p)
+            with trace.region("precond"):
+                p = pre.apply(pdata, u, axis)
+            with trace.region("spmv"):
+                w = A(p)
             return w, (p, w)
 
-        _, (Ps, Ws) = lax.scan(one, r, None, length=s)
+        # the scan body traces ONCE but executes s times per block — scale
+        # its recorded counts accordingly (see energy/trace.py)
+        with trace.repeated(s):
+            _, (Ps, Ws) = lax.scan(one, r, None, length=s)
         # (s, R) -> (R, s)
         return Ps.T, Ws.T
 
     def body(c):
+        with kd.ledger_section("iteration"):
+            return _sstep_block(c)
+
+    def _sstep_block(c):
         i, x, r, Qp, Wp, Gqq, rr = c
         Pb, Wb = build_basis(r)
         # ONE fused all-reduce: [P^T W (s*s) | W_prev^T P (s*s) | P^T r (s) | rr]
-        flat = fused_blocks(
-            [Pb.T @ Wb, Wp.T @ Pb, Pb.T @ r, jnp.vdot(r, r)[None]], axis
-        )
+        with trace.region("reductions"):
+            flat = fused_blocks(
+                [Pb.T @ Wb, Wp.T @ Pb, Pb.T @ r, jnp.vdot(r, r)[None]], axis
+            )
         Gpp = flat[: s * s].reshape(s, s)
         C = flat[s * s : 2 * s * s].reshape(s, s)
         g = flat[2 * s * s : 2 * s * s + s]

@@ -20,6 +20,8 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core.partition import DistELL, HaloPlan
+from repro.energy import trace
+from repro.energy.accounting import OpCounts
 
 
 # ---------------------------------------------------------------------------
@@ -29,6 +31,20 @@ from repro.core.partition import DistELL, HaloPlan
 
 def ell_matvec(data: jax.Array, col: jax.Array, x: jax.Array) -> jax.Array:
     """y[r] = sum_k data[r,k] * x[col[r,k]].  Padding (data=0,col=0) is free."""
+    # Executed-counts entry (trace-time only): matrix values + 4B indices
+    # streamed once, source vector read once, result written once.
+    b = data.dtype.itemsize
+    trace.record_op(
+        "ell_matvec",
+        OpCounts(
+            flops=2.0 * data.size,
+            hbm_bytes=float(
+                data.size * (b + col.dtype.itemsize)
+                + x.size * b
+                + data.shape[0] * b
+            ),
+        ),
+    )
     return jnp.einsum("rk,rk->r", data, x[col])
 
 
@@ -45,16 +61,25 @@ def halo_exchange(
     ``send_sel`` is the local (W,) selector row; buffer k is sent to shard
     ``j - shifts[k]`` and received from ``j + shifts[k]`` (zeros at edges).
     """
-    bufs = []
-    off = 0
-    for k, w in enumerate(plan.widths):
-        sel = lax.slice_in_dim(send_sel, off, off + w)
-        buf = x_own[sel]
-        bufs.append(lax.ppermute(buf, axis, plan.perm(k)))
-        off += w
-    if not bufs:
-        return jnp.zeros((0,), x_own.dtype)
-    return jnp.concatenate(bufs)
+    with trace.region("halo"):
+        b = x_own.dtype.itemsize
+        trace.record_op(
+            "halo_exchange",
+            OpCounts(
+                ici_bytes=float(plan.collective_bytes_per_shard(b)),
+                n_collectives=float(len(plan.shifts)),
+            ),
+        )
+        bufs = []
+        off = 0
+        for k, w in enumerate(plan.widths):
+            sel = lax.slice_in_dim(send_sel, off, off + w)
+            buf = x_own[sel]
+            bufs.append(lax.ppermute(buf, axis, plan.perm(k)))
+            off += w
+        if not bufs:
+            return jnp.zeros((0,), x_own.dtype)
+        return jnp.concatenate(bufs)
 
 
 def gather_ext(mat: DistELL, x_own: jax.Array, axis: str) -> jax.Array:
@@ -64,7 +89,17 @@ def gather_ext(mat: DistELL, x_own: jax.Array, axis: str) -> jax.Array:
         return jnp.concatenate([x_own, halo])
     # allgather mode: padded-global layout owner*R + local — exactly the
     # tiled all_gather of the padded shard vectors.
-    return lax.all_gather(x_own, axis, tiled=True)
+    with trace.region("halo"):
+        trace.record_op(
+            "allgather",
+            OpCounts(
+                ici_bytes=float(
+                    mat.plan.collective_bytes_per_shard(x_own.dtype.itemsize)
+                ),
+                n_collectives=1.0,
+            ),
+        )
+        return lax.all_gather(x_own, axis, tiled=True)
 
 
 # ---------------------------------------------------------------------------

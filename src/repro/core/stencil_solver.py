@@ -36,6 +36,8 @@ from repro.core.cg import (
     _BODIES,
     identity_precond,
 )
+from repro.energy import trace
+from repro.energy.accounting import OpCounts
 from repro.kernels import dispatch as kd
 
 
@@ -57,8 +59,17 @@ def make_matvec(p, n_shards: int, axis: str = "shards",
     def A(v: jax.Array) -> jax.Array:
         x3 = v.reshape(nz_loc, p.ny, p.nx)
         if n_shards > 1:
-            prev = lax.ppermute(x3[-1], axis, fwd)  # from left neighbor
-            nxt = lax.ppermute(x3[0], axis, bwd)  # from right neighbor
+            with trace.region("halo"):
+                # one boundary plane to each neighbor (trace-time counts)
+                trace.record_op(
+                    "halo_exchange",
+                    OpCounts(
+                        ici_bytes=2.0 * p.ny * p.nx * x3.dtype.itemsize,
+                        n_collectives=2.0,
+                    ),
+                )
+                prev = lax.ppermute(x3[-1], axis, fwd)  # from left neighbor
+                nxt = lax.ppermute(x3[0], axis, bwd)  # from right neighbor
         else:
             prev = jnp.zeros_like(x3[0])
             nxt = jnp.zeros_like(x3[0])

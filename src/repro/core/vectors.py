@@ -13,9 +13,18 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.energy import trace
+
+
+def _record_dots(pairs, n_out: int | None = None):
+    """Executed-counts entry for a fused local-dots + all-reduce op
+    (trace-time only; formulas live in energy/trace.py)."""
+    trace.record_op("fused_dots", trace.fused_dots_counts(pairs, n_out))
+
 
 def pdot(x: jax.Array, y: jax.Array, axis: str) -> jax.Array:
     """Global <x, y> — ONE all-reduce."""
+    _record_dots([(x, y)])
     return lax.psum(jnp.vdot(x, y), axis)
 
 
@@ -31,6 +40,7 @@ def fused_dots(pairs, axis: str) -> jax.Array:
     communication-reduced CG variants: local partial dots are stacked and
     reduced together.
     """
+    _record_dots(pairs)
     local = jnp.stack([jnp.vdot(x, y) for x, y in pairs])
     return lax.psum(local, axis)
 
@@ -44,6 +54,7 @@ def fused_blocks(parts, axis: str) -> jax.Array:
     matrix + moment vector in a single collective.
     """
     flat = jnp.concatenate([p.reshape(-1) for p in parts])
+    trace.record_collective(flat.size, flat.dtype.itemsize, op="fused_blocks")
     return lax.psum(flat, axis)
 
 

@@ -12,8 +12,15 @@ decomposition, power-peak extraction, 5-run averaging — reproduces the
 paper's methodology exactly (monitor.py / accounting.py). Absolute Joules
 are model outputs; like the paper, the analysis emphasizes *relative*
 comparisons between library variants.
+
+Region markers are *executed-code* markers (trace.py): the kernel dispatch
+layer and the distributed solver bodies record the OpCounts of every op
+that runs into the innermost active region, so the integrated per-component
+energies describe the program that was actually compiled — not a
+hand-declared estimate.
 """
 
 from repro.energy.accounting import OpCounts, CostModel  # noqa: F401
 from repro.energy.model import PowerModel  # noqa: F401
 from repro.energy.monitor import PowerMonitor  # noqa: F401
+from repro.energy import trace  # noqa: F401

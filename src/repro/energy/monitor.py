@@ -117,6 +117,33 @@ class PowerMonitor:
             p_host[m] = self.model.host_power(s.host_active)
         return ts, p_chip, p_host
 
+    def energy_by_region(self):
+        """Per-region energy ledger: segments aggregated by name.
+
+        Returns ``{name: {time_s, te_gpu_j, de_gpu_j, de_cpu_j, de_j}}``
+        summed over all devices/hosts. Because segments partition the
+        timeline, ``sum(de_j)`` over regions equals ``energy()['de_total']``
+        exactly — the invariant the executed-energy ledger is gated on.
+        """
+        n_hosts = max(self.n_devices // self.devices_per_host, 1)
+        chip0 = self.model.chip_static_w
+        host0 = self.model.host_static_w
+        out: dict[str, dict] = {}
+        for s in self.segments:
+            d = out.setdefault(
+                s.name,
+                dict(time_s=0.0, te_gpu_j=0.0, de_gpu_j=0.0, de_cpu_j=0.0,
+                     de_j=0.0),
+            )
+            de_gpu = (s.chip_w - chip0) * s.dt * self.n_devices
+            de_cpu = (self.model.host_power(s.host_active) - host0) * s.dt * n_hosts
+            d["time_s"] += s.dt
+            d["te_gpu_j"] += s.chip_w * s.dt * self.n_devices
+            d["de_gpu_j"] += de_gpu
+            d["de_cpu_j"] += de_cpu
+            d["de_j"] += de_gpu + de_cpu
+        return out
+
     def energy(self):
         """Exact per-segment integration -> paper §4.2 quantities.
 

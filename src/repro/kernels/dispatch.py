@@ -36,6 +36,8 @@ from collections import Counter
 import jax
 import jax.numpy as jnp
 
+from repro.energy import trace
+from repro.energy.accounting import OpCounts
 from repro.kernels import ref
 from repro.kernels.fused_reductions import (
     fused_axpy,
@@ -159,21 +161,29 @@ def record_sweeps():
 
 @contextlib.contextmanager
 def ledger_section(name: str):
-    """Tag ops traced inside with ``name`` (e.g. 'iteration')."""
+    """Tag ops traced inside with ``name`` (e.g. 'iteration').
+
+    Also switches the energy-trace section (energy/trace.py), so the sweep
+    ledger and the executed-counts region ledger stay in lockstep: both see
+    the while_loop body as the per-iteration accounting unit.
+    """
     global _section
     prev = _section
     _section = name
     if _ledger is not None:
         _ledger.enter(name)
     try:
-        yield
+        with trace.section(name):
+            yield
     finally:
         _section = prev
 
 
-def _record(name: str):
+def _record(name: str, counts: OpCounts | None = None):
     if _ledger is not None:
         _ledger.count(_section, name)
+    if counts is not None:
+        trace.record_op(name, counts)
 
 
 # ---------------------------------------------------------------------------
@@ -186,6 +196,10 @@ def _pallas_mode(backend_name: str, dtype) -> str:
     if backend_name == "pallas" and jnp.dtype(dtype) == jnp.dtype("float64"):
         return "jnp"
     return backend_name
+
+
+# executed-counts formulas shared with the other instrumented layers
+_axpy_counts = trace.streamed_axpy_counts
 
 
 class OpSet:
@@ -203,7 +217,7 @@ class OpSet:
 
     def axpy(self, a, x, y):
         """a*x + y."""
-        _record("axpy")
+        _record("axpy", _axpy_counts(x.size, x.dtype.itemsize))
         b = _pallas_mode(self.backend, x.dtype)
         if b == "jnp":
             return ref.fused_axpy_ref(a, x, y)
@@ -212,7 +226,7 @@ class OpSet:
 
     def fused_axpy2(self, a1, x1, y1, a2, x2, y2):
         """(a1*x1 + y1, a2*x2 + y2) in one pass."""
-        _record("fused_axpy2")
+        _record("fused_axpy2", _axpy_counts(x1.size, x1.dtype.itemsize, 2))
         b = _pallas_mode(self.backend, x1.dtype)
         if b == "jnp":
             return ref.fused_axpy2_ref(a1, x1, y1, a2, x2, y2)
@@ -221,7 +235,13 @@ class OpSet:
 
     def fused_axpy2_dots(self, a1, x1, y1, a2, x2, y2):
         """(a1*x1+y1, a2*x2+y2, local [o2.o2]) in one pass."""
-        _record("fused_axpy2_dots")
+        n, ib = x1.size, x1.dtype.itemsize
+        # two fused updates + the in-flight dot of the second output (no
+        # extra HBM pass — the operands are already streaming).
+        _record(
+            "fused_axpy2_dots",
+            _axpy_counts(n, ib, 2) + OpCounts(flops=2.0 * n),
+        )
         b = _pallas_mode(self.backend, x1.dtype)
         if b == "jnp":
             return ref.fused_axpy2_dots_ref(a1, x1, y1, a2, x2, y2)
@@ -230,7 +250,7 @@ class OpSet:
 
     def fused_dots_n(self, pairs):
         """Local partial dots [(x, y), ...] -> (len(pairs),), one pass."""
-        _record("fused_dots_n")
+        _record("fused_dots_n", trace.local_dots_counts(pairs))
         b = _pallas_mode(self.backend, pairs[0][0].dtype)
         if b == "jnp":
             return ref.fused_dots_n_ref(pairs)
@@ -242,7 +262,17 @@ class OpSet:
     def stencil_matvec(self, x3, prev_halo, next_halo, *, stencil="7pt",
                        aniso=(1.0, 1.0, 1.0)):
         """Local-slab matrix-free SpMV with explicit z-halo planes."""
-        _record("stencil_matvec")
+        n, ib = x3.size, x3.dtype.itemsize
+        k = {"7pt": 7, "27pt": 27}[stencil]
+        # matrix-free: NO matrix-value/index traffic — read the slab + both
+        # halo planes once, write the result slab once.
+        _record(
+            "stencil_matvec",
+            OpCounts(
+                flops=2.0 * k * n,
+                hbm_bytes=float(n + prev_halo.size + next_halo.size + n) * ib,
+            ),
+        )
         b = _pallas_mode(self.backend, x3.dtype)
         if b == "jnp":
             return ref.stencil_halo_ref(

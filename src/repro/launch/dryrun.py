@@ -38,9 +38,8 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs import ARCHS, SHAPES, applicable_shapes, get_config
+from repro.configs import ARCHS, SHAPES, get_config
 from repro.configs.base import ArchConfig, ShapeConfig
 
 try:  # repro.dist is only needed for the LM cells, not the solver cells
@@ -354,10 +353,8 @@ def run_solver_cell(
         if layout == "ring":
             solve = make_solver_fn(mesh, mat_sds, variant=variant, maxiter=maxiter)
         else:
-            from repro.core.baselines import make_naive_solver
-
             # naive solver closes over the matrix; rebuild as arg-style
-            from repro.core.cg import Preconditioner, SolveResult, identity_precond
+            from repro.core.cg import identity_precond
             from jax.experimental.shard_map import shard_map
             from repro.core.baselines import _cg_unfused_body
             from repro.core.spmv import local_block

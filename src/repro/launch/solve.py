@@ -4,13 +4,21 @@
         --variant fcg --devices 4
     python -m repro.launch.solve --problem g3_circuit --scale 0.01 --amg
 
-Prints runtime + iteration counts + the full energy report (powerMonitor
-analog), for both the BCMGX-analog and the Ginkgo-analog paths.
+Prints runtime + iteration counts + the full energy report, for both the
+BCMGX-analog and the Ginkgo-analog paths.
+
+Energy accounting is *executed*, not declared: the solver is compiled under
+the region trace (energy/trace.py), which records the OpCounts of every
+dispatched op into the component region that ran it (spmv / reductions /
+halo / vcycle). The PowerMonitor then integrates those counts — scaled by
+the executed iteration count — into the per-region energy ledger printed
+below the summary line and written as JSON via ``--ledger``.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 
 
@@ -30,7 +38,28 @@ def parse_args(argv=None):
     ap.add_argument("--maxiter", type=int, default=200)
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--repeats", type=int, default=1)
+    ap.add_argument("--ledger", default=None,
+                    help="write the executed energy/time ledger JSON here")
     return ap.parse_args(argv)
+
+
+def _print_regions(label: str, ledger: dict):
+    for name, r in sorted(ledger["regions"].items()):
+        print(
+            f"  [{label}] region {name:12s} t={r['time_s']:.4e}s "
+            f"DE={r['de_j']:.4f}J flops={r['flops']:.3e} "
+            f"hbm={r['hbm_bytes']:.3e}B ici={r['ici_bytes']:.3e}B"
+        )
+
+
+def _write_ledger(path: str | None, payload: dict):
+    if not path:
+        return
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"ledger written: {path}")
 
 
 def main(argv=None):
@@ -49,13 +78,13 @@ def main(argv=None):
 
     from repro.core.baselines import make_naive_solver
     from repro.core.cg import make_solver
-    from repro.core.partition import pad_vector, partition_csr, unpad_vector
+    from repro.core.partition import pad_vector, partition_csr
     from repro.core.spmv import shard_matrix, shard_vector
-    from repro.energy.accounting import CostModel, cg_iteration_counts
-    from repro.energy.monitor import PowerMonitor
+    from repro.energy import trace
+    from repro.energy.accounting import CostModel
     from repro.launch.mesh import make_solver_mesh
     from repro.matrices import poisson
-    from repro.matrices.suitesparse import TABLE1, load_or_generate
+    from repro.matrices.suitesparse import load_or_generate
 
     n_shards = args.shards or len(jax.devices())
     mesh = make_solver_mesh(n_shards)
@@ -72,21 +101,32 @@ def main(argv=None):
     b = np.ones(n)
     print(f"problem={name} n={n} nnz={a.nnz} shards={n_shards}")
 
+    cost = CostModel()
+    payload = dict(
+        schema=1, problem=name, n=int(n), nnz=int(a.nnz),
+        shards=int(n_shards), op=args.op, solvers={},
+    )
+
     precond = None
     amg_info = None
     setup_time = 0.0
     if args.amg or args.amgx_analog:
-        if args.amgx_analog:
-            from repro.core.amg.baseline import build_amgx_analog as builder
-        else:
-            from repro.core.amg import build_amg as builder
+        from repro.core.amg import make_amg_preconditioner
 
         t0 = time.perf_counter()
-        precond, amg_info = builder(a, n_shards)
+        precond, amg_info = make_amg_preconditioner(
+            a, n_shards, amgx_analog=args.amgx_analog
+        )
         setup_time = time.perf_counter() - t0
         print(
             f"AMG: {amg_info.n_levels} levels rows={amg_info.level_rows} "
             f"opcx={amg_info.operator_complexity:.2f} setup={setup_time:.4f}s"
+        )
+        payload["amg"] = dict(
+            n_levels=amg_info.n_levels,
+            level_rows=list(amg_info.level_rows),
+            level_nnz=list(amg_info.level_nnz),
+            operator_complexity=amg_info.operator_complexity,
         )
 
     mat = shard_matrix(mesh, partition_csr(a, n_shards))
@@ -98,13 +138,13 @@ def main(argv=None):
     if args.op == "spmv":
         from repro.core.baselines import make_naive_spmv
         from repro.core.spmv import make_spmv
-        from repro.energy.accounting import spmv_counts
 
         for label, m, fn in [
             ("BCMGX-analog", mat, make_spmv(mesh, mat)),
             ("Ginkgo-analog", matg, make_naive_spmv(mesh, matg)),
         ]:
-            y = fn(m, bp)
+            with trace.capture() as tr:
+                y = fn(m, bp)  # compile: executed counts recorded
             jax.block_until_ready(y)
             t0 = time.perf_counter()
             for _ in range(100):
@@ -112,20 +152,23 @@ def main(argv=None):
             jax.block_until_ready(y)
             wall = (time.perf_counter() - t0) / 100
             overlap = label == "BCMGX-analog"
-            counts = spmv_counts(m, overlap)
-            mon = PowerMonitor(n_devices=n_shards, cost=CostModel())
-            mon.idle(0.01)
-            t_model = mon.region(
-                "spmv", counts, n_shards=n_shards, overlap=overlap, repeats=100
+            led = trace.ledger_from_trace(
+                tr, iters=0, n_shards=n_shards, cost=cost, overlap=overlap,
+                idle_s=0.01, setup_repeats=100,
             )
-            mon.idle(0.01)
-            e = mon.energy()
+            e = led["totals"]
+            t_model = sum(r["time_s"] for r in led["regions"].values())
             print(
                 f"{label:14s} iters=100 relres=0.0e+00 "
                 f"wall={wall:.6f}s modeled={t_model/100:.4e}s "
                 f"DE={e['de_total']:.4f}J peak={e['gpu_power_peak']:.0f}W "
                 f"DEgpu={e['de_gpu']:.4f}J DEcpu={e['de_cpu']:.4f}J"
             )
+            _print_regions(label, led)
+            payload["solvers"][label] = dict(
+                led, wall_s=wall, modeled_s=t_model / 100
+            )
+        _write_ledger(args.ledger, payload)
         return
 
     solver = make_solver(
@@ -137,10 +180,11 @@ def main(argv=None):
     bcmgx_label = "BCMGX-analog"
     if args.amgx_analog:
         bcmgx_label = "AmgX-analog"
-    for label, fn, m in [(bcmgx_label, solver, mat), ("Ginkgo-analog", naive, matg)]:
+    for label, fn in [(bcmgx_label, solver), ("Ginkgo-analog", naive)]:
         if label == "Ginkgo-analog" and (args.amg or args.amgx_analog):
             continue  # paper compares PCG against AmgX, not Ginkgo
-        res = fn(bp, x0)  # warmup/compile
+        with trace.capture() as tr:
+            res = fn(bp, x0)  # warmup/compile: executed counts recorded
         jax.block_until_ready(res.x)
         t0 = time.perf_counter()
         for _ in range(args.repeats):
@@ -148,21 +192,13 @@ def main(argv=None):
             jax.block_until_ready(res.x)
         wall = (time.perf_counter() - t0) / args.repeats
         iters = int(res.iters)
-        # energy report from the powerMonitor analog
-        variant = args.variant if label != "Ginkgo-analog" else "naive"
-        counts = cg_iteration_counts(m, variant)
-        if precond is not None:
-            from repro.energy.accounting import vcycle_counts
-
-            counts = counts + vcycle_counts(amg_info, m)
-        mon = PowerMonitor(n_devices=n_shards, cost=CostModel())
-        mon.idle(0.01)
-        t_model = mon.region(
-            "cg", counts, n_shards=n_shards,
-            overlap=(label != "Ginkgo-analog"), repeats=max(iters, 1),
+        # energy ledger: executed per-region counts x executed iterations
+        led = trace.ledger_from_trace(
+            tr, iters=iters, n_shards=n_shards, cost=cost,
+            overlap=(label != "Ginkgo-analog"), idle_s=0.01,
         )
-        mon.idle(0.01)
-        e = mon.energy()
+        e = led["totals"]
+        t_model = sum(r["time_s"] for r in led["regions"].values())
         print(
             f"{label:14s} iters={iters} relres={float(res.rel_residual):.2e} "
             f"wall={wall:.4f}s modeled={t_model:.4e}s "
@@ -170,6 +206,13 @@ def main(argv=None):
             f"DEgpu={e['de_gpu']:.4f}J DEcpu={e['de_cpu']:.4f}J "
             f"setup={setup_time:.4f}s solve={wall:.4f}s"
         )
+        _print_regions(label, led)
+        payload["solvers"][label] = dict(
+            led, wall_s=wall, modeled_s=t_model,
+            relres=float(res.rel_residual), setup_s=setup_time,
+            variant=args.variant if label == bcmgx_label else "naive",
+        )
+    _write_ledger(args.ledger, payload)
 
 
 if __name__ == "__main__":

@@ -26,7 +26,6 @@ from repro.models.layers import (
     init_linear,
     init_rmsnorm,
     linear,
-    normal_init,
     rmsnorm,
 )
 

@@ -18,7 +18,6 @@ returning per-layer cache/state) and single-token decode (cache in/out).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +38,6 @@ from repro.models.layers import (
     init_rmsnorm,
     mlp,
     rmsnorm,
-    unembed,
 )
 
 

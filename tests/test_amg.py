@@ -10,7 +10,6 @@ from hypothesis import strategies as st
 from repro.core.amg.aggregation import (
     compose_matchings,
     decoupled_aggregate,
-    match_to_aggregates,
     tentative_prolongator,
 )
 from repro.core.amg.galerkin import l1_diagonal, rap

@@ -10,7 +10,6 @@ from repro.energy.accounting import (
     CostModel,
     OpCounts,
     cg_iteration_counts,
-    dot_counts,
     spmv_counts,
 )
 from repro.energy.model import PowerModel
@@ -76,8 +75,6 @@ def test_opcounts_algebra():
 
 
 def _fake_mat(n_shards=8, R=1000, mode="ring"):
-    import dataclasses
-
     import jax.numpy as jnp
 
     from repro.core.partition import DistELL

@@ -5,7 +5,6 @@ import dataclasses
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import ARCHS, applicable_shapes, get_config

@@ -1,7 +1,6 @@
 """Partition/halo-plan invariants (property-based)."""
 
 import numpy as np
-import pytest
 import scipy.sparse as sp
 from hypothesis import given, settings
 from hypothesis import strategies as st

@@ -11,7 +11,6 @@ _sharding = pytest.importorskip("repro.dist.sharding")
 axis_size, batch_specs = _sharding.axis_size, _sharding.batch_specs
 cache_specs, param_specs = _sharding.cache_specs, _sharding.param_specs
 from repro.models import lm, transformer as tfm
-from repro.models.kvcache import cache_shapes
 from repro.roofline import analysis as ra
 
 SINGLE = AbstractMesh((16, 16), ("data", "model"))

@@ -1,0 +1,235 @@
+"""Region trace + executed-energy ledger invariants.
+
+Regions nest (innermost attribution), dispatched ops record their OpCounts
+into the active region, the executed AMG V-cycle PCG converges, and the
+per-region energies integrated from the trace sum to the PowerMonitor
+total — the acceptance invariant CI's energy-ledger job gates.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.energy import trace
+from repro.energy.accounting import OpCounts
+from repro.kernels import dispatch as kd
+
+
+# ---------------------------------------------------------------------------
+# Region stack semantics
+# ---------------------------------------------------------------------------
+
+
+def test_regions_nest_innermost_wins():
+    with trace.capture() as tr:
+        with trace.region("outer"):
+            trace.record_op("a", OpCounts(flops=1.0))
+            with trace.region("inner"):
+                trace.record_op("b", OpCounts(flops=10.0))
+                assert trace.current_region() == "inner"
+            trace.record_op("c", OpCounts(flops=100.0))
+            assert trace.current_region() == "outer"
+    regs = tr.regions(trace.SETUP)
+    assert regs["outer"].flops == 101.0
+    assert regs["inner"].flops == 10.0
+    assert tr.total().flops == 111.0
+
+
+def test_no_active_trace_is_noop():
+    trace.record_op("x", OpCounts(flops=1.0))  # must not raise
+    with trace.capture() as tr:
+        pass
+    assert tr.empty
+
+
+def test_default_region_and_sections():
+    with trace.capture() as tr:
+        trace.record_op("a", OpCounts(hbm_bytes=8.0))
+        with trace.section("iteration"):
+            trace.record_op("b", OpCounts(hbm_bytes=16.0))
+            trace.record_op("b", OpCounts(hbm_bytes=16.0))
+    assert tr.regions("setup")["other"].hbm_bytes == 8.0
+    assert tr.regions("iteration")["other"].hbm_bytes == 32.0
+    # entries normalization: two entries of the same section halve the counts
+    with trace.capture() as tr2:
+        for _ in range(2):
+            with trace.section("iteration"):
+                trace.record_op("b", OpCounts(hbm_bytes=16.0))
+    assert tr2.regions("iteration")["other"].hbm_bytes == 16.0
+
+
+def test_repeated_scales_scan_bodies():
+    """Bodies traced once but executed k times (lax.scan) scale their
+    recorded counts by k — the s-step basis build relies on this."""
+    with trace.capture() as tr:
+        with trace.repeated(3):
+            trace.record_op("a", OpCounts(flops=2.0, hbm_bytes=8.0))
+            with trace.repeated(2):  # nesting multiplies
+                trace.record_op("b", OpCounts(flops=1.0))
+        trace.record_op("c", OpCounts(flops=1.0))
+    t = tr.total()
+    assert t.flops == 3 * 2.0 + 6 * 1.0 + 1.0
+    assert t.hbm_bytes == 3 * 8.0
+
+
+def test_capture_restores_previous_trace():
+    with trace.capture() as outer:
+        trace.record_op("a", OpCounts(flops=1.0))
+        with trace.capture() as inner:
+            trace.record_op("b", OpCounts(flops=2.0))
+        trace.record_op("c", OpCounts(flops=4.0))
+    assert inner.total().flops == 2.0
+    assert outer.total().flops == 5.0  # a + c, not b
+
+
+# ---------------------------------------------------------------------------
+# Dispatch ops record executed counts into the innermost region
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_ops_record_counts():
+    ops = kd.ops_for("jnp")
+    n = 1000
+    x = jnp.ones((n,), jnp.float32)
+    with trace.capture() as tr:
+        with trace.region("reductions"):
+            ops.axpy(1.0, x, x)
+            ops.fused_dots_n([(x, x)])
+    c = tr.regions(trace.SETUP)["reductions"]
+    # axpy: 2n flops, 3n*4B; fused dot over the aliased pair: 2n flops, n*4B
+    assert c.flops == 4 * n
+    assert c.hbm_bytes == 3 * n * 4 + n * 4
+    calls = tr.calls(trace.SETUP)["reductions"]
+    assert calls["axpy"] == 1 and calls["fused_dots_n"] == 1
+
+
+def test_ledger_section_switches_trace_section():
+    ops = kd.ops_for("jnp")
+    x = jnp.ones((64,), jnp.float32)
+    with trace.capture() as tr:
+        with kd.ledger_section("iteration"):
+            with trace.region("reductions"):
+                ops.axpy(1.0, x, x)
+    assert "reductions" in tr.regions("iteration")
+    assert tr.regions("setup") == {}
+
+
+def _traced_amg_solve(single_mesh):
+    """Trace an executed AMG-PCG solve; returns (trace, iters, rel_residual)."""
+    from repro.core.amg import make_amg_preconditioner
+    from repro.core.cg import make_solver
+    from repro.core.partition import pad_vector, partition_csr
+    from repro.core.spmv import shard_matrix, shard_vector
+    from repro.matrices.poisson import cube, poisson_scipy
+
+    p = cube(8, "7pt")
+    a = poisson_scipy(p)
+    pre, info = make_amg_preconditioner(a, 1)
+    assert info.n_levels >= 2
+    mat = shard_matrix(single_mesh, partition_csr(a, 1))
+    b = pad_vector(np.ones(p.n), mat)
+    bp = shard_vector(single_mesh, b)
+    x0 = shard_vector(single_mesh, np.zeros_like(b))
+    with trace.capture() as tr:
+        solver = make_solver(single_mesh, mat, precond=pre, tol=1e-8,
+                             maxiter=100)
+        res = solver(bp, x0)
+    return tr, int(res.iters), float(res.rel_residual)
+
+
+def test_spmv_and_halo_attribution(single_mesh):
+    """ell_matvec counts land in the caller's region; a traced solve
+    attributes spmv / reductions / vcycle to their own regions."""
+    tr, iters, relres = _traced_amg_solve(single_mesh)
+    # executed V-cycle PCG converges fast on Poisson
+    assert relres < 1e-8
+    assert iters < 20
+    it = tr.regions(trace.ITERATION)
+    assert {"spmv", "reductions", "vcycle"} <= set(it)
+    # the V-cycle does far more work per iteration than the single SpMV
+    assert it["vcycle"].hbm_bytes > it["spmv"].hbm_bytes
+    # reductions carry the iteration's collectives (2 all-reduces for hs)
+    assert it["reductions"].n_collectives >= 2
+
+
+# ---------------------------------------------------------------------------
+# Ledger: per-region energies sum to the monitor total
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_regions_sum_to_monitor_total(single_mesh):
+    tr, iters, _ = _traced_amg_solve(single_mesh)
+    led = trace.ledger_from_trace(tr, iters=iters, n_shards=1, idle_s=0.01)
+    total = led["totals"]["de_total"]
+    region_sum = sum(r["de_j"] for r in led["regions"].values())
+    assert total > 0
+    assert abs(region_sum - total) <= 0.01 * total  # acceptance: within 1%
+    # idle padding is kept out of the per-region ledger (zero counts/DE);
+    # regions + the two idle pads partition the monitored runtime
+    assert "idle" not in led["regions"]
+    t = sum(r["time_s"] for r in led["regions"].values())
+    assert t + 2 * 0.01 == pytest.approx(led["totals"]["runtime"])
+    # energy_by_region is consistent with the totals on the te side too
+    mon = trace.monitor_from_trace(tr, iters=iters, n_shards=1)
+    by = mon.energy_by_region()
+    assert sum(r["te_gpu_j"] for r in by.values()) == pytest.approx(
+        mon.energy()["te_gpu"]
+    )
+
+
+def test_executed_vcycle_pcg_multidevice_ledger():
+    """End-to-end: launch.solve --amg on 2 devices writes a ledger whose
+    executed regions include the halo and sum to the monitor total."""
+    import json
+    import os
+    import subprocess
+    import sys
+    import tempfile
+
+    from tests.conftest import REPO, SRC
+
+    fd, path = tempfile.mkstemp(suffix=".json")
+    os.close(fd)
+    try:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.solve", "--devices", "2",
+             "--problem", "poisson7", "--side", "8", "--amg",
+             "--tol", "1e-6", "--maxiter", "50", "--ledger", path],
+            capture_output=True, text=True, timeout=900, env=env, cwd=REPO,
+        )
+        assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+        led = json.load(open(path))
+    finally:
+        os.unlink(path)
+    s = led["solvers"]["BCMGX-analog"]
+    assert s["iters"] > 0
+    regions = s["regions"]
+    assert {"spmv", "reductions", "halo", "vcycle"} <= set(regions)
+    total = s["totals"]["de_total"]
+    region_sum = sum(r["de_j"] for r in regions.values())
+    assert abs(region_sum - total) <= 0.01 * total
+    # the executed V-cycle is the dominant compute component (paper Fig 13)
+    assert regions["vcycle"]["flops"] > regions["spmv"]["flops"]
+
+
+def test_identity_precond_traces_no_vcycle(single_mesh):
+    from repro.core.cg import make_solver
+    from repro.core.partition import pad_vector, partition_csr
+    from repro.core.spmv import shard_matrix, shard_vector
+    from repro.matrices.poisson import cube, poisson_scipy
+
+    p = cube(6, "7pt")
+    a = poisson_scipy(p)
+    mat = shard_matrix(single_mesh, partition_csr(a, 1))
+    b = pad_vector(np.ones(p.n), mat)
+    with trace.capture() as tr:
+        solver = make_solver(single_mesh, mat, tol=1e-8, maxiter=200)
+        res = solver(shard_vector(single_mesh, b),
+                     shard_vector(single_mesh, np.zeros_like(b)))
+    jax.block_until_ready(res.x)
+    it = tr.regions(trace.ITERATION)
+    assert "vcycle" not in it and "precond" not in it
+    assert {"spmv", "reductions"} <= set(it)

@@ -11,7 +11,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.data.synthetic import TokenStream
-from repro.models import lm, transformer as tfm
+from repro.models import transformer as tfm
 from repro.train.loop import make_train_step
 from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
 
