@@ -40,16 +40,18 @@ def measured_sweeps() -> list[dict]:
     p = PoissonProblem(8, 8, 8, "7pt")
     vec = jax.ShapeDtypeStruct((1, p.n), "float64")
     rows = []
-    for variant in ("hs", "fcg"):
+    # pipecg's extra z recurrence buys the hidden all-reduce: bound 4, not 3
+    bounds = {"hs": 3, "fcg": 3, "pipecg": 4}
+    for variant, bound in bounds.items():
         with kd.record_sweeps() as led:
             solve = make_stencil_solver_fn(mesh, p, 1, variant=variant)
             solve.lower(vec, vec)
         sweeps = led.vector_sweeps("iteration")
         rows.append(dict(variant=variant, vector_sweeps_per_iter=sweeps,
                          spmv_per_iter=led.spmv_calls("iteration")))
-        assert sweeps <= 3, (
-            f"{variant}: {sweeps} full-vector sweeps/iter > 3 — hot-path "
-            "fusion regressed (acceptance bound)"
+        assert sweeps <= bound, (
+            f"{variant}: {sweeps} full-vector sweeps/iter > {bound} — "
+            "hot-path fusion regressed (acceptance bound)"
         )
     return rows
 
@@ -64,7 +66,7 @@ def modeled_table() -> list[dict]:
     rows = []
     for stencil, side, k in PAPER_CASES:
         n = side**3
-        for variant in ("hs", "fcg"):
+        for variant in ("hs", "fcg", "pipecg"):
             for matfree in (False, True):
                 row = dict(
                     stencil=stencil, variant=variant,

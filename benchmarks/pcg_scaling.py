@@ -5,9 +5,10 @@ BCMGX-analog (compatible weighted matching, locally-dominant) vs AmgX-analog
 
 The DEFAULT path is **executed**: real PCG runs (subprocess, multi host
 devices) where the AMG V-cycle built by ``make_amg_preconditioner`` actually
-runs inside the solver's shard_map, and the per-region energy ledger (spmv /
-reductions / halo / vcycle) is integrated from the region trace of the
-compiled program — no synthetic cycle profile anywhere on this path. The
+runs inside the solver's shard_map, and the per-region energy ledger
+(overlap — the SpMVs with their in-flight halo — / reductions / vcycle) is
+integrated from the region trace of the compiled program — no synthetic
+cycle profile anywhere on this path. The
 emitted JSON ledger's per-region energies sum to the PowerMonitor total by
 construction, and CI gates them against checked-in baselines.
 
@@ -32,7 +33,7 @@ from repro.energy.accounting import CostModel, cg_iteration_counts, vcycle_count
 from repro.energy.monitor import PowerMonitor
 
 SIDE = 370  # paper single-GPU PCG size (7pt)
-REGIONS = ("spmv", "reductions", "halo", "vcycle")
+REGIONS = ("overlap", "reductions", "vcycle")
 
 
 def executed(side: int = 20, shards: int = 4) -> list[dict]:

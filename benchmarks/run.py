@@ -27,6 +27,7 @@ BENCHES = [
     ("pcg_scaling (Fig 11-16, Tab 6)", "benchmarks.pcg_scaling"),
     ("suitesparse (Tab 7-8)", "benchmarks.suitesparse"),
     ("hotpath_fusion (§Perf)", "benchmarks.hotpath_fusion"),
+    ("overlap_scaling (§Overlap)", "benchmarks.overlap_scaling"),
     ("roofline_table (§Roofline)", "benchmarks.roofline_table"),
 ]
 
@@ -61,7 +62,7 @@ def main(argv=None):
             continue
         if args.fast and not args.smoke and modname in (
             "benchmarks.pcg_scaling", "benchmarks.suitesparse",
-            "benchmarks.hotpath_fusion",
+            "benchmarks.hotpath_fusion", "benchmarks.overlap_scaling",
         ):
             print(f"=== {title}: SKIPPED (--fast) ===\n")
             continue

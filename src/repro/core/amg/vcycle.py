@@ -18,8 +18,10 @@ Energy accounting: the whole cycle runs inside ``region("vcycle")``
 (energy/trace.py) and its vector updates go through the kernel dispatch
 OpSet, so every SpMV, smoother sweep, transfer, and the coarse solve record
 their executed OpCounts — the "preconditioner" component of the paper's
-per-kernel energy profile. Halo exchanges inside the level SpMVs attribute
-to the "halo" region (innermost marker wins).
+per-kernel energy profile. The level SpMVs use the overlapped
+interior/boundary schedule by default, so their matvec + in-flight halo
+attribute to the "overlap" region (innermost marker wins); restriction,
+prolongation, smoother scaling, and the coarse solve stay in "vcycle".
 """
 
 from __future__ import annotations

@@ -25,7 +25,13 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.cg import Preconditioner, SolveResult, identity_precond
 from repro.core.partition import DistELL
-from repro.core.spmv import dist_specs, ell_matvec, gather_ext, local_block
+from repro.core.spmv import (
+    boundary_matvec,
+    dist_specs,
+    ell_matvec,
+    gather_ext,
+    local_block,
+)
 from repro.core.vectors import pdot
 from repro.energy import trace
 from repro.kernels import dispatch as kd
@@ -53,8 +59,8 @@ def spmv_naive_shard(mat: DistELL, x_own: jax.Array, axis: str) -> jax.Array:
     idx = lax.axis_index(axis)
     x_own_from_full = lax.dynamic_slice_in_dim(x_full, idx * R, R)
     y = ell_matvec(mat.data_loc, mat.col_loc, x_own_from_full)
-    y = y + ell_matvec(mat.data_ext, mat.col_ext, x_full)
-    return y
+    yb = boundary_matvec(mat.data_ext, mat.col_ext, x_full)
+    return y.at[mat.bnd_rows].add(yb)
 
 
 def _cg_unfused_body(mat, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis):

@@ -1,6 +1,6 @@
 """Distributed Conjugate Gradient solvers (the paper's C2).
 
-Three variants, mirroring BootCMatchGX:
+Four variants — three mirroring BootCMatchGX, one beyond-paper:
 
 * ``hs``    — the classical Hestenes–Stiefel PCG [23]. Two all-reduces per
   iteration in our implementation (the (p, Ap) dot, and a *fused* reduce of
@@ -17,6 +17,14 @@ Three variants, mirroring BootCMatchGX:
   ||r||² packed together). Monomial basis in (M A); A-conjugation against the
   previous block is reconstructed locally from the reduced Gram blocks, so no
   second reduction is needed.
+* ``pipecg`` — pipelined CG after Ghysels & Vanroose: like ``fcg`` it needs
+  only **one** fused all-reduce per iteration, but the reduction is *issued
+  before* the iteration's SpMV + preconditioner application, whose results
+  it does not depend on — so the all-reduce latency (the dominant strong-
+  scaling cost at high shard counts) hides behind the matvec instead of
+  stalling it. Costs two extra vector recurrences (+1 fused HBM sweep/iter
+  with the identity preconditioner); see ``docs/solvers.md`` for when the
+  trade wins.
 
 All solvers run entirely inside one ``shard_map`` region: vectors are local
 (R,) shards, the matrix is a local DistELL block, and every collective is
@@ -36,7 +44,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core.partition import DistELL
-from repro.core.spmv import dist_specs, local_block, spmv_shard
+from repro.core.spmv import dist_specs, local_block, overlap_default, spmv_shard
 from repro.core.vectors import fused_blocks, fused_dots, pdot
 from repro.energy import trace
 from repro.kernels import dispatch as kd
@@ -65,6 +73,14 @@ def _default_localize(data):
     return jax.tree.map(
         lambda a: a[0] if hasattr(a, "ndim") and a.ndim > 0 else a, data
     )
+
+
+def _safe_div(num, den):
+    """num/den, but 0 when den == 0 — guards the pre-loop step of the
+    fcg/pipecg bodies against a zero initial residual (r0 = 0 makes every
+    Gram scalar 0; the update must then be a no-op, not NaN)."""
+    safe = jnp.where(den != 0, den, 1.0)
+    return jnp.where(den != 0, num / safe, 0.0)
 
 
 def identity_precond() -> Preconditioner:
@@ -180,7 +196,7 @@ def _fcg_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis, ops):
     gamma, delta, rr, bb = d0[0], d0[1], d0[2], d0[3]
     tol2 = tol * tol * bb
 
-    alpha = gamma / delta
+    alpha = _safe_div(gamma, delta)  # r0 == 0 -> no-op first step, not NaN
     p, s = u, w
     x = x0 + alpha * p
     r = r - alpha * s
@@ -214,6 +230,118 @@ def _fcg_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis, ops):
     i0 = jnp.asarray(1, jnp.int32)
     c = lax.while_loop(cond, body, (i0, x, r, p, s, gamma, alpha, rr))
     return c[1], c[0], c[7], bb
+
+
+def _pipecg_body(
+    A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis, ops,
+    overlap=True,
+):
+    """Ghysels–Vanroose pipelined PCG: ONE all-reduce/iter, hidden.
+
+    The fused reduction (gamma = r·u, delta = w·u, ||r||²) is issued at the
+    top of the body; the SpMV ``n = A (M w)`` that follows does not depend
+    on its result, so XLA schedules the all-reduce concurrently with the
+    matvec — with ``overlap=True`` both are attributed to the ``"overlap"``
+    energy region (modeled hidden; energy/trace.py). The price is the extra
+    z (and q, under a real preconditioner) recurrences: 4 full-vector HBM
+    sweeps per iteration outside the SpMV with the identity preconditioner
+    (3 fused axpy2 passes + the fused dot pass) vs 3 for hs/fcg.
+
+    The convergence check uses the ||r||² from the fused reduction, which
+    lags the updated residual by one iteration — the standard pipelined-CG
+    trade of one extra iteration for the hidden latency.
+    """
+    # -- init: r0, u0 = M r0, w0 = A u0, first reduction + first update -----
+    with trace.region("spmv"):
+        r = b - A(x0)
+    if pre.is_identity:
+        u = r
+    else:
+        with trace.region("precond"):
+            u = pre.apply(pdata, r, axis)
+    with trace.region("spmv"):
+        w = A(u)
+    with trace.region("reductions"):
+        d0 = fused_dots([(r, u), (w, u), (r, r), (b, b)], axis)
+    gamma, delta, rr, bb = d0[0], d0[1], d0[2], d0[3]
+    tol2 = tol * tol * bb
+
+    if pre.is_identity:
+        m = w
+    else:
+        with trace.region("precond"):
+            m = pre.apply(pdata, w, axis)
+    with trace.region("spmv"):
+        n = A(m)
+    alpha = _safe_div(gamma, delta)  # r0 == 0 -> no-op first step, not NaN
+    z, q, s_, p = n, m, w, u
+    x = x0 + alpha * p
+    r = r - alpha * s_
+    u = r if pre.is_identity else u - alpha * q
+    w = w - alpha * z
+
+    def _reduce(r, u, w):
+        """Issue the ONE fused all-reduce (the SpMV that follows does not
+        depend on its result — that independence is the pipeline)."""
+        pairs = (
+            [(w, r), (r, r)] if pre.is_identity else [(r, u), (w, u), (r, r)]
+        )
+        d = lax.psum(ops.fused_dots_n(pairs), axis)
+        trace.record_collective(len(pairs), w.dtype.itemsize)
+        return d
+
+    def _precond_w(w):
+        if pre.is_identity:
+            return w
+        with trace.region("precond"):
+            return pre.apply(pdata, w, axis)
+
+    def body(c):
+        i, x, r, u, w, p, s_, q, z, gamma, alpha, rr = c
+        with kd.ledger_section("iteration"):
+            if overlap:
+                # reduction + concurrent SpMV: one co-scheduled phase
+                with trace.region(trace.OVERLAP):
+                    d = _reduce(r, u, w)
+                    m = _precond_w(w)
+                    n = A(m)
+            else:
+                # serialized A/B reference: the reduction blocks, then the
+                # SpMV runs — attributed like the hs/fcg bodies
+                with trace.region("reductions"):
+                    d = _reduce(r, u, w)
+                m = _precond_w(w)
+                with trace.region("spmv"):
+                    n = A(m)
+            if pre.is_identity:
+                delta, gamma_new, rr = d[0], d[1], d[1]
+            else:
+                gamma_new, delta, rr = d[0], d[1], d[2]
+            beta = gamma_new / gamma
+            alpha_new = gamma_new / (delta - beta * gamma_new / alpha)
+            with trace.region("reductions"):
+                if pre.is_identity:
+                    # 3 fused passes: (z, s), (p, w), (x, r); u == r, q == s
+                    z, s_ = ops.fused_axpy2(beta, z, n, beta, s_, w)
+                    p, w = ops.fused_axpy2(beta, p, r, -alpha_new, z, w)
+                    x, r = ops.fused_axpy2(alpha_new, p, x, -alpha_new, s_, r)
+                    u, q = r, s_
+                else:
+                    z, q = ops.fused_axpy2(beta, z, n, beta, q, m)
+                    s_, p = ops.fused_axpy2(beta, s_, w, beta, p, u)
+                    x, r = ops.fused_axpy2(alpha_new, p, x, -alpha_new, s_, r)
+                    u, w = ops.fused_axpy2(-alpha_new, q, u, -alpha_new, z, w)
+        return (i + 1, x, r, u, w, p, s_, q, z, gamma_new, alpha_new, rr)
+
+    def cond(c):
+        i, x, r, u, w, p, s_, q, z, gamma, alpha, rr = c
+        return (i < maxiter) & (rr > tol2)
+
+    i0 = jnp.asarray(1, jnp.int32)
+    c = lax.while_loop(
+        cond, body, (i0, x, r, u, w, p, s_, q, z, gamma, alpha, rr)
+    )
+    return c[1], c[0], c[11], bb
 
 
 def _sstep_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, s, axis):
@@ -293,7 +421,12 @@ def _sstep_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, s, axis):
     return c[1], c[0], c[6], bb
 
 
-_BODIES = {"hs": _hs_body, "fcg": _fcg_body, "sstep": _sstep_body}
+_BODIES = {
+    "hs": _hs_body,
+    "fcg": _fcg_body,
+    "pipecg": _pipecg_body,
+    "sstep": _sstep_body,
+}
 VARIANTS = tuple(_BODIES)
 
 
@@ -313,11 +446,39 @@ def make_solver(
     s: int = 2,
     axis: str = "shards",
     kernels: str | None = None,
+    overlap: bool = True,
 ):
-    """Build a jitted distributed solver: (b, x0) -> SolveResult.
+    """Build a jitted distributed solver: ``solve(b, x0) -> SolveResult``.
 
-    ``b``/``x0`` are (S, R) padded sharded arrays (see partition.pad_vector
-    + spmv.shard_vector).
+    Args:
+        mesh: 1-D ``jax.sharding.Mesh`` with a ``shards`` axis (see
+            ``launch/mesh.py``).
+        mat: the distributed matrix (leading shard axis on every data leaf;
+            build with ``partition_csr`` / ``partition_stencil`` +
+            ``spmv.shard_matrix``).
+        variant: ``"hs"`` | ``"fcg"`` | ``"pipecg"`` | ``"sstep"`` — see the
+            module docstring and ``docs/solvers.md`` for the trade-offs.
+        precond: a :class:`Preconditioner` (None = identity).
+        tol: relative residual target; convergence is declared at
+            ``||r||^2 <= tol^2 * ||b||^2``.
+        maxiter: iteration cap (an s-step block counts as ``s`` iterations).
+        s: block size for ``variant="sstep"`` (ignored otherwise).
+        axis: shard_map mesh-axis name the collectives run over.
+        kernels: hot-path backend for the hs/fcg/pipecg bodies — one of
+            ``kernels.dispatch.BACKENDS`` or None/'auto' (resolve from
+            override/env/backend). The sstep body rejects an explicit
+            choice (its vector work is blocked Gram algebra).
+        overlap: communication-hiding schedule (default on): the SpMV uses
+            the interior/boundary split with the halo exchange in flight,
+            and ``pipecg`` issues its all-reduce before the concurrent
+            SpMV. ``False`` restores the serialized order (for A/B energy
+            comparisons — see ``benchmarks/overlap_scaling.py``).
+
+    Returns:
+        A jitted ``solve(b, x0) -> SolveResult`` where ``b``/``x0`` are
+        (S, R) padded sharded arrays (``partition.pad_vector`` +
+        ``spmv.shard_vector``) and the result carries the (S, R) solution,
+        the executed iteration count, and ``||r||^2`` / ``||b||^2``.
     """
     from jax.experimental.shard_map import shard_map
 
@@ -327,12 +488,14 @@ def make_solver(
     if variant == "sstep":
         if kernels not in (None, "auto"):
             raise ValueError(
-                "kernels= only routes the hs/fcg bodies; the sstep body "
-                "does its vector work in blocked Gram algebra"
+                "kernels= only routes the hs/fcg/pipecg bodies; the sstep "
+                "body does its vector work in blocked Gram algebra"
             )
         kw["s"] = s
     else:
         kw["ops"] = kd.ops_for(kernels)
+    if variant == "pipecg":
+        kw["overlap"] = overlap
 
     mat_specs = dist_specs(mat)
 
@@ -341,8 +504,11 @@ def make_solver(
     def fn(m, pdata, b, x0):
         mb = local_block(m)
         pl = localize(pdata)
-        A = lambda v: spmv_shard(mb, v, axis)
-        x, iters, rr, bb = body(A, pre, pl, b[0], x0[0], **kw)
+        A = lambda v: spmv_shard(mb, v, axis, overlap=overlap)
+        # scope the default so preconditioner-internal SpMVs (the AMG
+        # V-cycle's smoothers) follow the solver's schedule too
+        with overlap_default(overlap):
+            x, iters, rr, bb = body(A, pre, pl, b[0], x0[0], **kw)
         return x[None], iters, rr, bb
 
     mapped = shard_map(
@@ -372,12 +538,15 @@ def make_solver_fn(
     s: int = 2,
     axis: str = "shards",
     kernels: str | None = None,
+    overlap: bool = True,
 ):
-    """Lowerable variant: returns jitted fn(mat, b, x0) with the matrix as a
-    runtime argument — accepts ShapeDtypeStruct trees, which is what the
-    production-mesh dry-run lowers (no data, no allocation).
+    """Lowerable variant of :func:`make_solver`: returns a jitted
+    ``solve(mat, b, x0)`` with the matrix as a *runtime argument* — accepts
+    ShapeDtypeStruct trees, which is what the production-mesh dry-run lowers
+    (no data, no allocation).
 
-    ``mat_like`` only supplies shapes/plan for the sharding specs.
+    ``mat_like`` only supplies shapes/plan for the sharding specs; all other
+    arguments as in :func:`make_solver`.
     """
     from jax.experimental.shard_map import shard_map
 
@@ -387,20 +556,23 @@ def make_solver_fn(
     if variant == "sstep":
         if kernels not in (None, "auto"):
             raise ValueError(
-                "kernels= only routes the hs/fcg bodies; the sstep body "
-                "does its vector work in blocked Gram algebra"
+                "kernels= only routes the hs/fcg/pipecg bodies; the sstep "
+                "body does its vector work in blocked Gram algebra"
             )
         kw["s"] = s
     else:
         kw["ops"] = kd.ops_for(kernels)
+    if variant == "pipecg":
+        kw["overlap"] = overlap
     mat_specs = dist_specs(mat_like)
     localize = pre.localize or _default_localize
 
     def fn(m, pdata, b, x0):
         mb = local_block(m)
         pl = localize(pdata)
-        A = lambda v: spmv_shard(mb, v, axis)
-        x, iters, rr, bb = body(A, pre, pl, b[0], x0[0], **kw)
+        A = lambda v: spmv_shard(mb, v, axis, overlap=overlap)
+        with overlap_default(overlap):
+            x, iters, rr, bb = body(A, pre, pl, b[0], x0[0], **kw)
         return x[None], iters, rr, bb
 
     mapped = shard_map(
@@ -435,16 +607,27 @@ def abstract_stencil_dist(p, n_shards: int, dtype="float64") -> DistELL:
     shifts, widths = ((-1, 1), (H, H)) if n_shards > 1 else ((), ())
     plan = HaloPlan("ring", shifts, widths, R, n_shards)
     S = n_shards
+    # boundary rows live in the slab's first/last plane (see
+    # partition_stencil): 2H for interior shards, H for the 2-shard case
+    if S <= 1:
+        B, n_bnd = 1, (0,) * S
+    elif S == 2:
+        B, n_bnd = H, (H,) * S
+    else:
+        B = H * min(2, R // H)
+        n_bnd = (H,) + (B,) * (S - 2) + (H,)
     sds = jax.ShapeDtypeStruct
     return DistELL(
         data_loc=sds((S, R, k), dtype),
         col_loc=sds((S, R, k), "int32"),
-        data_ext=sds((S, R, k_ext), dtype),
-        col_ext=sds((S, R, k_ext), "int32"),
+        data_ext=sds((S, B, k_ext), dtype),
+        col_ext=sds((S, B, k_ext), "int32"),
+        bnd_rows=sds((S, B), "int32"),
         send_sel=sds((S, max(sum(widths), 1)), "int32"),
         plan=plan,
         n_global=p.n,
         row_starts=part.row_starts,
+        n_bnd=n_bnd,
     )
 
 

@@ -6,10 +6,13 @@ This module reproduces the paper's distribution substrate (C1):
 * device-resident column indices are **4-byte local indices** obtained by a
   global->local shift + compaction — the global (possibly >2^32) index space
   exists only on the host at partition time (numpy ``int64``);
-* every shard's sparse rows are split into a **local part** (columns owned by
-  the shard) and an **external part** (columns owned by other shards), so that
-  the local SpMV can be issued *before* the halo exchange completes — the JAX
-  analog of BootCMatchGX's overlap of GPU compute with MPI communication;
+* every shard's sparse rows are split into an **interior block** (entries
+  whose column is owned by the shard — no communication needed) and a compact
+  **boundary block** holding only the ghost-touching rows' external entries,
+  so that the halo ``ppermute`` can be issued first, the interior matvec runs
+  while the exchange is in flight, and the boundary block is applied on
+  arrival — the JAX analog of BootCMatchGX's overlap of GPU compute with MPI
+  communication (see ``core/spmv.spmv_shard`` and ``docs/architecture.md``);
 * the halo exchange itself is planned as a set of ``lax.ppermute`` shifts
   ("ring" mode, for matrices whose off-shard couplings reach at most
   ``max_ring`` neighbor shards — all banded/stencil problems) or falls back to
@@ -143,21 +146,30 @@ def _register(cls, data_fields, meta_fields):
 
 @partial(
     _register,
-    data_fields=("data_loc", "col_loc", "data_ext", "col_ext", "send_sel"),
-    meta_fields=("plan", "n_global", "row_starts"),
+    data_fields=("data_loc", "col_loc", "data_ext", "col_ext", "bnd_rows", "send_sel"),
+    meta_fields=("plan", "n_global", "row_starts", "n_bnd"),
 )
 @dataclasses.dataclass(frozen=True)
 class DistELL:
-    """Block-row-distributed sparse matrix in split ELL form.
+    """Block-row-distributed sparse matrix in interior/boundary split ELL form.
 
     All arrays carry a leading ``n_shards`` axis (sharded over the solver
     mesh's ``shards`` axis outside shard_map; squeezed to the local block
     inside).
 
-    * ``data_loc/col_loc``  — (S, R, k_loc): entries whose column is owned by
-      the same shard; ``col_loc`` indexes ``x_own`` (length R = n_own_pad).
-    * ``data_ext/col_ext``  — (S, R, k_ext): entries whose column lives on
-      another shard; ``col_ext`` indexes ``x_ext`` (see HaloPlan).
+    * ``data_loc/col_loc``  — (S, R, k_loc): the **interior block** — entries
+      whose column is owned by the same shard; ``col_loc`` indexes ``x_own``
+      (length R = n_own_pad). Needs no communication.
+    * ``data_ext/col_ext``  — (S, B, k_ext): the **boundary block** — the
+      external (ghost-column) entries of the B = n_boundary ghost-touching
+      rows only, compacted at partition time; ``col_ext`` indexes ``x_ext``
+      (see HaloPlan). Row ``j`` of the block belongs to local row
+      ``bnd_rows[:, j]``.
+    * ``bnd_rows``          — (S, B) int32: local row id of each boundary-block
+      row; slots past ``n_bnd[s]`` are padding (index 0, zero data — a
+      scatter-add of exact zeros).
+    * ``n_bnd``             — per-shard count of genuine boundary rows (host
+      metadata; the device path never needs it, ``expand_boundary`` does).
     * ``send_sel``          — (S, sum(widths)) int32: per shift k, the slice
       ``send_sel[:, off_k : off_k + widths[k]]`` lists the local indices each
       shard sends for that shift.
@@ -169,10 +181,12 @@ class DistELL:
     col_loc: jax.Array
     data_ext: jax.Array
     col_ext: jax.Array
+    bnd_rows: jax.Array
     send_sel: jax.Array
     plan: HaloPlan
     n_global: int
     row_starts: tuple[int, ...]
+    n_bnd: tuple[int, ...] = ()
 
     @property
     def n_shards(self) -> int:
@@ -181,6 +195,11 @@ class DistELL:
     @property
     def n_own_pad(self) -> int:
         return self.plan.n_own_pad
+
+    @property
+    def n_boundary(self) -> int:
+        """Padded boundary-block rows per shard (B)."""
+        return self.bnd_rows.shape[-1]
 
     @property
     def dtype(self):
@@ -332,25 +351,38 @@ def partition_csr(
         per_shard.append((loc_rows, ext_rows))
 
     S = n_shards
+    # Interior/boundary row split: boundary rows are the rows with at least
+    # one external (ghost-column) entry; only they get boundary-block slots.
+    bnd_lists = [
+        [r for r, (_, ev) in enumerate(ext_rows) if len(ev)]
+        for _, ext_rows in per_shard
+    ]
+    n_bnd = tuple(len(b) for b in bnd_lists)
+    B = max(max(n_bnd), 1)
     data_loc = np.zeros((S, R, k_loc_max), dtype)
     col_loc = np.zeros((S, R, k_loc_max), np.int32)
-    data_ext = np.zeros((S, R, k_ext_max), dtype)
-    col_ext = np.zeros((S, R, k_ext_max), np.int32)
+    data_ext = np.zeros((S, B, k_ext_max), dtype)
+    col_ext = np.zeros((S, B, k_ext_max), np.int32)
+    bnd_rows = np.zeros((S, B), np.int32)
     for s, (loc_rows, ext_rows) in enumerate(per_shard):
         dl, cl = _rows_to_ell(loc_rows, R, k_loc_max, dtype)
-        de, ce = _rows_to_ell(ext_rows, R, k_ext_max, dtype)
         data_loc[s], col_loc[s] = dl, cl
+        bnd = bnd_lists[s]
+        de, ce = _rows_to_ell([ext_rows[r] for r in bnd], B, k_ext_max, dtype)
         data_ext[s], col_ext[s] = de, ce
+        bnd_rows[s, : len(bnd)] = bnd
 
     return DistELL(
         data_loc=jnp.asarray(data_loc),
         col_loc=jnp.asarray(col_loc),
         data_ext=jnp.asarray(data_ext),
         col_ext=jnp.asarray(col_ext),
+        bnd_rows=jnp.asarray(bnd_rows),
         send_sel=jnp.asarray(send_sel),
         plan=plan,
         n_global=n,
         row_starts=part.row_starts,
+        n_bnd=n_bnd,
     )
 
 
@@ -386,8 +418,13 @@ def partition_stencil(p, n_shards: int, dtype=np.float64, mode: str = "ring") ->
     S = n_shards
     data_loc = np.zeros((S, R, k), dtype)
     col_loc = np.zeros((S, R, k), np.int32)
-    data_ext = np.zeros((S, R, max(k_ext, 1)), dtype)
-    col_ext = np.zeros((S, R, max(k_ext, 1)), np.int32)
+    # Boundary rows live in the slab's first/last z-plane only: at most 2H
+    # ghost-touching rows per shard (H for the edge shards / S == 2).
+    B_ub = min(2 * H, R) if S > 1 else 1
+    data_ext = np.zeros((S, B_ub, max(k_ext, 1)), dtype)
+    col_ext = np.zeros((S, B_ub, max(k_ext, 1)), np.int32)
+    bnd_rows = np.zeros((S, B_ub), np.int32)
+    n_bnd = [0] * S
     W = sum(widths)
     send_sel = np.zeros((S, max(W, 1)), np.int32)
 
@@ -437,7 +474,12 @@ def partition_stencil(p, n_shards: int, dtype=np.float64, mode: str = "ring") ->
             ce_s = np.take_along_axis(
                 np.where(ext, lcol, 0).astype(np.int32), order, axis=1
             )[:, :k_ext]
-            data_ext[s, :n_own], col_ext[s, :n_own] = de_s, ce_s
+            # ...and compact the ghost-touching rows into the boundary block
+            bnd = np.nonzero(ext.any(axis=1))[0]
+            n_bnd[s] = len(bnd)
+            data_ext[s, : len(bnd)] = de_s[bnd]
+            col_ext[s, : len(bnd)] = ce_s[bnd]
+            bnd_rows[s, : len(bnd)] = bnd.astype(np.int32)
             # send selectors: shift -1 (recv from left): shard j sends its LAST
             # plane to j+1 <=> under perm (j, j-(-1))... define per plan.perm:
             # shift d=-1: receiver i gets from i-1; sender j sends to j+1 its
@@ -452,16 +494,41 @@ def partition_stencil(p, n_shards: int, dtype=np.float64, mode: str = "ring") ->
                 send_sel[s, off : off + H] = sel
                 off += widths[kk]
 
+    B = max(max(n_bnd), 1)
     return DistELL(
         data_loc=jnp.asarray(data_loc),
         col_loc=jnp.asarray(col_loc),
-        data_ext=jnp.asarray(data_ext),
-        col_ext=jnp.asarray(col_ext),
+        data_ext=jnp.asarray(data_ext[:, :B]),
+        col_ext=jnp.asarray(col_ext[:, :B]),
+        bnd_rows=jnp.asarray(bnd_rows[:, :B]),
         send_sel=jnp.asarray(send_sel),
         plan=plan,
         n_global=p.n,
         row_starts=part.row_starts,
+        n_bnd=tuple(n_bnd),
     )
+
+
+def expand_boundary(mat: DistELL) -> tuple[np.ndarray, np.ndarray]:
+    """Full-row ``(S, R, k_ext)`` view of the compact boundary block (host).
+
+    Inverse of the boundary-row compaction: scatter each shard's compact
+    ``(B, k_ext)`` ghost-entry rows back to their ``bnd_rows`` positions.
+    Tests use this to rebuild the pre-split ("unsplit") SpMV formulation and
+    check the interior/boundary split reproduces it bitwise.
+    """
+    S, R = mat.n_shards, mat.n_own_pad
+    de = np.asarray(mat.data_ext)
+    ce = np.asarray(mat.col_ext)
+    rows = np.asarray(mat.bnd_rows)
+    k = de.shape[-1]
+    full_d = np.zeros((S, R, k), de.dtype)
+    full_c = np.zeros((S, R, k), ce.dtype)
+    for s in range(S):
+        nb = mat.n_bnd[s] if mat.n_bnd else 0
+        full_d[s, rows[s, :nb]] = de[s, :nb]
+        full_c[s, rows[s, :nb]] = ce[s, :nb]
+    return full_d, full_c
 
 
 # ---------------------------------------------------------------------------

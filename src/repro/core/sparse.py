@@ -4,8 +4,12 @@ The paper's library stores matrices in CSR with 4-byte *local* column indices
 (global→local shift + compaction). We keep the same discipline:
 
 * all device-resident column indices are ``int32`` and index a *local extended
-  vector* ``x_ext = [halo_lo | x_own | halo_hi]`` (see ``core/partition.py``);
-* the global 64-bit index space only exists on the host at partition time.
+  vector* ``x_ext = [x_own | halo buffers]`` (see ``core/partition.py``);
+* the global 64-bit index space only exists on the host at partition time;
+* distributed matrices additionally split rows into an interior block and a
+  compact ghost-touching boundary block (``partition.DistELL``) so the halo
+  exchange can overlap the interior SpMV — the formats here are the
+  *single-shard* building blocks underneath that split.
 
 Formats:
 

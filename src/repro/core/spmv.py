@@ -5,14 +5,23 @@ mesh axis: every argument is the local block (leading shard axis already
 squeezed), collectives are explicit (``lax.ppermute`` / ``lax.all_gather`` /
 ``lax.psum``).
 
-Key design point reproduced from the paper: the sparse rows are split into a
-local part (no communication needed) and an external part (needs the halo), so
-the local SpMV is *issued before* the halo arrives and XLA's latency-hiding
-scheduler overlaps the ``ppermute`` with the local gather/multiply — the JAX
-analog of overlapping CUDA kernels with MPI progress.
+Key design point reproduced from the paper: each shard's rows are split at
+partition time into an **interior block** (entries with locally-owned
+columns) and a compact **boundary block** (the ghost-touching rows' external
+entries only — see ``DistELL``). ``spmv_shard`` issues the halo ``ppermute``
+first, multiplies the interior block while the exchange is in flight, and
+scatter-adds the boundary block on arrival — the JAX analog of overlapping
+CUDA kernels with MPI progress. The whole overlapped phase is attributed to
+the ``"overlap"`` energy region (energy/trace.py), whose modeled time is
+``max(compute, memory, collective)`` — i.e. halo communication hidden behind
+the interior matvec; ``overlap=False`` restores the serialized
+gather-then-multiply order (regions ``"spmv"`` + ``"halo"``, communication
+fully exposed).
 """
 
 from __future__ import annotations
+
+import contextlib
 
 import jax
 import jax.numpy as jnp
@@ -48,9 +57,75 @@ def ell_matvec(data: jax.Array, col: jax.Array, x: jax.Array) -> jax.Array:
     return jnp.einsum("rk,rk->r", data, x[col])
 
 
+def boundary_matvec(
+    data_bnd: jax.Array,
+    col_bnd: jax.Array,
+    x_ext: jax.Array,
+    *,
+    src_elems: int | None = None,
+) -> jax.Array:
+    """Compact boundary-block matvec: ``yb[j] = sum_k data[j,k]*x_ext[col[j,k]]``.
+
+    ``data_bnd/col_bnd`` are the (B, k_ext) ghost-entry rows of the shard
+    (``DistELL.data_ext``); the caller scatter-adds ``yb`` into the interior
+    result at ``bnd_rows``. Padded slots carry zero data, so their adds are
+    exact zeros.
+
+    ``src_elems`` is the number of distinct gatherable source elements the
+    block can touch (units: elements of ``x_ext``) — the halo length for the
+    ring layouts, where ``col_bnd`` indexes only the received buffers. The
+    default bounds it by the entry count: a (B, k_ext) gather reads at most
+    ``B*k_ext`` elements, NOT the whole ``x_ext`` stream — charging the full
+    gathered vector would inflate the boundary block's memory time (and with
+    it the comm-hiding credit of the overlap region).
+    """
+    b = data_bnd.dtype.itemsize
+    B = data_bnd.shape[0]
+    if src_elems is None:
+        src_elems = min(x_ext.size, data_bnd.size)
+    # entries + 4B indices streamed once, the touched source elements read
+    # once, and the scatter-add's read-modify-write of the B result rows.
+    trace.record_op(
+        "bnd_matvec",
+        OpCounts(
+            flops=2.0 * data_bnd.size,
+            hbm_bytes=float(
+                data_bnd.size * (b + col_bnd.dtype.itemsize)
+                + min(int(src_elems), data_bnd.size) * b
+                + B * (2 * b + 4)
+            ),
+        ),
+    )
+    return jnp.einsum("bk,bk->b", data_bnd, x_ext[col_bnd])
+
+
 # ---------------------------------------------------------------------------
 # Halo exchange
 # ---------------------------------------------------------------------------
+
+
+def _halo_exchange(
+    x_own: jax.Array, send_sel: jax.Array, plan: HaloPlan, axis: str
+) -> jax.Array:
+    """Ring halo exchange body (records counts in the *caller's* region)."""
+    b = x_own.dtype.itemsize
+    trace.record_op(
+        "halo_exchange",
+        OpCounts(
+            ici_bytes=float(plan.collective_bytes_per_shard(b)),
+            n_collectives=float(len(plan.shifts)),
+        ),
+    )
+    bufs = []
+    off = 0
+    for k, w in enumerate(plan.widths):
+        sel = lax.slice_in_dim(send_sel, off, off + w)
+        buf = x_own[sel]
+        bufs.append(lax.ppermute(buf, axis, plan.perm(k)))
+        off += w
+    if not bufs:
+        return jnp.zeros((0,), x_own.dtype)
+    return jnp.concatenate(bufs)
 
 
 def halo_exchange(
@@ -60,26 +135,12 @@ def halo_exchange(
 
     ``send_sel`` is the local (W,) selector row; buffer k is sent to shard
     ``j - shifts[k]`` and received from ``j + shifts[k]`` (zeros at edges).
+    Attributed to the ``"halo"`` energy region (the serialized path); the
+    overlapped SpMV calls :func:`_halo_exchange` directly so the exchange
+    lands in its ``"overlap"`` region instead.
     """
     with trace.region("halo"):
-        b = x_own.dtype.itemsize
-        trace.record_op(
-            "halo_exchange",
-            OpCounts(
-                ici_bytes=float(plan.collective_bytes_per_shard(b)),
-                n_collectives=float(len(plan.shifts)),
-            ),
-        )
-        bufs = []
-        off = 0
-        for k, w in enumerate(plan.widths):
-            sel = lax.slice_in_dim(send_sel, off, off + w)
-            buf = x_own[sel]
-            bufs.append(lax.ppermute(buf, axis, plan.perm(k)))
-            off += w
-        if not bufs:
-            return jnp.zeros((0,), x_own.dtype)
-        return jnp.concatenate(bufs)
+        return _halo_exchange(x_own, send_sel, plan, axis)
 
 
 def gather_ext(mat: DistELL, x_own: jax.Array, axis: str) -> jax.Array:
@@ -107,17 +168,66 @@ def gather_ext(mat: DistELL, x_own: jax.Array, axis: str) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def spmv_shard(mat: DistELL, x_own: jax.Array, axis: str) -> jax.Array:
-    """y_own = (A @ x)_own, overlap-friendly ordering (per-shard view).
+# Trace-time default for spmv_shard's overlap flag. Solver factories set it
+# for the whole body trace (``with overlap_default(flag)``), so call sites
+# that don't thread the flag explicitly — the AMG V-cycle's level SpMVs,
+# the Jacobi smoother residuals — follow the solver's schedule instead of
+# silently staying overlapped under ``--no-overlap``.
+_OVERLAP_DEFAULT = True
 
-    ``mat`` here is the *local* DistELL block (leading shard axis squeezed;
-    see ``local_block``).
+
+@contextlib.contextmanager
+def overlap_default(on: bool):
+    """Scoped default for :func:`spmv_shard`'s ``overlap`` (trace time)."""
+    global _OVERLAP_DEFAULT
+    prev = _OVERLAP_DEFAULT
+    _OVERLAP_DEFAULT = bool(on)
+    try:
+        yield
+    finally:
+        _OVERLAP_DEFAULT = prev
+
+
+def spmv_shard(
+    mat: DistELL, x_own: jax.Array, axis: str, *, overlap: bool | None = None
+) -> jax.Array:
+    """y_own = (A @ x)_own via the interior/boundary row-block split.
+
+    ``mat`` is the *local* DistELL block (leading shard axis squeezed; see
+    ``local_block``); ``x_own`` the local (R,) vector shard. ``overlap=None``
+    resolves the scoped :func:`overlap_default` (True unless a solver set
+    otherwise).
+
+    ``overlap=True`` (ring layouts with a real exchange): the halo
+    ``ppermute`` is issued first, the interior block — every locally-indexed
+    entry — is multiplied while the exchange is in flight, and the compact
+    boundary block is scatter-added on arrival. The whole phase lands in the
+    ``"overlap"`` energy region, modeled with the communication hidden
+    behind the interior matvec. ``overlap=False`` (and the allgather /
+    single-shard layouts): the serialized order — gather ``x_ext`` fully
+    (region ``"halo"``), then multiply both blocks.
+
+    Both orders compute bitwise-identical results; only the schedule and the
+    energy-region attribution differ.
     """
-    # Communication is issued first so XLA can overlap it with the local part.
+    if overlap is None:
+        overlap = _OVERLAP_DEFAULT
+    ring = mat.plan.mode == "ring" and len(mat.plan.shifts) > 0
+    if overlap and ring:
+        with trace.region(trace.OVERLAP):
+            halo = _halo_exchange(x_own, mat.send_sel, mat.plan, axis)
+            y = ell_matvec(mat.data_loc, mat.col_loc, x_own)  # interior
+            x_ext = jnp.concatenate([x_own, halo])
+            yb = boundary_matvec(
+                mat.data_ext, mat.col_ext, x_ext, src_elems=halo.size
+            )
+            return y.at[mat.bnd_rows].add(yb)
     x_ext = gather_ext(mat, x_own, axis)
     y = ell_matvec(mat.data_loc, mat.col_loc, x_own)
-    y = y + ell_matvec(mat.data_ext, mat.col_ext, x_ext)
-    return y
+    # ring: the boundary gathers touch only the received halo buffers
+    src = x_ext.size - x_own.size if ring else None
+    yb = boundary_matvec(mat.data_ext, mat.col_ext, x_ext, src_elems=src)
+    return y.at[mat.bnd_rows].add(yb)
 
 
 # ---------------------------------------------------------------------------
@@ -156,15 +266,19 @@ def shard_matrix(mesh, mat: DistELL) -> DistELL:
     )
 
 
-def make_spmv(mesh, mat: DistELL, axis: str = "shards"):
-    """Jitted end-to-end distributed SpMV: (S,R) -> (S,R) sharded arrays."""
+def make_spmv(mesh, mat: DistELL, axis: str = "shards", *, overlap: bool = True):
+    """Jitted end-to-end distributed SpMV: (S,R) -> (S,R) sharded arrays.
+
+    ``overlap`` selects the communication-hiding schedule (see
+    :func:`spmv_shard`).
+    """
     from jax.experimental.shard_map import shard_map
 
     specs = dist_specs(mat)
 
     def fn(m, x):
         mb = local_block(m)
-        y = spmv_shard(mb, x[0], axis)
+        y = spmv_shard(mb, x[0], axis, overlap=overlap)
         return y[None]
 
     mapped = shard_map(

@@ -42,34 +42,64 @@ from repro.kernels import dispatch as kd
 
 
 def make_matvec(p, n_shards: int, axis: str = "shards",
-                kernels: str | None = None):
+                kernels: str | None = None, overlap: bool = True):
     """Per-shard matrix-free stencil operator (inside shard_map).
 
     v is the local flattened slab (nz_loc * ny * nx,). Requires a uniform
     slab partition (p.nz % n_shards == 0). ``kernels`` selects the SpMV
     backend (None = auto; see kernels/dispatch.py).
+
+    ``overlap=True`` (and nz_loc >= 2, n_shards > 1): communication-hiding
+    schedule — the boundary-plane ppermutes are issued first, the full slab
+    is computed with zero halos while they fly (every interior output plane
+    is already final), and the two slab-edge planes are patched with the
+    fused boundary kernel on arrival; all attributed to the ``"overlap"``
+    energy region. Otherwise: serialized exchange-then-multiply (regions
+    ``"halo"`` + caller's ``"spmv"``). The split kernels are bitwise equal
+    to the single-call planes per backend; end-to-end under jit the two
+    schedules agree to XLA elementwise-fusion reassociation (~1 ulp).
     """
     assert p.nz % n_shards == 0, "matrix-free path needs uniform slabs"
     nz_loc = p.nz // n_shards
     ops = kd.ops_for(kernels)
+    split = overlap and n_shards > 1 and nz_loc >= 2
 
     fwd = tuple((j, j + 1) for j in range(n_shards - 1))
     bwd = tuple((j, j - 1) for j in range(1, n_shards))
 
+    def _exchange(x3):
+        # one boundary plane to each neighbor (trace-time counts)
+        trace.record_op(
+            "halo_exchange",
+            OpCounts(
+                ici_bytes=2.0 * p.ny * p.nx * x3.dtype.itemsize,
+                n_collectives=2.0,
+            ),
+        )
+        prev = lax.ppermute(x3[-1], axis, fwd)  # from left neighbor
+        nxt = lax.ppermute(x3[0], axis, bwd)  # from right neighbor
+        return prev, nxt
+
     def A(v: jax.Array) -> jax.Array:
         x3 = v.reshape(nz_loc, p.ny, p.nx)
+        if split:
+            with trace.region(trace.OVERLAP):
+                prev, nxt = _exchange(x3)
+                zero = jnp.zeros_like(x3[0])
+                # full slab with zero halos: interior planes final, no
+                # dependence on the in-flight exchange
+                y = ops.stencil_matvec(
+                    x3, zero, zero, stencil=p.stencil, aniso=tuple(p.aniso)
+                )
+                # on arrival: patch the two slab-edge planes
+                yb = ops.stencil_boundary(
+                    x3, prev, nxt, stencil=p.stencil, aniso=tuple(p.aniso)
+                )
+                y = y.at[0].set(yb[0]).at[nz_loc - 1].set(yb[1])
+            return y.reshape(-1)
         if n_shards > 1:
             with trace.region("halo"):
-                # one boundary plane to each neighbor (trace-time counts)
-                trace.record_op(
-                    "halo_exchange",
-                    OpCounts(
-                        ici_bytes=2.0 * p.ny * p.nx * x3.dtype.itemsize,
-                        n_collectives=2.0,
-                    ),
-                )
-                prev = lax.ppermute(x3[-1], axis, fwd)  # from left neighbor
-                nxt = lax.ppermute(x3[0], axis, bwd)  # from right neighbor
+                prev, nxt = _exchange(x3)
         else:
             prev = jnp.zeros_like(x3[0])
             nxt = jnp.zeros_like(x3[0])
@@ -92,13 +122,15 @@ def make_stencil_solver_fn(
     s: int = 2,
     axis: str = "shards",
     kernels: str | None = None,
+    overlap: bool = True,
 ):
     """Jitted matrix-free distributed CG: (b, x0) -> SolveResult.
 
     b/x0: (n_shards, R) with R = (nz/n_shards) * ny * nx. Accepts
     ShapeDtypeStructs (dry-run) or real arrays (execution). ``kernels``
     selects the hot-path backend for both the slab SpMV and the fused
-    vector ops (None = auto).
+    vector ops (None = auto); ``overlap`` the communication-hiding schedule
+    (see :func:`make_matvec` and ``core/cg.make_solver``).
     """
     from jax.experimental.shard_map import shard_map
 
@@ -109,7 +141,9 @@ def make_stencil_solver_fn(
         kw["s"] = s
     else:
         kw["ops"] = kd.ops_for(kernels)
-    A = make_matvec(p, n_shards, axis, kernels=kernels)
+    if variant == "pipecg":
+        kw["overlap"] = overlap
+    A = make_matvec(p, n_shards, axis, kernels=kernels, overlap=overlap)
 
     def fn(b, x0):
         x, iters, rr, bb = body(A, pre, (), b[0], x0[0], **kw)

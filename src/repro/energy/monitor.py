@@ -32,10 +32,27 @@ class Segment:
     t1: float
     chip_w: float  # per-device power during this segment
     host_active: float  # host active fraction (drives comm/launch)
+    # modeled engine times over the whole segment (all repeats), seconds
+    t_comp: float = 0.0
+    t_mem: float = 0.0
+    t_coll: float = 0.0
+    overlapped: bool = True  # was the collective co-scheduled with compute?
 
     @property
     def dt(self) -> float:
         return self.t1 - self.t0
+
+    @property
+    def comm_hidden_s(self) -> float:
+        """Collective time absorbed behind compute/memory (overlap model)."""
+        if not self.overlapped:
+            return 0.0
+        return min(self.t_coll, max(self.t_comp, self.t_mem))
+
+    @property
+    def comm_exposed_s(self) -> float:
+        """Collective time the segment actually waits on."""
+        return self.t_coll - self.comm_hidden_s
 
 
 class PowerMonitor:
@@ -66,6 +83,7 @@ class PowerMonitor:
         *,
         n_shards: int | None = None,
         overlap: bool = True,
+        hides_comm: bool | None = None,
         repeats: int = 1,
         duration: float | None = None,
     ) -> float:
@@ -73,22 +91,38 @@ class PowerMonitor:
 
         Returns the modeled duration (seconds) of the whole region.
         ``duration`` overrides the modeled time (e.g. measured wall time on
-        real hardware).
+        real hardware); the collective exposed/hidden split always comes
+        from the modeled engine times. ``overlap`` selects the segment's
+        comm schedule: ``max(compute, memory, collective)`` when True,
+        ``max(compute, memory) + collective`` when False. ``hides_comm``
+        controls whether the segment *credits* collective time as hidden
+        (``comm_hidden_s``); default = ``overlap``. Trace-derived ledgers
+        pass ``hides_comm`` only for the ``"overlap"`` region, where the
+        compute is independent of the collective by construction — a
+        blocking all-reduce whose result feeds the same region's updates
+        keeps the overlapped *time* model but reports its latency exposed.
         """
         S = n_shards if n_shards is not None else self.n_devices
+        _, (tc, tm, tl) = self.cost.times(counts, S, overlap)
         t, _, _, p = self.cost.device_energy(counts, S, overlap)
         t = t if duration is None else duration / max(repeats, 1)
         comm_frac = 0.0
         if counts.hbm_bytes + counts.ici_bytes > 0:
             comm_frac = counts.ici_bytes / (counts.hbm_bytes + counts.ici_bytes)
-        self._push(name, t * repeats, p, min(1.0, 4.0 * comm_frac))
+        self._push(
+            name, t * repeats, p, min(1.0, 4.0 * comm_frac),
+            t_comp=tc * repeats, t_mem=tm * repeats, t_coll=tl * repeats,
+            overlapped=overlap if hides_comm is None else hides_comm,
+        )
         return t * repeats
 
-    def _push(self, name, dt, chip_w, host_active):
+    def _push(self, name, dt, chip_w, host_active, *, t_comp=0.0, t_mem=0.0,
+              t_coll=0.0, overlapped=True):
         if dt <= 0:
             return
         self.segments.append(
-            Segment(name, self._t, self._t + dt, chip_w, host_active)
+            Segment(name, self._t, self._t + dt, chip_w, host_active,
+                    t_comp, t_mem, t_coll, overlapped)
         )
         self._t += dt
 
@@ -120,10 +154,16 @@ class PowerMonitor:
     def energy_by_region(self):
         """Per-region energy ledger: segments aggregated by name.
 
-        Returns ``{name: {time_s, te_gpu_j, de_gpu_j, de_cpu_j, de_j}}``
-        summed over all devices/hosts. Because segments partition the
-        timeline, ``sum(de_j)`` over regions equals ``energy()['de_total']``
-        exactly — the invariant the executed-energy ledger is gated on.
+        Returns ``{name: {time_s, te_gpu_j, de_gpu_j, de_cpu_j, de_j,
+        comm_s, comm_exposed_s, comm_hidden_s}}`` summed over all
+        devices/hosts (times are per-device-timeline seconds). Because
+        segments partition the timeline, ``sum(de_j)`` over regions equals
+        ``energy()['de_total']`` exactly — the invariant the executed-energy
+        ledger is gated on. ``comm_s`` is the region's modeled collective
+        time; ``comm_hidden_s`` the part absorbed behind concurrent
+        compute/memory (nonzero only for overlapped segments, e.g. the
+        ``"overlap"`` region); ``comm_exposed_s`` the remainder the timeline
+        actually waits on.
         """
         n_hosts = max(self.n_devices // self.devices_per_host, 1)
         chip0 = self.model.chip_static_w
@@ -133,7 +173,8 @@ class PowerMonitor:
             d = out.setdefault(
                 s.name,
                 dict(time_s=0.0, te_gpu_j=0.0, de_gpu_j=0.0, de_cpu_j=0.0,
-                     de_j=0.0),
+                     de_j=0.0, comm_s=0.0, comm_exposed_s=0.0,
+                     comm_hidden_s=0.0),
             )
             de_gpu = (s.chip_w - chip0) * s.dt * self.n_devices
             de_cpu = (self.model.host_power(s.host_active) - host0) * s.dt * n_hosts
@@ -142,13 +183,19 @@ class PowerMonitor:
             d["de_gpu_j"] += de_gpu
             d["de_cpu_j"] += de_cpu
             d["de_j"] += de_gpu + de_cpu
+            d["comm_s"] += s.t_coll
+            d["comm_exposed_s"] += s.comm_exposed_s
+            d["comm_hidden_s"] += s.comm_hidden_s
         return out
 
     def energy(self):
         """Exact per-segment integration -> paper §4.2 quantities.
 
         Returns a dict with chip/host total, static, dynamic energy (summed
-        over all devices/hosts) and the chip power peak.
+        over all devices/hosts), the chip power peak, and the modeled
+        communication split: ``comm_s`` (total collective seconds),
+        ``comm_hidden_s`` (overlapped behind compute) and ``comm_exposed_s``
+        (actually waited on) — all per device timeline.
         """
         T = self.duration
         n_hosts = max(self.n_devices // self.devices_per_host, 1)
@@ -162,6 +209,9 @@ class PowerMonitor:
         peak = max((s.chip_w for s in self.segments), default=self.model.chip_static_w)
         return dict(
             runtime=T,
+            comm_s=sum(s.t_coll for s in self.segments),
+            comm_exposed_s=sum(s.comm_exposed_s for s in self.segments),
+            comm_hidden_s=sum(s.comm_hidden_s for s in self.segments),
             te_gpu=te_chip,
             se_gpu=se_chip,
             de_gpu=te_chip - se_chip,

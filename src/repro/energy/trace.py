@@ -8,6 +8,13 @@ the trace-time analog for the JAX reproduction:
 * ``region(name)`` marks a component. Regions nest; a dispatched op is
   attributed to the **innermost** active region (so the halo exchange inside
   an SpMV inside a V-cycle lands in "halo", not "vcycle").
+* the ``"overlap"`` region (:data:`OVERLAP`) is special by convention: it
+  holds compute *and* communication that the implementation co-schedules
+  (the interior matvec + in-flight halo exchange of the split SpMV, or the
+  pipelined-CG all-reduce + concurrent SpMV). ``monitor_from_trace`` always
+  models it overlapped — segment time ``max(compute, memory, collective)``
+  — so the ledger's ``comm_hidden_s``/``comm_exposed_s`` fields quantify how
+  much of its communication disappears behind compute.
 * ``section(name)`` separates per-solve setup from the ``lax.while_loop``
   iteration body. Because the loop body is traced exactly once, counts
   recorded under ``section("iteration")`` are *per-iteration* counts of the
@@ -36,6 +43,9 @@ from repro.energy.accounting import ZERO, OpCounts
 DEFAULT_REGION = "other"
 SETUP = "setup"
 ITERATION = "iteration"
+# Region holding co-scheduled compute + communication (always modeled
+# overlapped — see module docstring and energy/monitor.py).
+OVERLAP = "overlap"
 
 
 @dataclasses.dataclass
@@ -135,7 +145,15 @@ def capture():
 
 @contextlib.contextmanager
 def region(name: str):
-    """Mark a component region; nested regions win (innermost attribution)."""
+    """Mark a component region for the ops recorded inside.
+
+    ``name`` is a free-form region label; the solver layers use
+    ``"spmv"``/``"halo"``/``"reductions"``/``"precond"``/``"vcycle"`` and
+    the special :data:`OVERLAP`. Regions nest — an op is attributed to the
+    *innermost* active region. Trace-time only: entering a region during
+    execution of a compiled program costs nothing (markers run while JAX
+    traces the python body).
+    """
     _stack.append(name)
     try:
         yield
@@ -145,7 +163,16 @@ def region(name: str):
 
 @contextlib.contextmanager
 def section(name: str):
-    """Switch the accounting section (``setup`` vs ``iteration``)."""
+    """Switch the accounting section — :data:`SETUP` (default, straight-line
+    per-solve code) vs :data:`ITERATION` (the ``lax.while_loop`` body).
+
+    Counts recorded under a section are normalized by how many times the
+    section was entered during the trace, then replayed per executed
+    iteration (ITERATION) or per benchmark repeat (SETUP) by
+    :func:`monitor_from_trace`. Solver bodies switch via
+    ``kernels.dispatch.ledger_section`` so the sweep ledger stays in
+    lockstep.
+    """
     global _section
     prev = _section
     _section = name
@@ -184,8 +211,13 @@ def repeated(k: int):
 
 
 def record_op(op: str, counts: OpCounts):
-    """Attribute one op invocation to the innermost region (no-op when no
-    trace is active — execution-time calls never pay for this)."""
+    """Attribute one op invocation to the innermost region.
+
+    ``op`` is a per-op label for the call counter; ``counts`` the
+    per-device :class:`OpCounts` of ONE invocation (flops, HBM bytes, ICI
+    bytes, collective launches). No-op when no trace is active —
+    execution-time calls never pay for this.
+    """
     if _trace is not None:
         if _scale != 1.0:
             counts = counts * _scale
@@ -193,7 +225,9 @@ def record_op(op: str, counts: OpCounts):
 
 
 def record_collective(n_scalars: int, itemsize: int = 8, op: str = "allreduce"):
-    """One fused all-reduce of ``n_scalars`` scalars."""
+    """One fused all-reduce of ``n_scalars`` scalars of ``itemsize`` bytes
+    (ici_bytes = n_scalars * itemsize, one collective launch — i.e. one
+    latency hop term in the cost model)."""
     record_op(
         op,
         OpCounts(ici_bytes=float(n_scalars * itemsize), n_collectives=1.0),
@@ -267,6 +301,11 @@ def monitor_from_trace(
     executed iteration count). The resulting monitor's segment names are the
     region names, so ``monitor.energy_by_region()`` is the executed
     per-component ledger and sums to ``monitor.energy()`` totals exactly.
+
+    ``overlap`` is the implementation-wide default (True for the
+    BCMGX-analog paths, False for the serialized Ginkgo analog); the
+    :data:`OVERLAP` region is always modeled overlapped regardless — that
+    region *is* the co-scheduled compute+communication phase.
     """
     from repro.energy.monitor import PowerMonitor
 
@@ -275,15 +314,19 @@ def monitor_from_trace(
     )
     if idle_s > 0:
         mon.idle(idle_s)
+    # hides_comm: only the OVERLAP region's compute is independent of its
+    # collective by construction, so only it earns comm_hidden_s credit — a
+    # blocking all-reduce (hs/fcg reductions) keeps the overlapped time
+    # model but reports its latency exposed (matches roofline CG_COMM).
     for name, c in sorted(tr.regions(SETUP).items()):
         mon.region(
-            name, c, n_shards=n_shards, overlap=overlap,
-            repeats=max(int(setup_repeats), 1),
+            name, c, n_shards=n_shards, overlap=overlap or name == OVERLAP,
+            hides_comm=name == OVERLAP, repeats=max(int(setup_repeats), 1),
         )
     for name, c in sorted(tr.regions(ITERATION).items()):
         mon.region(
-            name, c, n_shards=n_shards, overlap=overlap,
-            repeats=max(int(iters), 1),
+            name, c, n_shards=n_shards, overlap=overlap or name == OVERLAP,
+            hides_comm=name == OVERLAP, repeats=max(int(iters), 1),
         )
     if idle_s > 0:
         mon.idle(idle_s)
@@ -303,12 +346,15 @@ def ledger_from_trace(
 ) -> dict:
     """JSON-ready executed-energy ledger: per-region + totals.
 
-    ``regions[name]`` carries modeled time, dynamic/total energy, and the raw
-    activity counts; ``totals`` is the PowerMonitor energy dict. The idle
+    ``regions[name]`` carries modeled time, dynamic/total energy, the
+    exposed-vs-hidden communication split (``comm_s`` / ``comm_exposed_s`` /
+    ``comm_hidden_s``), and the raw activity counts; ``totals`` is the
+    PowerMonitor energy dict (same comm split summed over regions). The idle
     padding segments carry zero dynamic energy and zero counts, so they are
     dropped from ``regions`` (their duration still extends
     ``totals.runtime`` and the static-energy terms) — by construction
-    ``sum(regions[*].de_j) == totals.de_total``.
+    ``sum(regions[*].de_j) == totals.de_total``. Field-by-field reference:
+    ``docs/ledger_schema.md``.
     """
     mon = monitor_from_trace(
         tr, iters=iters, n_shards=n_shards, cost=cost,

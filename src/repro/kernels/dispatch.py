@@ -45,15 +45,20 @@ from repro.kernels.fused_reductions import (
     fused_axpy2_dots,
     fused_dots_n,
 )
-from repro.kernels.spmv_stencil import pick_bz, stencil_spmv_halo
+from repro.kernels.spmv_stencil import (
+    pick_bz,
+    stencil_spmv_boundary,
+    stencil_spmv_halo,
+)
 
 BACKENDS = ("pallas", "interpret", "jnp")
 ENV_VAR = "REPRO_KERNELS"
 
 # Ops that stream full-length vectors exactly once per call (1 sweep each).
 VECTOR_OPS = ("axpy", "fused_axpy2", "fused_axpy2_dots", "fused_dots_n")
-# The SpMV is accounted separately (its traffic is the matrix term).
-SPMV_OPS = ("stencil_matvec",)
+# The SpMV is accounted separately (its traffic is the matrix term);
+# stencil_boundary is the overlap path's two-plane edge fix-up.
+SPMV_OPS = ("stencil_matvec", "stencil_boundary")
 
 _override: str | None = None
 
@@ -216,7 +221,11 @@ class OpSet:
     # -- fused vector ops (1 HBM sweep each) --------------------------------
 
     def axpy(self, a, x, y):
-        """a*x + y."""
+        """``a*x + y`` for a scalar ``a`` and (n,) vectors ``x``/``y``.
+
+        One fused HBM pass: 2n flops, 3n elements streamed (read x, y;
+        write the result). Returns the (n,) updated vector.
+        """
         _record("axpy", _axpy_counts(x.size, x.dtype.itemsize))
         b = _pallas_mode(self.backend, x.dtype)
         if b == "jnp":
@@ -225,7 +234,12 @@ class OpSet:
                           interpret=(b == "interpret"))
 
     def fused_axpy2(self, a1, x1, y1, a2, x2, y2):
-        """(a1*x1 + y1, a2*x2 + y2) in one pass."""
+        """``(a1*x1 + y1, a2*x2 + y2)`` — two independent axpys, ONE pass.
+
+        The two updates may not feed each other (they are evaluated from
+        the inputs as given). Returns the pair of (n,) results; counts as a
+        single HBM sweep of 6n streamed elements / 4n flops.
+        """
         _record("fused_axpy2", _axpy_counts(x1.size, x1.dtype.itemsize, 2))
         b = _pallas_mode(self.backend, x1.dtype)
         if b == "jnp":
@@ -234,7 +248,13 @@ class OpSet:
                            interpret=(b == "interpret"))
 
     def fused_axpy2_dots(self, a1, x1, y1, a2, x2, y2):
-        """(a1*x1+y1, a2*x2+y2, local [o2.o2]) in one pass."""
+        """``(a1*x1+y1, a2*x2+y2, [o2·o2])`` in ONE pass.
+
+        The hs-update special: both axpys plus the *local* squared norm of
+        the second output (a (1,) array — callers ``psum`` it), computed
+        while the operands are already streaming. Same HBM traffic as
+        :meth:`fused_axpy2`, +2n flops.
+        """
         n, ib = x1.size, x1.dtype.itemsize
         # two fused updates + the in-flight dot of the second output (no
         # extra HBM pass — the operands are already streaming).
@@ -249,7 +269,13 @@ class OpSet:
                                 interpret=(b == "interpret"))
 
     def fused_dots_n(self, pairs):
-        """Local partial dots [(x, y), ...] -> (len(pairs),), one pass."""
+        """Local partial dots ``[(x, y), ...] -> (len(pairs),)``, ONE pass.
+
+        Repeated operands are deduplicated (each distinct vector is
+        streamed once), so e.g. the fcg triple ``[(r,u),(w,u),(r,r)]`` with
+        ``u is r`` reads only {r, w}. Results are LOCAL partial sums — the
+        caller packs them into a single ``lax.psum``.
+        """
         _record("fused_dots_n", trace.local_dots_counts(pairs))
         b = _pallas_mode(self.backend, pairs[0][0].dtype)
         if b == "jnp":
@@ -261,7 +287,14 @@ class OpSet:
 
     def stencil_matvec(self, x3, prev_halo, next_halo, *, stencil="7pt",
                        aniso=(1.0, 1.0, 1.0)):
-        """Local-slab matrix-free SpMV with explicit z-halo planes."""
+        """Local-slab matrix-free SpMV with explicit z-halo planes.
+
+        Args: ``x3`` the (nz_loc, ny, nx) slab, ``prev_halo``/``next_halo``
+        the (ny, nx) neighbor boundary planes (zeros at the global edges).
+        Returns the (nz_loc, ny, nx) product. Accounted as one full-slab
+        HBM sweep plus the two halo planes (matrix-free: no value/index
+        traffic).
+        """
         n, ib = x3.size, x3.dtype.itemsize
         k = {"7pt": 7, "27pt": 27}[stencil]
         # matrix-free: NO matrix-value/index traffic — read the slab + both
@@ -281,6 +314,34 @@ class OpSet:
         return stencil_spmv_halo(
             x3, prev_halo, next_halo, stencil=stencil, aniso=aniso,
             bz=pick_bz(x3.shape[0]), interpret=(b == "interpret"),
+        )
+
+    def stencil_boundary(self, x3, prev_halo, next_halo, *, stencil="7pt",
+                         aniso=(1.0, 1.0, 1.0)):
+        """First + last output planes of the slab SpMV (overlap fix-up).
+
+        The communication-hiding stencil path runs :meth:`stencil_matvec`
+        with zero halos while the ppermute is in flight, then patches the
+        two slab-edge output planes with this op once the halo planes
+        arrive. Args as in :meth:`stencil_matvec` (``x3.shape[0] >= 2``);
+        returns (2, ny, nx): output planes 0 and nz_loc-1, bitwise equal to
+        the serialized single-call planes. Accounted as plane-sized traffic
+        only (6 planes read, 2 written).
+        """
+        n_pl, ib = prev_halo.size, x3.dtype.itemsize
+        k = {"7pt": 7, "27pt": 27}[stencil]
+        _record(
+            "stencil_boundary",
+            OpCounts(flops=2.0 * k * 2 * n_pl, hbm_bytes=8.0 * n_pl * ib),
+        )
+        b = _pallas_mode(self.backend, x3.dtype)
+        if b == "jnp":
+            return ref.stencil_boundary_ref(
+                x3, prev_halo, next_halo, stencil=stencil, aniso=aniso
+            )
+        return stencil_spmv_boundary(
+            x3, prev_halo, next_halo, stencil=stencil, aniso=aniso,
+            interpret=(b == "interpret"),
         )
 
 

@@ -20,6 +20,9 @@ from repro.kernels.spmv_bcsr import bcsr_spmv as _bcsr_spmv
 from repro.kernels.spmv_bcsr import pack_bcsr  # noqa: F401
 from repro.kernels.spmv_stencil import pick_bz  # noqa: F401
 from repro.kernels.spmv_stencil import stencil_spmv as _stencil_spmv
+from repro.kernels.spmv_stencil import (
+    stencil_spmv_boundary as _stencil_spmv_boundary,
+)
 from repro.kernels.spmv_stencil import stencil_spmv_halo as _stencil_spmv_halo
 
 
@@ -46,6 +49,17 @@ def stencil_spmv_halo(
     interpret = _default_interpret() if interpret is None else interpret
     return _stencil_spmv_halo(
         x, prev_halo, next_halo, stencil=stencil, aniso=aniso, bz=bz,
+        interpret=interpret,
+    )
+
+
+def stencil_spmv_boundary(
+    x, prev_halo, next_halo, *, stencil="7pt", aniso=(1.0, 1.0, 1.0),
+    interpret=None,
+):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _stencil_spmv_boundary(
+        x, prev_halo, next_halo, stencil=stencil, aniso=aniso,
         interpret=interpret,
     )
 

@@ -81,6 +81,25 @@ def stencil_halo_ref(
     return 27.0 * c - (s9[:-2] + s9[1:-1] + s9[2:])
 
 
+def stencil_boundary_ref(
+    x: jax.Array,  # (nz_loc, ny, nx) local slab, nz_loc >= 2
+    prev_halo: jax.Array,  # (ny, nx) boundary plane from the z- neighbor
+    next_halo: jax.Array,  # (ny, nx) boundary plane from the z+ neighbor
+    *,
+    stencil: str = "7pt",
+    aniso=(1.0, 1.0, 1.0),
+) -> jax.Array:
+    """First + last output planes of the slab SpMV (overlap fix-up oracle).
+
+    Returns (2, ny, nx): rows 0/1 are output planes 0 and nz_loc-1 —
+    bitwise the same planes :func:`stencil_halo_ref` produces. Computed on
+    one-plane sub-slabs so only O(ny*nx) work is done, not the full slab.
+    """
+    y0 = stencil_halo_ref(x[:1], prev_halo, x[1], stencil=stencil, aniso=aniso)
+    y1 = stencil_halo_ref(x[-1:], x[-2], next_halo, stencil=stencil, aniso=aniso)
+    return jnp.concatenate([y0, y1], axis=0)
+
+
 def jacobi_stencil_ref(
     x: jax.Array, b: jax.Array, dinv: jax.Array, *, stencil: str = "7pt",
     aniso=(1.0, 1.0, 1.0), omega: float = 1.0,

@@ -27,6 +27,14 @@ of 128 for hardware alignment); sublane = ny.
 planes at the z-edges it takes explicit boundary planes (the halo received
 from the slab neighbors via ppermute), so a shard_map solver can run the
 whole local SpMV as one kernel call.
+
+``stencil_spmv_boundary`` is the communication-hiding companion: it
+recomputes ONLY the slab's first and last output planes from the received
+halo planes. The overlapped distributed SpMV (core/stencil_solver.py) runs
+the full slab with zero halos while the ppermute is in flight — every
+interior plane is already final — and patches the two edge planes with this
+kernel on arrival. Both kernels share ``_stencil_core``, so the patched
+planes are bitwise identical to the serialized single-call result.
 """
 
 from __future__ import annotations
@@ -83,6 +91,20 @@ def _stencil_kernel(prev_ref, cur_ref, next_ref, y_ref, *, stencil, aniso, nzb):
     nmask = jnp.where(i < nzb - 1, 1, 0).astype(dt)
     prev_plane = prev_ref[...] * pmask  # (1, ny, nx)
     next_plane = next_ref[...] * nmask
+    y_ref[...] = _stencil_core(
+        c, prev_plane, next_plane, stencil=stencil, aniso=aniso
+    )
+
+
+def _stencil_boundary_kernel(
+    hp_ref, below_ref, cur_ref, above_ref, hn_ref, y_ref, *, stencil, aniso
+):
+    """Program 0 computes output plane 0 (needs prev_halo, x[0], x[1]);
+    program 1 computes plane nz-1 (needs x[nz-2], x[nz-1], next_halo)."""
+    i = pl.program_id(0)
+    c = cur_ref[...]  # (1, ny, nx): plane 0 or nz-1
+    prev_plane = jnp.where(i == 0, hp_ref[...], below_ref[...])
+    next_plane = jnp.where(i == 0, above_ref[...], hn_ref[...])
     y_ref[...] = _stencil_core(
         c, prev_plane, next_plane, stencil=stencil, aniso=aniso
     )
@@ -188,5 +210,51 @@ def stencil_spmv_halo(
         in_specs=[plane, prev_spec, cur_spec, next_spec, plane],
         out_specs=pl.BlockSpec((bz, ny, nx), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((nz, ny, nx), x.dtype),
+        interpret=interpret,
+    )(prev_halo[None], x, x, x, next_halo[None])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stencil", "aniso", "interpret"),
+)
+def stencil_spmv_boundary(
+    x: jax.Array,
+    prev_halo: jax.Array,
+    next_halo: jax.Array,
+    *,
+    stencil: str = "7pt",
+    aniso: tuple = (1.0, 1.0, 1.0),
+    interpret: bool = False,
+) -> jax.Array:
+    """The slab's first + last output planes only (communication-hiding form).
+
+    ``x`` is the shard's (nz_loc, ny, nx) slab (nz_loc >= 2);
+    ``prev_halo``/``next_halo`` the (ny, nx) planes received from the
+    z-neighbors. Returns a (2, ny, nx) array: row 0 is output plane 0, row 1
+    is output plane nz_loc-1 — bitwise equal to the corresponding planes of
+    :func:`stencil_spmv_halo`. Grid of exactly two programs, so the
+    on-arrival boundary fix-up costs two plane-sized kernel launches of
+    work, independent of nz_loc.
+    """
+    nz, ny, nx = x.shape
+    assert nz >= 2, "boundary split needs at least 2 local z-planes"
+    kernel = functools.partial(
+        _stencil_boundary_kernel, stencil=stencil, aniso=aniso
+    )
+    plane = pl.BlockSpec((1, ny, nx), lambda i: (0, 0, 0))
+    cur = pl.BlockSpec((1, ny, nx), lambda i: (i * (nz - 1), 0, 0))
+    below = pl.BlockSpec(
+        (1, ny, nx), lambda i: (jnp.maximum(i * (nz - 1) - 1, 0), 0, 0)
+    )
+    above = pl.BlockSpec(
+        (1, ny, nx), lambda i: (jnp.minimum(i * (nz - 1) + 1, nz - 1), 0, 0)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(2,),
+        in_specs=[plane, below, cur, above, plane],
+        out_specs=pl.BlockSpec((1, ny, nx), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, ny, nx), x.dtype),
         interpret=interpret,
     )(prev_halo[None], x, x, x, next_halo[None])

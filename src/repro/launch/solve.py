@@ -10,9 +10,13 @@ BCMGX-analog and the Ginkgo-analog paths.
 Energy accounting is *executed*, not declared: the solver is compiled under
 the region trace (energy/trace.py), which records the OpCounts of every
 dispatched op into the component region that ran it (spmv / reductions /
-halo / vcycle). The PowerMonitor then integrates those counts — scaled by
-the executed iteration count — into the per-region energy ledger printed
-below the summary line and written as JSON via ``--ledger``.
+halo / vcycle — plus ``overlap``, the merged interior-SpMV + in-flight-halo
+phase, when the default communication-hiding schedule is on; pass
+``--no-overlap`` for the serialized A/B reference). The PowerMonitor then
+integrates those counts — scaled by the executed iteration count — into the
+per-region energy ledger printed below the summary line and written as JSON
+via ``--ledger``; ``totals.comm_exposed_s`` vs ``totals.comm_hidden_s``
+quantify the hiding (schema: docs/ledger_schema.md).
 """
 
 from __future__ import annotations
@@ -29,8 +33,13 @@ def parse_args(argv=None):
     ap.add_argument("--side", type=int, default=24)
     ap.add_argument("--scale", type=float, default=0.01)
     ap.add_argument("--shards", type=int, default=0, help="0 = all devices")
-    ap.add_argument("--variant", default="hs", choices=["hs", "fcg", "sstep"])
+    ap.add_argument("--variant", default="hs",
+                    choices=["hs", "fcg", "pipecg", "sstep"])
     ap.add_argument("--op", default="cg", choices=["cg", "spmv"])
+    ap.add_argument("--no-overlap", dest="overlap", action="store_false",
+                    help="serialize the halo exchange before the SpMV (and "
+                         "the pipecg all-reduce before its matvec) instead "
+                         "of the default communication-hiding schedule")
     ap.add_argument("--amg", action="store_true", help="PCG with AMG")
     ap.add_argument("--amgx-analog", action="store_true",
                     help="PCG with the plain-aggregation (AmgX-analog) AMG")
@@ -104,7 +113,8 @@ def main(argv=None):
     cost = CostModel()
     payload = dict(
         schema=1, problem=name, n=int(n), nnz=int(a.nnz),
-        shards=int(n_shards), op=args.op, solvers={},
+        shards=int(n_shards), op=args.op, overlap=bool(args.overlap),
+        solvers={},
     )
 
     precond = None
@@ -140,7 +150,7 @@ def main(argv=None):
         from repro.core.spmv import make_spmv
 
         for label, m, fn in [
-            ("BCMGX-analog", mat, make_spmv(mesh, mat)),
+            ("BCMGX-analog", mat, make_spmv(mesh, mat, overlap=args.overlap)),
             ("Ginkgo-analog", matg, make_naive_spmv(mesh, matg)),
         ]:
             with trace.capture() as tr:
@@ -151,7 +161,7 @@ def main(argv=None):
                 y = fn(m, bp)
             jax.block_until_ready(y)
             wall = (time.perf_counter() - t0) / 100
-            overlap = label == "BCMGX-analog"
+            overlap = args.overlap and label == "BCMGX-analog"
             led = trace.ledger_from_trace(
                 tr, iters=0, n_shards=n_shards, cost=cost, overlap=overlap,
                 idle_s=0.01, setup_repeats=100,
@@ -173,7 +183,7 @@ def main(argv=None):
 
     solver = make_solver(
         mesh, mat, variant=args.variant, precond=precond,
-        tol=args.tol, maxiter=args.maxiter,
+        tol=args.tol, maxiter=args.maxiter, overlap=args.overlap,
     )
     naive = make_naive_solver(mesh, matg, tol=args.tol, maxiter=args.maxiter)
 
@@ -195,7 +205,7 @@ def main(argv=None):
         # energy ledger: executed per-region counts x executed iterations
         led = trace.ledger_from_trace(
             tr, iters=iters, n_shards=n_shards, cost=cost,
-            overlap=(label != "Ginkgo-analog"), idle_s=0.01,
+            overlap=(args.overlap and label != "Ginkgo-analog"), idle_s=0.01,
         )
         e = led["totals"]
         t_model = sum(r["time_s"] for r in led["regions"].values())

@@ -22,6 +22,7 @@ ratio MODEL_FLOPS / HLO_FLOPs — how much of the compiled compute is
 from __future__ import annotations
 
 import dataclasses
+import math
 import re
 
 from repro.roofline.hw import DEFAULT_CHIP, ChipSpec
@@ -188,12 +189,47 @@ def roofline(
 # they are grouped into. "unfused" is the op-by-op formulation (every
 # axpy/dot its own pass); "fused" is the dispatch-layer kernel path
 # (fused_dots_n with operand dedup + fused_axpy2[_dots]), identity
-# preconditioner. Derivation in core/cg.py body docstrings.
+# preconditioner. Derivation in core/cg.py body docstrings. pipecg pays
+# +1 fused sweep (the z recurrence) to buy the hidden all-reduce — see
+# CG_COMM below for the latency side of that trade.
 CG_HOTPATH = {
     # variant: {mode: (streams, sweeps)}
     "hs": {"unfused": (15, 6), "fused": (11, 3)},
     "fcg": {"unfused": (18, 5), "fused": (14, 3)},
+    "pipecg": {"unfused": (22, 8), "fused": (20, 4)},
 }
+
+# All-reduce phases per iteration and how many of them the variant issues
+# concurrently with compute (the hidden-latency term): hs blocks on both of
+# its reductions, fcg on its single fused one; pipecg issues its single
+# reduction before the SpMV + preconditioner it does not depend on, so its
+# latency is absorbed up to the concurrent compute time.
+CG_COMM = {
+    "hs": {"allreduces": 2, "hidden": 0},
+    "fcg": {"allreduces": 1, "hidden": 0},
+    "pipecg": {"allreduces": 1, "hidden": 1},
+}
+
+
+def cg_exposed_latency_s(
+    variant: str, n_shards: int, *, alpha: float = 5e-6,
+    hide_budget_s: float = float("inf"),
+) -> float:
+    """Exposed all-reduce latency per CG iteration (seconds).
+
+    Each all-reduce costs ``alpha * ceil(log2(S))`` (the CostModel latency
+    term); a variant's ``hidden`` reductions are absorbed into the
+    concurrent SpMV/preconditioner up to ``hide_budget_s`` (pass that
+    phase's compute time; the default — an unbounded budget — models the
+    asymptotic large-problem regime where the matvec always covers the
+    latency).
+    """
+    if n_shards <= 1:
+        return 0.0
+    c = CG_COMM[variant]
+    lat = alpha * max(math.ceil(math.log2(max(n_shards, 2))), 1)
+    exposed = c["allreduces"] * lat - min(c["hidden"] * lat, hide_budget_s)
+    return max(exposed, 0.0)
 
 
 def cg_vector_traffic(n: int, *, variant: str = "hs", fused: bool = True,

@@ -85,8 +85,13 @@ def _fake_mat(n_shards=8, R=1000, mode="ring"):
         plan = HaloPlan("allgather", (), (), R, n_shards)
     z = jnp.zeros((n_shards, R, 7))
     zi = jnp.zeros((n_shards, R, 7), jnp.int32)
-    return DistELL(z, zi, z[:, :, :1], zi[:, :, :1], zi[:, :, 0],
-                   plan, R * n_shards, tuple(range(0, R * (n_shards + 1), R)))
+    return DistELL(
+        data_loc=z, col_loc=zi, data_ext=z[:, :, :1], col_ext=zi[:, :, :1],
+        bnd_rows=zi[:, :, 0], send_sel=zi[:, :, 0],
+        plan=plan, n_global=R * n_shards,
+        row_starts=tuple(range(0, R * (n_shards + 1), R)),
+        n_bnd=(R,) * n_shards,
+    )
 
 
 def test_comm_reduction_ordering():

@@ -86,6 +86,32 @@ def test_banded_matrix_stays_ring_irregular_falls_back():
     assert m2.plan.mode == "allgather"
 
 
+def test_abstract_split_shapes_match_partition_stencil():
+    """abstract_stencil_dist (dry-run/modeled shapes) must stay in lockstep
+    with partition_stencil's interior/boundary compaction — the modeled
+    energy baselines derive nnz_stored from the abstract shapes."""
+    from repro.core.cg import abstract_stencil_dist
+    from repro.core.partition import partition_stencil
+    from repro.matrices.poisson import PoissonProblem
+
+    for stencil in ("7pt", "27pt"):
+        for nx, ny, nz, shards in [(4, 4, 4, 1), (4, 4, 4, 2), (4, 4, 8, 4),
+                                   (4, 4, 4, 4), (3, 5, 6, 3)]:
+            p = PoissonProblem(nx, ny, nz, stencil)
+            real = partition_stencil(p, shards)
+            sds = abstract_stencil_dist(p, shards)
+            for field in ("data_loc", "col_loc", "data_ext", "col_ext",
+                          "bnd_rows", "send_sel"):
+                assert getattr(real, field).shape == getattr(sds, field).shape, (
+                    stencil, (nx, ny, nz, shards), field
+                )
+            # (dtype not compared: the no-x64 pytest process downcasts the
+            # materialized arrays to f32; shapes/plan are what the modeled
+            # counts consume)
+            assert real.n_bnd == sds.n_bnd, (stencil, (nx, ny, nz, shards))
+            assert real.plan == sds.plan
+
+
 def test_haloplan_bytes_accounting():
     plan = HaloPlan("ring", (-1, 1), (36, 36), 100, 8)
     assert plan.collective_bytes_per_shard(8) == 72 * 8

@@ -25,7 +25,7 @@ def test_spmv_single_shard_matches_scipy(single_mesh):
     np.testing.assert_allclose(y, a @ x, rtol=2e-4, atol=2e-4)
 
 
-@pytest.mark.parametrize("variant", ["hs", "fcg", "sstep"])
+@pytest.mark.parametrize("variant", ["hs", "fcg", "pipecg", "sstep"])
 def test_cg_single_shard_converges(single_mesh, variant):
     from repro.core.cg import solve_cg
     from repro.core.partition import partition_csr, unpad_vector
@@ -80,7 +80,7 @@ y3 = unpad_vector(np.asarray(make_naive_spmv(mesh, mat3)(mat3, shard_vector(mesh
 assert np.abs(y3 - A @ x).max() < 1e-10, "naive spmv"
 
 x_ref = spla.spsolve(A.tocsc(), b)
-for variant in ("hs", "fcg", "sstep"):
+for variant in ("hs", "fcg", "pipecg", "sstep"):
     res = solve_cg(mesh, mat, b, variant=variant, tol=1e-10, maxiter=500, s=4)
     xs = unpad_vector(np.asarray(res.x), mat)
     assert np.abs(xs - x_ref).max() < 1e-6, (variant, np.abs(xs - x_ref).max())
@@ -130,10 +130,11 @@ for builder in (build_amg, build_amgx_analog):
     assert int(res.iters) < int(res0.iters) / 2, (int(res.iters), int(res0.iters))
     xs = unpad_vector(np.asarray(res.x), mat)
     assert np.abs(xs - x_ref).max() < 1e-5
-# flexible CG with AMG
+# flexible and pipelined CG with AMG (the real-preconditioner recurrences)
 pre, _ = build_amg(A, S)
-res = solve_cg(mesh, mat, b, variant="fcg", precond=pre, tol=1e-8, maxiter=200)
-assert float(res.rel_residual) < 1e-7
+for variant in ("fcg", "pipecg"):
+    res = solve_cg(mesh, mat, b, variant=variant, precond=pre, tol=1e-8, maxiter=200)
+    assert float(res.rel_residual) < 1e-7, variant
 print("AMG_OK")
 """
 

@@ -180,7 +180,8 @@ def test_ledger_regions_sum_to_monitor_total(single_mesh):
 
 def test_executed_vcycle_pcg_multidevice_ledger():
     """End-to-end: launch.solve --amg on 2 devices writes a ledger whose
-    executed regions include the halo and sum to the monitor total."""
+    executed regions include the overlapped SpMV+halo phase and sum to the
+    monitor total."""
     import json
     import os
     import subprocess
@@ -207,12 +208,19 @@ def test_executed_vcycle_pcg_multidevice_ledger():
     s = led["solvers"]["BCMGX-analog"]
     assert s["iters"] > 0
     regions = s["regions"]
-    assert {"spmv", "reductions", "halo", "vcycle"} <= set(regions)
+    # communication hiding is on by default: every SpMV + its in-flight halo
+    # merges into the "overlap" region (no separate spmv/halo regions)
+    assert {"overlap", "reductions", "vcycle"} <= set(regions)
+    assert "halo" not in regions and "spmv" not in regions
     total = s["totals"]["de_total"]
     region_sum = sum(r["de_j"] for r in regions.values())
     assert abs(region_sum - total) <= 0.01 * total
-    # the executed V-cycle is the dominant compute component (paper Fig 13)
-    assert regions["vcycle"]["flops"] > regions["spmv"]["flops"]
+    # the level SpMVs (smoothing sweeps) dominate the cycle's compute
+    assert regions["overlap"]["flops"] > regions["reductions"]["flops"]
+    # the overlap region carries the halo traffic, part of it hidden
+    assert regions["overlap"]["ici_bytes"] > 0
+    assert s["totals"]["comm_hidden_s"] > 0
+    assert regions["overlap"]["comm_exposed_s"] < regions["overlap"]["comm_s"]
 
 
 def test_identity_precond_traces_no_vcycle(single_mesh):

@@ -1,0 +1,191 @@
+"""Docs link/anchor checker + README quickstart executor (CI `docs` job).
+
+    python tools/check_docs.py               # link + anchor check
+    python tools/check_docs.py --quickstart  # execute the README quickstart
+
+Link check: every relative markdown link in README.md and docs/*.md must
+point at an existing file, and every ``#anchor`` (same-file or cross-file)
+must match a heading slug of its target (GitHub slugging: lowercase, drop
+punctuation, spaces become hyphens). External http(s)/mailto links are not
+fetched.
+
+Quickstart: extracts the fenced ``bash`` block(s) under the README's
+``## Quickstart`` heading and runs each command line verbatim (backslash
+continuations joined, comment lines skipped) from the repo root. The
+quickstart is written in smoke form — toy problem sizes and
+``benchmarks.run --smoke`` — precisely so this job can execute it on every
+push; a quickstart that stops working fails CI instead of rotting.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"\[([^\]]*)\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$")
+FENCE_RE = re.compile(r"^```")
+
+
+def doc_files() -> list[str]:
+    files = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        files += sorted(
+            os.path.join(docs, f) for f in os.listdir(docs) if f.endswith(".md")
+        )
+    return [f for f in files if os.path.exists(f)]
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug for a heading line (close approximation)."""
+    s = heading.strip().replace("`", "")
+    s = re.sub(r"[^\w\- ]", "", s, flags=re.UNICODE)
+    return s.lower().replace(" ", "-")
+
+
+def heading_slugs(path: str) -> set[str]:
+    """All anchor slugs a file exposes (with GitHub's -1 dedup suffixes)."""
+    slugs: dict[str, int] = {}
+    out: set[str] = set()
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            if FENCE_RE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = HEADING_RE.match(line)
+            if not m:
+                continue
+            slug = github_slug(m.group(2))
+            n = slugs.get(slug, 0)
+            slugs[slug] = n + 1
+            out.add(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def iter_links(path: str):
+    """Yield (lineno, text, target) for markdown links outside code fences."""
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for i, line in enumerate(f, 1):
+            if FENCE_RE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in LINK_RE.finditer(line):
+                yield i, m.group(1), m.group(2)
+
+
+def check_links() -> list[str]:
+    errors = []
+    for path in doc_files():
+        rel = os.path.relpath(path, REPO)
+        for lineno, _text, target in iter_links(path):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            file_part, _, anchor = target.partition("#")
+            if file_part:
+                dest = os.path.normpath(
+                    os.path.join(os.path.dirname(path), file_part)
+                )
+                if not os.path.exists(dest):
+                    errors.append(
+                        f"{rel}:{lineno}: broken link target {target!r}"
+                    )
+                    continue
+            else:
+                dest = path
+            if anchor and dest.endswith(".md"):
+                if anchor not in heading_slugs(dest):
+                    errors.append(
+                        f"{rel}:{lineno}: anchor #{anchor} not found in "
+                        f"{os.path.relpath(dest, REPO)}"
+                    )
+    return errors
+
+
+def quickstart_commands() -> list[str]:
+    """Command lines of the bash fences under README's '## Quickstart'."""
+    readme = os.path.join(REPO, "README.md")
+    cmds: list[str] = []
+    in_section = in_fence = in_bash = False
+    pending = ""
+    with open(readme, encoding="utf-8") as f:
+        for line in f:
+            if line.startswith("```"):
+                # track ALL fences (a '# ...' line inside a python/plain
+                # fence must not be mistaken for a heading), but only
+                # collect commands from bash ones
+                in_bash = not in_fence and line.strip() == "```bash"
+                in_fence = not in_fence
+                continue
+            m = None if in_fence else HEADING_RE.match(line)
+            if m:
+                in_section = m.group(2).strip().lower() == "quickstart"
+                continue
+            if not in_section or not in_bash:
+                continue
+            chunk = line.rstrip("\n")
+            if pending:
+                chunk = pending + " " + chunk.strip()
+                pending = ""
+            if chunk.rstrip().endswith("\\"):
+                pending = chunk.rstrip()[:-1].rstrip()
+                continue
+            cmd = chunk.strip()
+            if cmd and not cmd.startswith("#"):
+                cmds.append(cmd)
+    return cmds
+
+
+def run_quickstart(timeout: int = 2400) -> list[str]:
+    errors = []
+    cmds = quickstart_commands()
+    if not cmds:
+        return ["README.md: no bash commands found under '## Quickstart'"]
+    for cmd in cmds:
+        print(f"$ {cmd}", flush=True)
+        r = subprocess.run(
+            cmd, shell=True, cwd=REPO, timeout=timeout,
+            capture_output=True, text=True,
+        )
+        tail = (r.stdout + r.stderr)[-2000:]
+        if r.returncode != 0:
+            errors.append(f"quickstart command failed ({cmd}):\n{tail}")
+        else:
+            print(tail.splitlines()[-1] if tail.splitlines() else "(ok)")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quickstart", action="store_true",
+                    help="execute the README quickstart commands")
+    args = ap.parse_args(argv)
+
+    if args.quickstart:
+        errors = run_quickstart()
+    else:
+        errors = check_links()
+        files = [os.path.relpath(p, REPO) for p in doc_files()]
+        print(f"checked {len(files)} files: {', '.join(files)}")
+    if errors:
+        print(f"\n{len(errors)} docs problem(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print("docs OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
