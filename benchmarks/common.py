@@ -4,7 +4,7 @@ Two result kinds, mirroring what this container can and cannot measure:
 
 * **modeled** — paper-scale configurations (405^3/GPU etc.) evaluated through
   the calibrated roofline cost/energy model (energy/accounting.py). Matrices
-  are never materialized: the DistELL ShapeDtypeStruct builder supplies the
+  are never materialized: the DistMat ShapeDtypeStruct builder supplies the
   exact shapes/halo plans the counts need. These are the scaling curves.
 * **executed** — small-scale real runs (subprocess with N host devices)
   giving true iteration counts / convergence and wall times. Wall times on
@@ -57,7 +57,7 @@ def ensure_out():
 
 def abstract_poisson_mat(side: int, stencil: str, n_shards: int, weak: bool,
                          layout: str = "ring"):
-    """ShapeDtypeStruct DistELL at paper scale (no allocation)."""
+    """ShapeDtypeStruct DistMat (ELL interior) at paper scale (no allocation)."""
     from repro.core.cg import abstract_stencil_dist
     from repro.matrices.poisson import PoissonProblem
 

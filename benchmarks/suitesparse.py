@@ -1,19 +1,99 @@
-"""Tables 7/8 analog: SpMV + CG on the SuiteSparse SPD matrices (1-4 shards).
+"""Tables 7/8 analog: SpMV + CG on the SuiteSparse SPD matrices (1-4 shards),
+plus the interior-format sweep (ell/hyb/bcsr/auto — docs/formats.md).
 
 Synthetic analogs matched on rows/nnz/pattern character (see
 matrices/suitesparse.py; real .mtx files are used when
 $REPRO_SUITESPARSE_DIR provides them). EXECUTED in subprocesses (real
 convergence/iteration behavior) at ``--scale`` of the original sizes, with
 modeled energy at the executed sizes.
+
+The format sweep runs the distributed SpMV with every interior storage
+format on the power-law stress matrix plus SuiteSparse analogs and gates
+the stored-bytes / modeled-energy ledger
+(``benchmarks/baselines/suitesparse_formats_smoke.json``). It HARD-ASSERTS
+the acceptance ordering: on the power-law matrix HYB stores >= 30% fewer
+interior bytes than ELL and the ledger's SpMV-region HBM traffic drops with
+it; ``auto`` never stores more than ELL.
 """
 
 from __future__ import annotations
 
-from benchmarks.common import parse_solver_output, run_solver_subprocess, write_results
+from benchmarks.common import (
+    parse_solver_output,
+    run_solver_subprocess,
+    run_solver_with_ledger,
+    write_results,
+)
 from repro.matrices.suitesparse import TABLE1
 
 MATRICES = list(TABLE1)
 SHARDS = (1, 2, 4)
+
+FORMATS = ("ell", "hyb", "bcsr", "auto")
+# power-law stress pattern first (the hard-assert target), then one
+# irregular + one banded Table-1 analog
+FORMAT_MATRICES = ("powerlaw", "G3_circuit", "af_shell8")
+
+
+def _spmv_hbm(ledger: dict) -> float:
+    """SpMV-attributed HBM bytes of one solver ledger (overlap region when
+    the communication-hiding schedule ran, the serial regions otherwise)."""
+    regions = ledger["regions"]
+    for name in ("overlap", "spmv"):
+        if name in regions:
+            return regions[name]["hbm_bytes"]
+    # single-shard serial path: the interior matvec lands in "other"
+    return regions.get("other", {"hbm_bytes": 0.0})["hbm_bytes"]
+
+
+def run_formats(scale: float = 0.01, matrices=FORMAT_MATRICES,
+                shards=(1, 2, 4), formats=FORMATS) -> list[dict]:
+    rows = []
+    interior = {}  # (matrix, shards, fmt) -> interior stored bytes
+    hbm = {}
+    for name in matrices:
+        for s in shards:
+            for f in formats:
+                _, led = run_solver_with_ledger(
+                    ["--problem", name, "--scale", str(scale), "--op",
+                     "spmv", "--shards", str(s), "--format", f],
+                    n_devices=s,
+                )
+                solver = led["solvers"]["BCMGX-analog"]
+                interior[(name, s, f)] = led["interior_stored_bytes"]
+                hbm[(name, s, f)] = _spmv_hbm(solver)
+                rows.append(
+                    dict(
+                        table="formats",
+                        matrix=name,
+                        n_shards=s,
+                        format=f,
+                        resolved_format=led["resolved_format"],
+                        interior_stored_bytes=led["interior_stored_bytes"],
+                        stored_bytes=led["stored_bytes"],
+                        spmv_hbm_bytes=hbm[(name, s, f)],
+                        de_total=solver["totals"]["de_total"],
+                        wall_s=solver["wall_s"],
+                    )
+                )
+    # acceptance hard-asserts (power-law matrix, every shard count swept)
+    for name in matrices:
+        for s in shards:
+            e, h = interior[(name, s, "ell")], interior[(name, s, "hyb")]
+            a = interior[(name, s, "auto")]
+            assert a <= e, (
+                f"auto stored MORE than ELL on {name}/{s}: {a} > {e}"
+            )
+            if name == "powerlaw":
+                assert h <= 0.7 * e, (
+                    f"HYB saved <30% interior bytes on {name}/{s}: "
+                    f"{h} vs {e}"
+                )
+                assert hbm[(name, s, "hyb")] < hbm[(name, s, "ell")], (
+                    f"ledger SpMV HBM did not drop with HYB on {name}/{s}"
+                )
+    write_results("suitesparse_formats", rows)
+    return rows
 
 
 def run(scale: float = 0.01, maxiter: int = 100, matrices=MATRICES,
@@ -67,6 +147,18 @@ def main(smoke: bool = False):
         matrices=MATRICES[:1] if smoke else MATRICES,
         shards=(1, 2) if smoke else SHARDS,
     )
+    fmt_rows = run_formats(
+        scale=0.004 if smoke else 0.01,
+        matrices=FORMAT_MATRICES[:2] if smoke else FORMAT_MATRICES,
+        shards=(2,) if smoke else (1, 2, 4),
+    )
+    cols = [
+        ("matrix", "matrix"), ("n_shards", "#GPUs"), ("format", "format"),
+        ("resolved_format", "resolved"),
+        ("interior_stored_bytes", "interior (B)"),
+        ("spmv_hbm_bytes", "SpMV HBM (B)"), ("de_total", "total dynE (J)"),
+    ]
+    print(fmt_table(fmt_rows, cols, "Format sweep: interior storage (docs/formats.md)"))
     for table, title in (("7", "Table 7 analog: SpMV"), ("8", "Table 8 analog: CG")):
         sel = [r for r in rows if r.get("table") == table and "error" not in r]
         cols = [

@@ -15,7 +15,7 @@ per fine row,
 ``decoupled_aggregate`` restricts matching to intra-shard edges, which makes
 P block-diagonal w.r.t. the row partition — the scale-out discipline the GPU
 library uses, and what keeps every AMG level representable as a halo-planned
-DistELL.
+DistMat.
 """
 
 from __future__ import annotations

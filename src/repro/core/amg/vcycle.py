@@ -2,7 +2,7 @@
 
 Level data layout (see hierarchy.py):
 
-* ``mat``              — A_l as a halo-planned DistELL block;
+* ``mat``              — A_l as a halo-planned DistMat block (ELL interior);
 * ``p_data / p_col``   — the tentative prolongator: ONE nonzero per fine row,
   ``p_col`` is the *local* coarse aggregate id (decoupled aggregation keeps
   it shard-local), so prolongation is a pure local gather;
@@ -32,7 +32,7 @@ from functools import partial
 import jax
 from jax import lax
 
-from repro.core.partition import DistELL
+from repro.core.partition import DistMat
 from repro.core.spmv import ell_matvec, spmv_shard
 from repro.energy import trace
 from repro.energy.accounting import OpCounts
@@ -54,7 +54,7 @@ def _register(cls, data_fields, meta_fields):
 )
 @dataclasses.dataclass(frozen=True)
 class AMGLevel:
-    mat: DistELL
+    mat: DistMat
     p_data: jax.Array  # (S, Rf) or (Rf,) locally
     p_col: jax.Array  # int32 local coarse ids
     pt_data: jax.Array  # (S, Rc, W)
@@ -69,7 +69,7 @@ def _record_pointwise(op: str, n: int, itemsize: int, reads: int):
 
 
 def jacobi_sweeps(
-    mat: DistELL, dinv: jax.Array, b: jax.Array, x: jax.Array | None,
+    mat: DistMat, dinv: jax.Array, b: jax.Array, x: jax.Array | None,
     n: int, omega: float, axis: str, ops: kd.OpSet | None = None,
 ) -> jax.Array:
     """n sweeps of (damped) l1-Jacobi; x=None means zero initial guess, in

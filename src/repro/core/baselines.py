@@ -24,7 +24,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core.cg import Preconditioner, SolveResult, identity_precond
-from repro.core.partition import DistELL
+from repro.core.partition import DistMat
 from repro.core.spmv import (
     boundary_matvec,
     dist_specs,
@@ -45,12 +45,12 @@ def _rec_updates(x: jax.Array, n_updates: int):
     )
 
 
-def spmv_naive_shard(mat: DistELL, x_own: jax.Array, axis: str) -> jax.Array:
+def spmv_naive_shard(mat: DistMat, x_own: jax.Array, axis: str) -> jax.Array:
     """Ginkgo-analog SpMV: gather the whole vector first, then multiply.
 
-    Requires an allgather-mode DistELL (external columns in padded-global
-    layout). The local part reads its slice *from the gathered copy*, which
-    serializes communication before compute — deliberately.
+    Requires an allgather-mode, ELL-interior DistMat (external columns in
+    padded-global layout). The local part reads its slice *from the gathered
+    copy*, which serializes communication before compute — deliberately.
     """
     assert mat.plan.mode == "allgather", "naive SpMV needs allgather layout"
     R = mat.n_own_pad
@@ -107,7 +107,7 @@ def _cg_unfused_body(mat, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, ax
 
 def make_naive_solver(
     mesh,
-    mat: DistELL,
+    mat: DistMat,
     *,
     precond: Preconditioner | None = None,
     tol: float = 1e-8,
@@ -148,7 +148,7 @@ def make_naive_solver(
     return solve
 
 
-def make_naive_spmv(mesh, mat: DistELL, axis: str = "shards"):
+def make_naive_spmv(mesh, mat: DistMat, axis: str = "shards"):
     """Jitted Ginkgo-analog distributed SpMV."""
     from jax.experimental.shard_map import shard_map
 

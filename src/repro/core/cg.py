@@ -27,7 +27,7 @@ Four variants — three mirroring BootCMatchGX, one beyond-paper:
   trade wins.
 
 All solvers run entirely inside one ``shard_map`` region: vectors are local
-(R,) shards, the matrix is a local DistELL block, and every collective is
+(R,) shards, the matrix is a local DistMat block, and every collective is
 explicit. The number of all-reduces per iteration is therefore *visible in
 the lowered HLO* — which is what the roofline collective term measures.
 """
@@ -43,7 +43,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.partition import DistELL
+from repro.core.partition import DistMat
 from repro.core.spmv import dist_specs, local_block, overlap_default, spmv_shard
 from repro.core.vectors import fused_blocks, fused_dots, pdot
 from repro.energy import trace
@@ -437,7 +437,7 @@ VARIANTS = tuple(_BODIES)
 
 def make_solver(
     mesh,
-    mat: DistELL,
+    mat: DistMat,
     *,
     variant: str = "hs",
     precond: Preconditioner | None = None,
@@ -529,7 +529,7 @@ def make_solver(
 
 def make_solver_fn(
     mesh,
-    mat_like: DistELL,
+    mat_like: DistMat,
     *,
     variant: str = "hs",
     precond: Preconditioner | None = None,
@@ -591,12 +591,13 @@ def make_solver_fn(
     return solve
 
 
-def abstract_stencil_dist(p, n_shards: int, dtype="float64") -> DistELL:
-    """ShapeDtypeStruct DistELL for a slab-partitioned stencil problem —
+def abstract_stencil_dist(p, n_shards: int, dtype="float64") -> DistMat:
+    """ShapeDtypeStruct DistMat (ELL interior) for a slab-partitioned
+    stencil problem —
     production-scale dry-runs lower this without ever materializing data."""
     import numpy as np
 
-    from repro.core.partition import HaloPlan, plane_partition
+    from repro.core.partition import ELLBlock, HaloPlan, plane_partition
 
     part = plane_partition(p.n, p.plane, n_shards)
     R = part.max_own
@@ -617,9 +618,10 @@ def abstract_stencil_dist(p, n_shards: int, dtype="float64") -> DistELL:
         B = H * min(2, R // H)
         n_bnd = (H,) + (B,) * (S - 2) + (H,)
     sds = jax.ShapeDtypeStruct
-    return DistELL(
-        data_loc=sds((S, R, k), dtype),
-        col_loc=sds((S, R, k), "int32"),
+    return DistMat(
+        interior=ELLBlock(
+            data=sds((S, R, k), dtype), col=sds((S, R, k), "int32")
+        ),
         data_ext=sds((S, B, k_ext), dtype),
         col_ext=sds((S, B, k_ext), "int32"),
         bnd_rows=sds((S, B), "int32"),
@@ -631,7 +633,7 @@ def abstract_stencil_dist(p, n_shards: int, dtype="float64") -> DistELL:
     )
 
 
-def solve_cg(mesh, mat: DistELL, b_np, *, x0_np=None, **kw) -> SolveResult:
+def solve_cg(mesh, mat: DistMat, b_np, *, x0_np=None, **kw) -> SolveResult:
     """Convenience host-level solve: numpy in, SolveResult out."""
     import numpy as np
 

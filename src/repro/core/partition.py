@@ -132,7 +132,7 @@ class HaloPlan:
 
 
 # ---------------------------------------------------------------------------
-# Distributed ELL matrix (host-built, device-resident)
+# Interior storage blocks (format-polymorphic) + the distributed matrix
 # ---------------------------------------------------------------------------
 
 
@@ -144,27 +144,148 @@ def _register(cls, data_fields, meta_fields):
     )(cls)
 
 
+def _size(a) -> int:
+    """Element count from the static shape (works for ShapeDtypeStruct)."""
+    return int(np.prod(a.shape, dtype=np.int64))
+
+
+FORMATS = ("ell", "hyb", "bcsr")
+
+
+@partial(_register, data_fields=("data", "col"), meta_fields=())
+@dataclasses.dataclass(frozen=True)
+class ELLBlock:
+    """Padded-ELL interior: (S, R, k) slots/row, padding data == 0, col == 0.
+
+    The historical (and stencil-optimal) layout: every row gets
+    ``k = max_row_nnz`` slots, so one long row inflates the storage of every
+    row on every shard — exactly the blowup HYB exists to avoid.
+    """
+
+    data: jax.Array  # (S, R, k)
+    col: jax.Array  # (S, R, k) int32, indexes x_own
+
+    fmt = "ell"
+
+    @property
+    def slots(self) -> int:
+        """Stored value slots, padding included."""
+        return _size(self.data)
+
+    @property
+    def index_bytes(self) -> int:
+        return _size(self.col) * 4
+
+    @property
+    def k(self) -> int:
+        return self.data.shape[-1]
+
+
 @partial(
     _register,
-    data_fields=("data_loc", "col_loc", "data_ext", "col_ext", "bnd_rows", "send_sel"),
+    data_fields=("data", "col", "tail_data", "tail_col", "tail_row"),
+    meta_fields=("n_tail",),
+)
+@dataclasses.dataclass(frozen=True)
+class HYBBlock:
+    """Hybrid interior: dense ELL prefix + COO tail for the long rows.
+
+    The first ``k_typ`` entries of every row live in the (S, R, k_typ) ELL
+    part; the overflow of the few rows longer than ``k_typ`` lives in a
+    (S, T) COO tail applied by scatter-add. ``k_typ`` is chosen by the
+    stored-bytes cost model (``roofline/format_model.hyb_split``), which is
+    what eliminates the ``k = max_row_nnz`` padding blowup on power-law
+    matrices. Padding: data == 0, col == 0, tail_row == 0 (exact-zero adds).
+    """
+
+    data: jax.Array  # (S, R, k_typ)
+    col: jax.Array  # (S, R, k_typ) int32
+    tail_data: jax.Array  # (S, T)
+    tail_col: jax.Array  # (S, T) int32, indexes x_own
+    tail_row: jax.Array  # (S, T) int32, local destination row
+    n_tail: tuple[int, ...] = ()  # genuine tail entries per shard (host meta)
+
+    fmt = "hyb"
+
+    @property
+    def slots(self) -> int:
+        return _size(self.data) + _size(self.tail_data)
+
+    @property
+    def index_bytes(self) -> int:
+        # ELL part: one col id per slot; tail: col + destination row.
+        return _size(self.col) * 4 + _size(self.tail_data) * 8
+
+    @property
+    def k_typ(self) -> int:
+        return self.data.shape[-1]
+
+
+@partial(
+    _register,
+    data_fields=("blocks", "bcol"),
+    meta_fields=("n_brows", "bpr", "br", "bc"),
+)
+@dataclasses.dataclass(frozen=True)
+class BCSRBlock:
+    """Blocked interior: dense (br, bc) tiles in the Pallas kernel's uniform
+    blocks-per-row layout (``core.sparse.pack_bcsr``).
+
+    One block-column id per *block* instead of per entry — the index-traffic
+    win on banded/FEM matrices — at the price of storing zero fill inside
+    partially-populated tiles. The SpMV routes through the kernel dispatch
+    op ``bcsr_spmv`` (kernels/dispatch.py), running the Pallas block kernel
+    inside shard_map on TPU/interpret backends.
+    """
+
+    blocks: jax.Array  # (S, n_brows * bpr, br, bc)
+    bcol: jax.Array  # (S, n_brows * bpr) int32, block-column ids
+    n_brows: int
+    bpr: int
+    br: int
+    bc: int
+
+    fmt = "bcsr"
+
+    @property
+    def slots(self) -> int:
+        return _size(self.blocks)
+
+    @property
+    def index_bytes(self) -> int:
+        return _size(self.bcol) * 4
+
+
+InteriorBlock = ELLBlock | HYBBlock | BCSRBlock
+
+
+@partial(
+    _register,
+    data_fields=("interior", "data_ext", "col_ext", "bnd_rows", "send_sel"),
     meta_fields=("plan", "n_global", "row_starts", "n_bnd"),
 )
 @dataclasses.dataclass(frozen=True)
-class DistELL:
-    """Block-row-distributed sparse matrix in interior/boundary split ELL form.
+class DistMat:
+    """Block-row-distributed sparse matrix: format-polymorphic interior +
+    format-agnostic compact boundary block.
 
     All arrays carry a leading ``n_shards`` axis (sharded over the solver
     mesh's ``shards`` axis outside shard_map; squeezed to the local block
     inside).
 
-    * ``data_loc/col_loc``  — (S, R, k_loc): the **interior block** — entries
-      whose column is owned by the same shard; ``col_loc`` indexes ``x_own``
-      (length R = n_own_pad). Needs no communication.
+    * ``interior``          — the per-shard **interior block** (entries whose
+      column is owned by the same shard, indexing ``x_own`` of length
+      R = n_own_pad; no communication needed), stored as one of
+      :class:`ELLBlock` / :class:`HYBBlock` / :class:`BCSRBlock` — chosen
+      per matrix by the ``fmt`` argument of the builders, or by the
+      stored-bytes cost model under ``fmt="auto"``
+      (``roofline/format_model.py``).
     * ``data_ext/col_ext``  — (S, B, k_ext): the **boundary block** — the
       external (ghost-column) entries of the B = n_boundary ghost-touching
       rows only, compacted at partition time; ``col_ext`` indexes ``x_ext``
       (see HaloPlan). Row ``j`` of the block belongs to local row
-      ``bnd_rows[:, j]``.
+      ``bnd_rows[:, j]``. Always ELL — it is tiny and format choice only
+      concerns the interior.
     * ``bnd_rows``          — (S, B) int32: local row id of each boundary-block
       row; slots past ``n_bnd[s]`` are padding (index 0, zero data — a
       scatter-add of exact zeros).
@@ -177,8 +298,7 @@ class DistELL:
     contribute nothing).
     """
 
-    data_loc: jax.Array
-    col_loc: jax.Array
+    interior: InteriorBlock
     data_ext: jax.Array
     col_ext: jax.Array
     bnd_rows: jax.Array
@@ -187,6 +307,11 @@ class DistELL:
     n_global: int
     row_starts: tuple[int, ...]
     n_bnd: tuple[int, ...] = ()
+
+    @property
+    def fmt(self) -> str:
+        """Interior storage format: 'ell' | 'hyb' | 'bcsr'."""
+        return self.interior.fmt
 
     @property
     def n_shards(self) -> int:
@@ -203,19 +328,82 @@ class DistELL:
 
     @property
     def dtype(self):
-        return self.data_loc.dtype
+        return (
+            self.interior.blocks.dtype
+            if isinstance(self.interior, BCSRBlock)
+            else self.interior.data.dtype
+        )
+
+    # -- ELL back-compat views ----------------------------------------------
+
+    @property
+    def data_loc(self) -> jax.Array:
+        """(S, R, k) interior values — ELL-format matrices only."""
+        if not isinstance(self.interior, ELLBlock):
+            raise AttributeError(
+                f"data_loc is an ELL view; this DistMat stores its interior "
+                f"as {self.fmt!r} (use mat.interior)"
+            )
+        return self.interior.data
+
+    @property
+    def col_loc(self) -> jax.Array:
+        """(S, R, k) interior column ids — ELL-format matrices only."""
+        if not isinstance(self.interior, ELLBlock):
+            raise AttributeError(
+                f"col_loc is an ELL view; this DistMat stores its interior "
+                f"as {self.fmt!r} (use mat.interior)"
+            )
+        return self.interior.col
+
+    # -- storage accounting ---------------------------------------------------
 
     @property
     def nnz_stored(self) -> int:
-        """Stored slots (incl. ELL padding) across all shards."""
-        return int(
-            np.prod(self.data_loc.shape, dtype=np.int64)
-            + np.prod(self.data_ext.shape, dtype=np.int64)
-        )
+        """Stored value slots (incl. format padding) across all shards."""
+        return self.interior.slots + _size(self.data_ext)
+
+    def interior_stored_bytes(self, value_bytes: int = 8) -> int:
+        """Interior bytes resident in HBM (values + indices, all shards)."""
+        return self.interior.slots * value_bytes + self.interior.index_bytes
+
+    def stored_bytes(self, value_bytes: int = 8) -> int:
+        """Whole-matrix resident bytes: interior + boundary block."""
+        return self.interior_stored_bytes(value_bytes) + _size(
+            self.data_ext
+        ) * (value_bytes + 4)
 
     def spmv_flops(self) -> int:
-        """2*nnz useful flops (upper bound incl. ELL padding slots)."""
+        """2*nnz useful flops (upper bound incl. format padding slots)."""
         return 2 * self.nnz_stored
+
+
+def DistELL(
+    *,
+    data_loc,
+    col_loc,
+    data_ext,
+    col_ext,
+    bnd_rows,
+    send_sel,
+    plan,
+    n_global,
+    row_starts,
+    n_bnd=(),
+) -> DistMat:
+    """Back-compat constructor for the pre-refactor flat ELL layout: builds
+    a :class:`DistMat` whose interior is an :class:`ELLBlock`."""
+    return DistMat(
+        interior=ELLBlock(data=data_loc, col=col_loc),
+        data_ext=data_ext,
+        col_ext=col_ext,
+        bnd_rows=bnd_rows,
+        send_sel=send_sel,
+        plan=plan,
+        n_global=n_global,
+        row_starts=row_starts,
+        n_bnd=n_bnd,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -242,6 +430,167 @@ def _rows_to_ell(rows_entries, n_rows: int, k: int, dtype):
     return data, col
 
 
+# ---------------------------------------------------------------------------
+# Interior packers: per-shard row lists -> one InteriorBlock
+# ---------------------------------------------------------------------------
+
+
+def _pack_interior_ell(shard_rows, R: int, dtype) -> ELLBlock:
+    k = max(
+        (len(c) for rows in shard_rows for c, _ in rows), default=0
+    )
+    k = max(k, 1)
+    S = len(shard_rows)
+    data = np.zeros((S, R, k), dtype)
+    col = np.zeros((S, R, k), np.int32)
+    for s, rows in enumerate(shard_rows):
+        data[s], col[s] = _rows_to_ell(rows, R, k, dtype)
+    return ELLBlock(data=jnp.asarray(data), col=jnp.asarray(col))
+
+
+def _pack_interior_hyb(shard_rows, R: int, dtype, k_typ: int | None = None) -> HYBBlock:
+    from repro.roofline.format_model import hyb_split
+
+    lens = np.asarray(
+        [len(c) for rows in shard_rows for c, _ in rows], np.int64
+    )
+    if k_typ is None:
+        k_typ, _ = hyb_split(lens, n_rows=R * len(shard_rows))
+    k_typ = max(int(k_typ), 1)
+    S = len(shard_rows)
+    tails = []
+    for rows in shard_rows:
+        td, tc, trw = [], [], []
+        for r, (c, v) in enumerate(rows):
+            if len(c) > k_typ:
+                td.append(np.asarray(v[k_typ:], dtype))
+                tc.append(np.asarray(c[k_typ:], np.int64))
+                trw.append(np.full(len(c) - k_typ, r, np.int64))
+        if td:
+            tails.append(
+                (np.concatenate(td), np.concatenate(tc), np.concatenate(trw))
+            )
+        else:
+            tails.append(
+                (np.zeros(0, dtype), np.zeros(0, np.int64), np.zeros(0, np.int64))
+            )
+    n_tail = tuple(len(t[0]) for t in tails)
+    T = max(max(n_tail), 1)
+    data = np.zeros((S, R, k_typ), dtype)
+    col = np.zeros((S, R, k_typ), np.int32)
+    tail_data = np.zeros((S, T), dtype)
+    tail_col = np.zeros((S, T), np.int32)
+    tail_row = np.zeros((S, T), np.int32)
+    for s, rows in enumerate(shard_rows):
+        prefix = [(c[:k_typ], v[:k_typ]) for c, v in rows]
+        data[s], col[s] = _rows_to_ell(prefix, R, k_typ, dtype)
+        td, tc, trw = tails[s]
+        tail_data[s, : len(td)] = td
+        tail_col[s, : len(td)] = tc.astype(np.int32)
+        tail_row[s, : len(td)] = trw.astype(np.int32)
+    return HYBBlock(
+        data=jnp.asarray(data),
+        col=jnp.asarray(col),
+        tail_data=jnp.asarray(tail_data),
+        tail_col=jnp.asarray(tail_col),
+        tail_row=jnp.asarray(tail_row),
+        n_tail=n_tail,
+    )
+
+
+def _shard_rows_to_scipy(rows, R: int):
+    import scipy.sparse as sp
+
+    if rows:
+        cols = np.concatenate([np.asarray(c, np.int64) for c, _ in rows])
+        vals = np.concatenate([np.asarray(v, np.float64) for _, v in rows])
+    else:
+        cols, vals = np.zeros(0, np.int64), np.zeros(0)
+    rids = np.repeat(
+        np.arange(len(rows), dtype=np.int64), [len(c) for c, _ in rows]
+    )
+    return sp.coo_matrix((vals, (rids, cols)), shape=(R, R)).tocsr()
+
+
+def _pack_interior_bcsr(shard_rows, R: int, dtype, br: int, bc: int) -> BCSRBlock:
+    from repro.core.sparse import pack_bcsr
+
+    packed = [
+        pack_bcsr(_shard_rows_to_scipy(rows, R), br, bc, dtype)
+        for rows in shard_rows
+    ]
+    n_brows = packed[0][2]
+    bpr = max(p[3] for p in packed)
+    S = len(shard_rows)
+    blocks = np.zeros((S, n_brows * bpr, br, bc), dtype)
+    bcol = np.zeros((S, n_brows * bpr), np.int32)
+    for s, (bl, bcl, nbr, bpr_s, _) in enumerate(packed):
+        # re-layout from the shard's own bpr_s to the fleet-wide bpr
+        blocks[s].reshape(n_brows, bpr, br, bc)[:, :bpr_s] = bl.reshape(
+            nbr, bpr_s, br, bc
+        )
+        bcol[s].reshape(n_brows, bpr)[:, :bpr_s] = bcl.reshape(nbr, bpr_s)
+    return BCSRBlock(
+        blocks=jnp.asarray(blocks),
+        bcol=jnp.asarray(bcol),
+        n_brows=n_brows,
+        bpr=bpr,
+        br=br,
+        bc=bc,
+    )
+
+
+def pack_interior(
+    fmt: str, shard_rows, R: int, *, dtype=np.float64, block=(4, 4)
+) -> InteriorBlock:
+    """Pack per-shard interior row lists into one :class:`InteriorBlock`.
+
+    ``shard_rows``: per shard, a list over local rows of ``(cols, vals)``
+    with locally-shifted int column ids. ``fmt`` is one of :data:`FORMATS`
+    or ``"auto"``, which resolves the format minimizing the stored-bytes /
+    traffic cost model (``roofline/format_model.choose_format``) — never
+    costlier than ELL by construction, since ELL is always a candidate.
+    """
+    if fmt == "auto":
+        from repro.roofline.format_model import choose_format
+
+        fmt, _ = choose_format(
+            [[len(c) for c, _ in rows] for rows in shard_rows],
+            n_rows=R,
+            shard_blocks=[
+                _shard_block_stats(rows, R, block[0], block[1])
+                for rows in shard_rows
+            ],
+            br=block[0],
+            bc=block[1],
+        )
+    if fmt == "ell":
+        return _pack_interior_ell(shard_rows, R, dtype)
+    if fmt == "hyb":
+        return _pack_interior_hyb(shard_rows, R, dtype)
+    if fmt == "bcsr":
+        return _pack_interior_bcsr(shard_rows, R, dtype, block[0], block[1])
+    raise ValueError(f"unknown interior format {fmt!r}; want {FORMATS} or 'auto'")
+
+
+def _shard_block_stats(rows, R: int, br: int, bc: int) -> tuple[int, int]:
+    """(n_blocks, max_blocks_per_block_row) of one shard's interior."""
+    n_bcols = -(-R // bc)
+    rids = np.repeat(
+        np.arange(len(rows), dtype=np.int64), [len(c) for c, _ in rows]
+    )
+    cols = (
+        np.concatenate([np.asarray(c, np.int64) for c, _ in rows])
+        if rows
+        else np.zeros(0, np.int64)
+    )
+    if not len(cols):
+        return 0, 0
+    keys = np.unique((rids // br) * n_bcols + cols // bc)
+    counts = np.bincount(keys // n_bcols)
+    return len(keys), int(counts.max())
+
+
 def partition_csr(
     a_csr,
     n_shards: int,
@@ -250,14 +599,21 @@ def partition_csr(
     partition: RowPartition | None = None,
     dtype=np.float64,
     force_allgather: bool = False,
-) -> DistELL:
-    """Partition a host scipy CSR matrix into a DistELL.
+    fmt: str = "ell",
+    block: tuple[int, int] = (4, 4),
+) -> DistMat:
+    """Partition a host scipy CSR matrix into a DistMat.
 
     Chooses ring mode iff every off-shard coupling reaches at most
     ``max_ring`` shards away; otherwise falls back to allgather mode.
     ``force_allgather=True`` always uses allgather mode — this is the
     Ginkgo-analog baseline layout (full-vector gather, no halo
     minimization).
+
+    ``fmt`` selects the interior storage format — one of :data:`FORMATS`
+    (``ell``/``hyb``/``bcsr``) or ``"auto"`` (stored-bytes cost model, see
+    ``roofline/format_model.py``); ``block`` is the BCSR tile shape. The
+    boundary block and halo plan are format-agnostic.
     """
     a = a_csr.tocsr()
     n = a.shape[0]
@@ -317,8 +673,8 @@ def partition_csr(
         send_sel = np.zeros((n_shards, 1), np.int32)
         recv_lists = None
 
-    # --- pass 2: build split local/ext ELL blocks ---------------------------
-    k_loc_max, k_ext_max = 1, 1
+    # --- pass 2: build the split interior/boundary blocks -------------------
+    k_ext_max = 1
     per_shard = []
     for s in range(n_shards):
         lo, hi = part.owner_range(s)
@@ -346,11 +702,14 @@ def partition_csr(
                 starts = np.asarray(part.row_starts, np.int64)[owners]
                 lidx = owners * R + (ec - starts)
             ext_rows.append((lidx, ev))
-            k_loc_max = max(k_loc_max, int(own.sum()))
             k_ext_max = max(k_ext_max, len(ec))
         per_shard.append((loc_rows, ext_rows))
 
     S = n_shards
+    interior = pack_interior(
+        fmt, [loc_rows for loc_rows, _ in per_shard], R, dtype=dtype,
+        block=block,
+    )
     # Interior/boundary row split: boundary rows are the rows with at least
     # one external (ghost-column) entry; only they get boundary-block slots.
     bnd_lists = [
@@ -359,22 +718,17 @@ def partition_csr(
     ]
     n_bnd = tuple(len(b) for b in bnd_lists)
     B = max(max(n_bnd), 1)
-    data_loc = np.zeros((S, R, k_loc_max), dtype)
-    col_loc = np.zeros((S, R, k_loc_max), np.int32)
     data_ext = np.zeros((S, B, k_ext_max), dtype)
     col_ext = np.zeros((S, B, k_ext_max), np.int32)
     bnd_rows = np.zeros((S, B), np.int32)
-    for s, (loc_rows, ext_rows) in enumerate(per_shard):
-        dl, cl = _rows_to_ell(loc_rows, R, k_loc_max, dtype)
-        data_loc[s], col_loc[s] = dl, cl
+    for s, (_, ext_rows) in enumerate(per_shard):
         bnd = bnd_lists[s]
         de, ce = _rows_to_ell([ext_rows[r] for r in bnd], B, k_ext_max, dtype)
         data_ext[s], col_ext[s] = de, ce
         bnd_rows[s, : len(bnd)] = bnd
 
-    return DistELL(
-        data_loc=jnp.asarray(data_loc),
-        col_loc=jnp.asarray(col_loc),
+    return DistMat(
+        interior=interior,
         data_ext=jnp.asarray(data_ext),
         col_ext=jnp.asarray(col_ext),
         bnd_rows=jnp.asarray(bnd_rows),
@@ -386,8 +740,11 @@ def partition_csr(
     )
 
 
-def partition_stencil(p, n_shards: int, dtype=np.float64, mode: str = "ring") -> DistELL:
-    """Build a DistELL for a Poisson stencil problem WITHOUT materializing the
+def partition_stencil(
+    p, n_shards: int, dtype=np.float64, mode: str = "ring",
+    fmt: str = "ell", block: tuple[int, int] = (4, 4),
+) -> DistMat:
+    """Build a DistMat for a Poisson stencil problem WITHOUT materializing the
     global matrix: per-shard cost is O(n_local * k).
 
     Slab (z-plane) partition; both stencils reach exactly +-1 plane, so the
@@ -396,6 +753,9 @@ def partition_stencil(p, n_shards: int, dtype=np.float64, mode: str = "ring") ->
 
     ``mode="allgather"`` builds the Ginkgo-analog layout instead (external
     columns in padded-global layout; full-vector gather at SpMV time).
+    ``fmt`` selects the interior format as in :func:`partition_csr`; stencil
+    rows are uniform-width, so ``"auto"`` resolves to ELL and the other
+    formats exist for A/B measurements only.
     """
     from repro.matrices.poisson import stencil_offsets, stencil_values
 
@@ -495,9 +855,15 @@ def partition_stencil(p, n_shards: int, dtype=np.float64, mode: str = "ring") ->
                 off += widths[kk]
 
     B = max(max(n_bnd), 1)
-    return DistELL(
-        data_loc=jnp.asarray(data_loc),
-        col_loc=jnp.asarray(col_loc),
+    if fmt in ("ell", "auto"):
+        interior = ELLBlock(data=jnp.asarray(data_loc), col=jnp.asarray(col_loc))
+    else:
+        interior = pack_interior(
+            fmt, _ell_to_shard_rows(data_loc, col_loc), R, dtype=dtype,
+            block=block,
+        )
+    return DistMat(
+        interior=interior,
         data_ext=jnp.asarray(data_ext[:, :B]),
         col_ext=jnp.asarray(col_ext[:, :B]),
         bnd_rows=jnp.asarray(bnd_rows[:, :B]),
@@ -509,7 +875,26 @@ def partition_stencil(p, n_shards: int, dtype=np.float64, mode: str = "ring") ->
     )
 
 
-def expand_boundary(mat: DistELL) -> tuple[np.ndarray, np.ndarray]:
+def _ell_to_shard_rows(data: np.ndarray, col: np.ndarray):
+    """Recover per-shard (cols, vals) row lists from packed ELL arrays.
+
+    Entries are identified by ``data != 0 or col != 0`` — the repo-wide
+    padding convention; a genuine zero-valued entry at column 0 (which no
+    stencil produces) would be dropped, hence this is only used to convert
+    stencil-built interiors to the alternative formats.
+    """
+    S, R, _ = data.shape
+    out = []
+    for s in range(S):
+        rows = []
+        for r in range(R):
+            m = (data[s, r] != 0) | (col[s, r] != 0)
+            rows.append((col[s, r][m].astype(np.int64), data[s, r][m]))
+        out.append(rows)
+    return out
+
+
+def expand_boundary(mat: DistMat) -> tuple[np.ndarray, np.ndarray]:
     """Full-row ``(S, R, k_ext)`` view of the compact boundary block (host).
 
     Inverse of the boundary-row compaction: scatter each shard's compact
@@ -536,7 +921,7 @@ def expand_boundary(mat: DistELL) -> tuple[np.ndarray, np.ndarray]:
 # ---------------------------------------------------------------------------
 
 
-def pad_vector(x: np.ndarray, mat: DistELL) -> np.ndarray:
+def pad_vector(x: np.ndarray, mat: DistMat) -> np.ndarray:
     """Global vector -> (S, R) padded shard layout."""
     S, R = mat.n_shards, mat.n_own_pad
     out = np.zeros((S, R), x.dtype)
@@ -546,7 +931,7 @@ def pad_vector(x: np.ndarray, mat: DistELL) -> np.ndarray:
     return out
 
 
-def unpad_vector(xp: np.ndarray, mat: DistELL) -> np.ndarray:
+def unpad_vector(xp: np.ndarray, mat: DistMat) -> np.ndarray:
     """(S, R) padded shard layout -> global vector."""
     xp = np.asarray(xp)
     parts = []

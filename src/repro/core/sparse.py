@@ -7,7 +7,7 @@ The paper's library stores matrices in CSR with 4-byte *local* column indices
   vector* ``x_ext = [x_own | halo buffers]`` (see ``core/partition.py``);
 * the global 64-bit index space only exists on the host at partition time;
 * distributed matrices additionally split rows into an interior block and a
-  compact ghost-touching boundary block (``partition.DistELL``) so the halo
+  compact ghost-touching boundary block (``partition.DistMat``) so the halo
   exchange can overlap the interior SpMV — the formats here are the
   *single-shard* building blocks underneath that split.
 
@@ -120,14 +120,24 @@ class BCSR:
 
 
 def csr_from_scipy(a, pad_nnz_to: int | None = None, dtype=np.float32) -> CSR:
-    """Build a device CSR from a scipy.sparse CSR matrix (host)."""
+    """Build a device CSR from a scipy.sparse CSR matrix (host).
+
+    Mirrors :func:`ell_from_scipy`'s contract: an insufficient capacity
+    request raises (it used to be silently ignored), and padding slots carry
+    ``data == 0``, ``col == 0`` (``row_ids == n_rows``, dropped by matvec) —
+    the repo-wide padding convention every format shares.
+    """
     a = a.tocsr()
     n_rows, n_cols = a.shape
     nnz = a.nnz
     row_ids = np.repeat(np.arange(n_rows, dtype=np.int32), np.diff(a.indptr))
     data = a.data.astype(dtype)
     col = a.indices.astype(np.int32)
-    if pad_nnz_to is not None and pad_nnz_to > nnz:
+    if pad_nnz_to is not None:
+        if pad_nnz_to < nnz:
+            raise ValueError(
+                f"pad_nnz_to={pad_nnz_to} below the matrix nnz={nnz}"
+            )
         pad = pad_nnz_to - nnz
         data = np.concatenate([data, np.zeros(pad, dtype)])
         col = np.concatenate([col, np.zeros(pad, np.int32)])
@@ -142,7 +152,12 @@ def csr_from_scipy(a, pad_nnz_to: int | None = None, dtype=np.float32) -> CSR:
 
 
 def ell_from_scipy(a, k: int | None = None, dtype=np.float32, n_cols: int | None = None):
-    """Build an ELL matrix (host). k defaults to max nnz/row."""
+    """Build an ELL matrix (host). k defaults to max nnz/row.
+
+    Empty rows (and the padded tail of every short row) carry ``data == 0``,
+    ``col == 0``; non-square inputs keep their column count in ``n_cols`` so
+    the gather length is the *column* space, never the row count.
+    """
     a = a.tocsr()
     n_rows, a_cols = a.shape
     n_cols = a_cols if n_cols is None else n_cols
@@ -162,11 +177,17 @@ def ell_from_scipy(a, k: int | None = None, dtype=np.float32, n_cols: int | None
     return ELL(data=jnp.asarray(data), col=jnp.asarray(col), n_cols=n_cols)
 
 
-def bcsr_from_scipy(a, br: int, bc: int, dtype=np.float32) -> BCSR:
-    """Build a BCSR matrix with dense (br, bc) blocks (host).
+def block_partition(a, br: int, bc: int, dtype=np.float32):
+    """Dense-block decomposition of a scipy matrix (host) — the ONE
+    block-packing implementation.
 
-    The matrix is zero-padded up to multiples of the block size; blocks with
-    any nonzero are materialized densely.
+    Zero-pads the matrix up to block multiples and materializes every block
+    containing a structural nonzero densely. Returns numpy arrays
+    ``(blocks (nnzb, br, bc), bcol (nnzb,) int32, brow_ids (nnzb,) int32,
+    n_brows, n_bcols)`` with ``brow_ids`` non-decreasing and block columns
+    sorted within each block row. Both :func:`bcsr_from_scipy` (ragged
+    device format) and :func:`pack_bcsr` (the Pallas kernel's uniform
+    blocks-per-row layout) build on this.
     """
     import scipy.sparse as sp
 
@@ -175,17 +196,29 @@ def bcsr_from_scipy(a, br: int, bc: int, dtype=np.float32) -> BCSR:
     n_brows = -(-n // br)
     n_bcols = -(-m // bc)
     ap = sp.csr_matrix((a.data, a.indices, a.indptr), shape=(n, m))
-    ap.resize(n_brows * br, n_bcols * bc)
+    ap.resize(max(n_brows, 1) * br, max(n_bcols, 1) * bc)
     coo = ap.tocoo()
-    bi = coo.row // br
-    bj = coo.col // bc
-    keys = bi.astype(np.int64) * n_bcols + bj
+    bi = (coo.row // br).astype(np.int64)
+    bj = (coo.col // bc).astype(np.int64)
+    keys = bi * max(n_bcols, 1) + bj
     uniq, inv = np.unique(keys, return_inverse=True)
     nnzb = len(uniq)
     blocks = np.zeros((nnzb, br, bc), dtype)
     blocks[inv, coo.row % br, coo.col % bc] = coo.data
-    brow_ids = (uniq // n_bcols).astype(np.int32)
-    bcol = (uniq % n_bcols).astype(np.int32)
+    brow_ids = (uniq // max(n_bcols, 1)).astype(np.int32)
+    bcol = (uniq % max(n_bcols, 1)).astype(np.int32)
+    return blocks, bcol, brow_ids, n_brows, n_bcols
+
+
+def bcsr_from_scipy(a, br: int, bc: int, dtype=np.float32) -> BCSR:
+    """Build a BCSR matrix with dense (br, bc) blocks (host).
+
+    The matrix is zero-padded up to multiples of the block size; blocks with
+    any nonzero are materialized densely (see :func:`block_partition`).
+    """
+    blocks, bcol, brow_ids, n_brows, n_bcols = block_partition(
+        a, br, bc, dtype
+    )
     return BCSR(
         blocks=jnp.asarray(blocks),
         bcol=jnp.asarray(bcol),
@@ -195,3 +228,29 @@ def bcsr_from_scipy(a, br: int, bc: int, dtype=np.float32) -> BCSR:
         br=br,
         bc=bc,
     )
+
+
+def pack_bcsr(a_csr, br: int, bc: int, dtype=np.float32):
+    """Pack a scipy matrix into the Pallas kernel's uniform
+    blocks-per-row layout (see ``kernels/spmv_bcsr.py``).
+
+    Returns ``(blocks (n_brows*bpr, br, bc), bcol (n_brows*bpr,), n_brows,
+    bpr, n_bcols)``: every block-row padded to the max block count ``bpr``;
+    padding blocks are all-zero with ``bcol == 0`` (in-bounds gathers that
+    contribute nothing).
+    """
+    blocks_r, bcol_r, brow_ids, n_brows, n_bcols = block_partition(
+        a_csr, br, bc, dtype
+    )
+    counts = np.bincount(brow_ids, minlength=max(n_brows, 1))
+    bpr = max(int(counts.max()) if counts.size else 0, 1)
+    blocks = np.zeros((max(n_brows, 1) * bpr, br, bc), dtype)
+    bcol = np.zeros((max(n_brows, 1) * bpr,), np.int32)
+    # brow_ids is sorted, so the slot of each block within its row is its
+    # offset from the row's first block
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    slot = np.arange(len(brow_ids), dtype=np.int64) - starts[brow_ids]
+    dst = brow_ids.astype(np.int64) * bpr + slot
+    blocks[dst] = blocks_r
+    bcol[dst] = bcol_r
+    return blocks, bcol, max(n_brows, 1), bpr, n_bcols

@@ -8,7 +8,7 @@ squeezed), collectives are explicit (``lax.ppermute`` / ``lax.all_gather`` /
 Key design point reproduced from the paper: each shard's rows are split at
 partition time into an **interior block** (entries with locally-owned
 columns) and a compact **boundary block** (the ghost-touching rows' external
-entries only — see ``DistELL``). ``spmv_shard`` issues the halo ``ppermute``
+entries only — see ``DistMat``). ``spmv_shard`` issues the halo ``ppermute``
 first, multiplies the interior block while the exchange is in flight, and
 scatter-adds the boundary block on arrival — the JAX analog of overlapping
 CUDA kernels with MPI progress. The whole overlapped phase is attributed to
@@ -28,13 +28,20 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.partition import DistELL, HaloPlan
+from repro.core.partition import (
+    BCSRBlock,
+    DistMat,
+    ELLBlock,
+    HaloPlan,
+    HYBBlock,
+    InteriorBlock,
+)
 from repro.energy import trace
 from repro.energy.accounting import OpCounts
 
 
 # ---------------------------------------------------------------------------
-# ELL matvec primitive (local, dense-gather form; TPU kernels in kernels/)
+# Interior matvec primitives (local, per storage format)
 # ---------------------------------------------------------------------------
 
 
@@ -57,6 +64,61 @@ def ell_matvec(data: jax.Array, col: jax.Array, x: jax.Array) -> jax.Array:
     return jnp.einsum("rk,rk->r", data, x[col])
 
 
+def hyb_matvec(block: HYBBlock, x: jax.Array) -> jax.Array:
+    """HYB interior matvec: ELL-prefix einsum + COO-tail scatter-add.
+
+    ``block`` is the *local* (shard-axis-squeezed) HYBBlock. Tail padding
+    (data 0, col 0, row 0) scatter-adds exact zeros. Accounted with the
+    bytes this layout actually moves: ``k_typ`` slots/row with one 4 B
+    index each, plus value + (col, row) index pairs for the tail — the
+    stored-bytes saving vs ELL shows up directly in the SpMV region of the
+    executed-energy ledger.
+    """
+    data, col = block.data, block.col
+    b = data.dtype.itemsize
+    trace.record_op(
+        "hyb_matvec",
+        OpCounts(
+            flops=2.0 * (data.size + block.tail_data.size),
+            hbm_bytes=float(
+                data.size * (b + col.dtype.itemsize)
+                + block.tail_data.size * (b + 2 * block.tail_col.dtype.itemsize)
+                + x.size * b
+                + data.shape[0] * b
+            ),
+        ),
+    )
+    y = jnp.einsum("rk,rk->r", data, x[col])
+    return y.at[block.tail_row].add(block.tail_data * x[block.tail_col])
+
+
+def interior_matvec(interior: InteriorBlock, x_own: jax.Array) -> jax.Array:
+    """y_own = A_interior @ x_own for the local (squeezed) interior block.
+
+    Dispatches on the storage format: ELL/HYB run their dense-gather jnp
+    forms here; BCSR routes through the kernel-dispatch op ``bcsr_spmv``
+    (kernels/dispatch.py) so the Pallas block kernel runs inside shard_map
+    on the pallas/interpret backends. All formats return the same (R,)
+    vector within fp tolerance.
+    """
+    if isinstance(interior, ELLBlock):
+        return ell_matvec(interior.data, interior.col, x_own)
+    if isinstance(interior, HYBBlock):
+        return hyb_matvec(interior, x_own)
+    if isinstance(interior, BCSRBlock):
+        from repro.kernels import dispatch as kd
+
+        return kd.ops_for(None).bcsr_spmv(
+            interior.blocks,
+            interior.bcol,
+            x_own,
+            n_brows=interior.n_brows,
+            bpr=interior.bpr,
+            n_out=x_own.shape[0],
+        )
+    raise TypeError(f"unknown interior block type {type(interior).__name__}")
+
+
 def boundary_matvec(
     data_bnd: jax.Array,
     col_bnd: jax.Array,
@@ -67,7 +129,7 @@ def boundary_matvec(
     """Compact boundary-block matvec: ``yb[j] = sum_k data[j,k]*x_ext[col[j,k]]``.
 
     ``data_bnd/col_bnd`` are the (B, k_ext) ghost-entry rows of the shard
-    (``DistELL.data_ext``); the caller scatter-adds ``yb`` into the interior
+    (``DistMat.data_ext``); the caller scatter-adds ``yb`` into the interior
     result at ``bnd_rows``. Padded slots carry zero data, so their adds are
     exact zeros.
 
@@ -143,7 +205,7 @@ def halo_exchange(
         return _halo_exchange(x_own, send_sel, plan, axis)
 
 
-def gather_ext(mat: DistELL, x_own: jax.Array, axis: str) -> jax.Array:
+def gather_ext(mat: DistMat, x_own: jax.Array, axis: str) -> jax.Array:
     """Produce the external-vector buffer ``x_ext`` for this shard's rows."""
     if mat.plan.mode == "ring":
         halo = halo_exchange(x_own, mat.send_sel, mat.plan, axis)
@@ -189,11 +251,11 @@ def overlap_default(on: bool):
 
 
 def spmv_shard(
-    mat: DistELL, x_own: jax.Array, axis: str, *, overlap: bool | None = None
+    mat: DistMat, x_own: jax.Array, axis: str, *, overlap: bool | None = None
 ) -> jax.Array:
     """y_own = (A @ x)_own via the interior/boundary row-block split.
 
-    ``mat`` is the *local* DistELL block (leading shard axis squeezed; see
+    ``mat`` is the *local* DistMat block (leading shard axis squeezed; see
     ``local_block``); ``x_own`` the local (R,) vector shard. ``overlap=None``
     resolves the scoped :func:`overlap_default` (True unless a solver set
     otherwise).
@@ -216,14 +278,14 @@ def spmv_shard(
     if overlap and ring:
         with trace.region(trace.OVERLAP):
             halo = _halo_exchange(x_own, mat.send_sel, mat.plan, axis)
-            y = ell_matvec(mat.data_loc, mat.col_loc, x_own)  # interior
+            y = interior_matvec(mat.interior, x_own)
             x_ext = jnp.concatenate([x_own, halo])
             yb = boundary_matvec(
                 mat.data_ext, mat.col_ext, x_ext, src_elems=halo.size
             )
             return y.at[mat.bnd_rows].add(yb)
     x_ext = gather_ext(mat, x_own, axis)
-    y = ell_matvec(mat.data_loc, mat.col_loc, x_own)
+    y = interior_matvec(mat.interior, x_own)
     # ring: the boundary gathers touch only the received halo buffers
     src = x_ext.size - x_own.size if ring else None
     yb = boundary_matvec(mat.data_ext, mat.col_ext, x_ext, src_elems=src)
@@ -235,13 +297,13 @@ def spmv_shard(
 # ---------------------------------------------------------------------------
 
 
-def local_block(mat: DistELL) -> DistELL:
+def local_block(mat: DistMat) -> DistMat:
     """Squeeze the leading shard axis from every data leaf (inside shard_map)."""
     return jax.tree.map(lambda a: a[0] if a.ndim > 0 else a, mat)
 
 
-def dist_specs(mat: DistELL):
-    """PartitionSpec pytree for a DistELL sharded over the ``shards`` axis."""
+def dist_specs(mat: DistMat):
+    """PartitionSpec pytree for a DistMat sharded over the ``shards`` axis."""
     return jax.tree.map(
         lambda a: P("shards", *([None] * (a.ndim - 1))), mat
     )
@@ -257,7 +319,7 @@ def shard_vector(mesh, xp) -> jax.Array:
     return jax.device_put(jnp.asarray(xp), sh)
 
 
-def shard_matrix(mesh, mat: DistELL) -> DistELL:
+def shard_matrix(mesh, mat: DistMat) -> DistMat:
     specs = dist_specs(mat)
     return jax.tree.map(
         lambda a, s: jax.device_put(a, jax.sharding.NamedSharding(mesh, s)),
@@ -266,7 +328,7 @@ def shard_matrix(mesh, mat: DistELL) -> DistELL:
     )
 
 
-def make_spmv(mesh, mat: DistELL, axis: str = "shards", *, overlap: bool = True):
+def make_spmv(mesh, mat: DistMat, axis: str = "shards", *, overlap: bool = True):
     """Jitted end-to-end distributed SpMV: (S,R) -> (S,R) sharded arrays.
 
     ``overlap`` selects the communication-hiding schedule (see
@@ -286,5 +348,6 @@ def make_spmv(mesh, mat: DistELL, axis: str = "shards", *, overlap: bool = True)
         mesh=mesh,
         in_specs=(specs, P("shards", None)),
         out_specs=P("shards", None),
+        check_rep=False,  # jax 0.4.37: no replication rule for pallas_call
     )
     return jax.jit(mapped)

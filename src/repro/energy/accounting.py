@@ -32,7 +32,7 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from repro.core.partition import DistELL
+from repro.core.partition import DistMat
 from repro.energy.model import PowerModel
 
 
@@ -67,12 +67,19 @@ ZERO = OpCounts()
 # Per-operation analytic counts (per device / shard)
 # ---------------------------------------------------------------------------
 
-_VB = 8  # value bytes (f64)
-_IB = 4  # index bytes (int32 — the paper's global->local compaction)
+_VB = 8  # value bytes (f64); index bytes (4 B int32 local ids) live in the
+# per-format DistMat.stored_bytes accounting (roofline/format_model.py)
 
 
-def spmv_counts(mat: DistELL, overlap: bool = True) -> OpCounts:
-    """One distributed SpMV, per shard."""
+def spmv_counts(mat: DistMat, overlap: bool = True) -> OpCounts:
+    """One distributed SpMV, per shard.
+
+    Matrix traffic is the *format-aware* stored-bytes term
+    (``DistMat.stored_bytes``: values + the index layout of the interior
+    format — per-entry 4 B ids for ELL, the prefix + (col, row)-pair tail
+    for HYB, per-block ids for BCSR), so the modeled SpMV cost moves with
+    the storage format exactly like the executed trace counts do.
+    """
     S = max(mat.n_shards, 1)
     slots = mat.nnz_stored / S
     n = mat.n_own_pad
@@ -80,7 +87,7 @@ def spmv_counts(mat: DistELL, overlap: bool = True) -> OpCounts:
         n * (mat.n_shards - 1)
     )
     flops = 2.0 * slots
-    hbm = slots * (_VB + _IB) + (n + halo) * _VB + n * _VB
+    hbm = mat.stored_bytes(_VB) / S + (n + halo) * _VB + n * _VB
     ici = float(mat.plan.collective_bytes_per_shard(_VB))
     n_coll = len(mat.plan.shifts) if mat.plan.mode == "ring" else 1.0
     if mat.n_shards == 1:
@@ -102,7 +109,7 @@ def axpy_counts(n: int) -> OpCounts:
     return OpCounts(flops=2.0 * n, hbm_bytes=3.0 * n * _VB)
 
 
-def cg_iteration_counts(mat: DistELL, variant: str = "hs") -> OpCounts:
+def cg_iteration_counts(mat: DistMat, variant: str = "hs") -> OpCounts:
     """Per-iteration counts of the *unpreconditioned* CG variants.
 
     hs   : 1 SpMV + 2 reductions (one fused pair) + 3 axpy-class updates
@@ -136,7 +143,7 @@ def cg_iteration_counts(mat: DistELL, variant: str = "hs") -> OpCounts:
     raise ValueError(variant)
 
 
-def vcycle_counts(levels_info, mat0: DistELL, n_smooth: int = 4) -> OpCounts:
+def vcycle_counts(levels_info, mat0: DistMat, n_smooth: int = 4) -> OpCounts:
     """One V-cycle, per shard; ``levels_info`` = AMGInfo (rows/nnz per level).
 
     Approximation: each level's SpMV-class work scales with its nnz share;

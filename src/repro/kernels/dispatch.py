@@ -45,6 +45,8 @@ from repro.kernels.fused_reductions import (
     fused_axpy2_dots,
     fused_dots_n,
 )
+from repro.kernels.spmv_bcsr import bcsr_finish_y, bcsr_prepare_x
+from repro.kernels.spmv_bcsr import bcsr_spmv as _bcsr_spmv_kernel
 from repro.kernels.spmv_stencil import (
     pick_bz,
     stencil_spmv_boundary,
@@ -57,8 +59,9 @@ ENV_VAR = "REPRO_KERNELS"
 # Ops that stream full-length vectors exactly once per call (1 sweep each).
 VECTOR_OPS = ("axpy", "fused_axpy2", "fused_axpy2_dots", "fused_dots_n")
 # The SpMV is accounted separately (its traffic is the matrix term);
-# stencil_boundary is the overlap path's two-plane edge fix-up.
-SPMV_OPS = ("stencil_matvec", "stencil_boundary")
+# stencil_boundary is the overlap path's two-plane edge fix-up; bcsr_spmv
+# is the blocked interior matvec of the BCSR-format DistMat.
+SPMV_OPS = ("stencil_matvec", "stencil_boundary", "bcsr_spmv")
 
 _override: str | None = None
 
@@ -315,6 +318,44 @@ class OpSet:
             x3, prev_halo, next_halo, stencil=stencil, aniso=aniso,
             bz=pick_bz(x3.shape[0]), interpret=(b == "interpret"),
         )
+
+    def bcsr_spmv(self, blocks, bcol, x, *, n_brows, bpr, n_out=None):
+        """Uniform-layout block-CSR SpMV (the BCSR DistMat interior).
+
+        ``blocks`` is the (n_brows*bpr, br, bc) dense-block array and
+        ``bcol`` its block-column ids (``core.sparse.pack_bcsr`` layout,
+        padding blocks all-zero with ``bcol == 0``). ``x`` may be the
+        native (n_bcols, bc) tile layout or a flat (n,) vector — flat
+        inputs are zero-padded up to the block grid and returned flat,
+        trimmed to ``n_out``. Accounted as one streaming pass over blocks
+        + block ids + the source vector, writing the blocked result.
+        """
+        _, br, bc = blocks.shape
+        b = x.dtype.itemsize
+        _record(
+            "bcsr_spmv",
+            OpCounts(
+                flops=2.0 * blocks.size,
+                hbm_bytes=float(
+                    blocks.size * b
+                    + bcol.size * bcol.dtype.itemsize
+                    + x.size * b
+                    + n_brows * br * b
+                ),
+            ),
+        )
+        backend_name = _pallas_mode(self.backend, x.dtype)
+        x, flat, n_out = bcsr_prepare_x(
+            blocks, x, n_brows=n_brows, bpr=bpr, n_out=n_out
+        )
+        if backend_name == "jnp":
+            y = ref.bcsr_spmv_ref(blocks, bcol, x, n_brows, bpr)
+        else:
+            y = _bcsr_spmv_kernel(
+                blocks, bcol, x, n_brows=n_brows, bpr=bpr,
+                interpret=(backend_name == "interpret"),
+            )
+        return bcsr_finish_y(y, flat, n_out)
 
     def stencil_boundary(self, x3, prev_halo, next_halo, *, stencil="7pt",
                          aniso=(1.0, 1.0, 1.0)):

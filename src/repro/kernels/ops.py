@@ -35,11 +35,25 @@ def stencil_spmv(x, *, stencil="7pt", aniso=(1.0, 1.0, 1.0), bz=8, interpret=Non
     return _stencil_spmv(x, stencil=stencil, aniso=aniso, bz=bz, interpret=interpret)
 
 
-def bcsr_spmv(blocks, bcol, x, *, n_brows, bpr, interpret=None):
+def bcsr_spmv(blocks, bcol, x, *, n_brows, bpr, n_out=None, interpret=None):
+    """Uniform-layout BCSR SpMV with ragged-size guarding.
+
+    ``x`` may be the kernel's native ``(n_bcols, bc)`` tile layout or a flat
+    ``(n,)`` vector with ``n % bc != 0`` — flat inputs are zero-padded up to
+    the block grid (the trailing block-row/column is padded, not rejected)
+    and the result comes back flat, trimmed to ``n_out`` (default: the
+    input length capped at ``n_brows * br``).
+    """
+    from repro.kernels.spmv_bcsr import bcsr_finish_y, bcsr_prepare_x
+
     interpret = _default_interpret() if interpret is None else interpret
-    return _bcsr_spmv(
+    x, flat, n_out = bcsr_prepare_x(
+        blocks, x, n_brows=n_brows, bpr=bpr, n_out=n_out
+    )
+    y = _bcsr_spmv(
         blocks, bcol, x, n_brows=n_brows, bpr=bpr, interpret=interpret
     )
+    return bcsr_finish_y(y, flat, n_out)
 
 
 def stencil_spmv_halo(

@@ -19,7 +19,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -65,44 +64,43 @@ def bcsr_spmv(
     )(bcol, blocks, x)
 
 
-# ---------------------------------------------------------------------------
-# Host-side packing: scipy CSR -> uniform-bpr BCSR arrays
-# ---------------------------------------------------------------------------
+def bcsr_prepare_x(blocks, x, *, n_brows: int, bpr: int, n_out: int | None):
+    """Shared ragged-size guard for the uniform-layout BCSR SpMV callers.
 
-
-def pack_bcsr(a_csr, br: int, bc: int, dtype=np.float32):
-    """Pack a scipy matrix into the kernel's uniform blocks-per-row layout.
-
-    Returns (blocks (n_brows*bpr, br, bc), bcol (n_brows*bpr,), n_brows, bpr,
-    n_bcols). Zero-pads the matrix up to block multiples and each block-row
-    to the max block count.
+    Validates the packing (``blocks.shape[0] == n_brows * bpr``) and, for a
+    flat ``(n,)`` vector with ``n % bc != 0``, zero-pads the trailing block
+    column up to the tile grid. Returns ``(x2, flat, n_out)`` where ``x2``
+    is the kernel's native (n_bcols, bc) layout and ``n_out`` the length to
+    trim the flattened result to (None for native-layout inputs). Both
+    ``kernels/ops.bcsr_spmv`` and the dispatch ``OpSet.bcsr_spmv`` go
+    through here, so the two entry points cannot drift apart.
     """
-    import scipy.sparse as sp
+    _, br, bc = blocks.shape
+    if blocks.shape[0] != n_brows * bpr:
+        raise ValueError(
+            f"blocks leading dim {blocks.shape[0]} != n_brows*bpr "
+            f"({n_brows}*{bpr}); pack with core.sparse.pack_bcsr"
+        )
+    flat = x.ndim == 1
+    if flat:
+        n = x.shape[0]
+        n_bcols = -(-n // bc)
+        pad = n_bcols * bc - n
+        if pad:
+            x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+        x = x.reshape(n_bcols, bc)
+        if n_out is None:
+            n_out = min(n, n_brows * br)
+    return x, flat, n_out
 
-    a = a_csr.tocsr()
-    n, m = a.shape
-    n_brows = -(-n // br)
-    n_bcols = -(-m // bc)
-    ap = sp.csr_matrix((a.data, a.indices, a.indptr), shape=(n, m))
-    ap.resize(n_brows * br, n_bcols * bc)
-    coo = ap.tocoo()
-    bi = (coo.row // br).astype(np.int64)
-    bj = (coo.col // bc).astype(np.int64)
-    keys = bi * n_bcols + bj
-    uniq, inv = np.unique(keys, return_inverse=True)
-    ubi, ubj = uniq // n_bcols, uniq % n_bcols
-    counts = np.bincount(ubi, minlength=n_brows)
-    bpr = max(int(counts.max()), 1)
-    blocks = np.zeros((n_brows * bpr, br, bc), dtype)
-    bcol = np.zeros((n_brows * bpr,), np.int32)
-    # slot of each unique block within its row
-    slot = np.zeros(len(uniq), np.int64)
-    next_slot = np.zeros(n_brows, np.int64)
-    for u, r in enumerate(ubi):  # uniq is sorted by (bi, bj)
-        slot[u] = next_slot[r]
-        next_slot[r] += 1
-    dst = ubi * bpr + slot
-    bcol[dst] = ubj.astype(np.int32)
-    blocks_flat_idx = dst[inv]
-    blocks[blocks_flat_idx, coo.row % br, coo.col % bc] = coo.data
-    return blocks, bcol, n_brows, bpr, n_bcols
+
+def bcsr_finish_y(y, flat: bool, n_out: int | None):
+    """Inverse of :func:`bcsr_prepare_x`'s flat handling: flatten and trim
+    the (n_brows, br) kernel result back to the caller's vector length."""
+    return y.reshape(-1)[:n_out] if flat else y
+
+
+# Host-side packing lives with the other format conversions in
+# core/sparse.py (one block-packing implementation); re-exported here for
+# the kernel-facing import path.
+from repro.core.sparse import pack_bcsr  # noqa: E402, F401

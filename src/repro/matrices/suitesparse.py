@@ -108,8 +108,41 @@ def _irregular(n: int, nnz_row: float, rng, dtype):
     return _spd_from_pattern(rows, cols, vals, n, dtype)
 
 
+def _powerlaw(n: int, rng, dtype):
+    """Power-law (hub-dominated) SPD pattern: most rows carry a handful of
+    near-diagonal couplings, a Zipf-tail of hub rows reaches a large
+    neighborhood — the ``max_row_nnz >> median`` regime where one long row
+    inflates the padded-ELL layout on every shard (the HYB format's target
+    workload; see docs/formats.md)."""
+    # base band: 2 off-diagonal couplings per row
+    base = np.arange(n - 1, dtype=np.int64)
+    rows = [base]
+    cols = [base + 1]
+    # Zipf-distributed extra degree, capped so hubs stay local-ish
+    extra = np.minimum(rng.zipf(1.5, n), max(n // 4, 4)).astype(np.int64)
+    hubs = np.nonzero(extra > 2)[0]
+    for h in hubs:
+        m = int(extra[h])
+        tgt = rng.integers(0, n, m)
+        tgt = tgt[tgt != h]
+        rows.append(np.full(len(tgt), h, np.int64))
+        cols.append(tgt)
+    r = np.concatenate(rows)
+    c = np.concatenate(cols)
+    vals = -rng.uniform(0.2, 1.8, len(r))
+    return _spd_from_pattern(r, c, vals, n, dtype)
+
+
+# Beyond-Table-1 synthetic: the format sweep's power-law stress pattern.
+POWERLAW = MatrixInfo("powerlaw", 20000, 140000, 7.0, "powerlaw")
+
+
 def generate(name: str, scale: float = 1.0, dtype=np.float64, seed: int = 0):
-    """Generate the synthetic analog of a Table-1 matrix at ``scale``."""
+    """Generate the synthetic analog of a Table-1 matrix (or the
+    ``powerlaw`` stress pattern) at ``scale``."""
+    if name == "powerlaw":
+        rng = np.random.default_rng(seed)
+        return _powerlaw(max(64, int(POWERLAW.rows * scale)), rng, dtype)
     info = TABLE1[name]
     rng = np.random.default_rng(seed)
     n = max(64, int(info.rows * scale))

@@ -112,6 +112,31 @@ def test_abstract_split_shapes_match_partition_stencil():
             assert real.plan == sds.plan
 
 
+def test_expand_boundary_roundtrip_every_format():
+    """expand_boundary inverts the boundary-row compaction exactly for every
+    interior format — the boundary block is format-agnostic by design."""
+    from repro.core.partition import expand_boundary
+
+    a = sp.random(60, 60, density=0.12, format="csr", random_state=11)
+    a.setdiag(3.0)
+    a = a.tocsr()
+    for fmt in ("ell", "hyb", "bcsr"):
+        mat = partition_csr(a, 3, fmt=fmt)
+        de_full, ce_full = expand_boundary(mat)
+        de = np.asarray(mat.data_ext)
+        ce = np.asarray(mat.col_ext)
+        rows = np.asarray(mat.bnd_rows)
+        for s in range(3):
+            nb = mat.n_bnd[s]
+            sel = rows[s, :nb]
+            np.testing.assert_array_equal(de_full[s, sel], de[s, :nb])
+            np.testing.assert_array_equal(ce_full[s, sel], ce[s, :nb])
+            other = np.ones(de_full.shape[1], bool)
+            other[sel] = False
+            assert (de_full[s, other] == 0).all()
+            assert (ce_full[s, other] == 0).all()
+
+
 def test_haloplan_bytes_accounting():
     plan = HaloPlan("ring", (-1, 1), (36, 36), 100, 8)
     assert plan.collective_bytes_per_shard(8) == 72 * 8
