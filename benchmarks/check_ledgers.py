@@ -14,11 +14,18 @@ checked-in baseline in ``benchmarks/baselines/``: numbers must agree within
 and structure must match exactly. Any drift beyond tolerance — more energy
 per iteration, more iterations to converge, lost regions — fails the CI
 ``energy-ledger`` job.
+
+Mismatches are reported as a per-field unified diff (field path, baseline
+value, emitted value, relative error), one ``@@`` hunk per drifted field —
+a tuning sweep or model change typically moves many fields at once, and
+diagnosing multi-field drift needs all of them side by side, not the first
+failure.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import math
 import os
@@ -30,49 +37,99 @@ from benchmarks.common import LEDGERS, REPO
 BASELINES = os.path.join(REPO, "benchmarks", "baselines")
 
 
-def _diff(base, new, tol: float, path: str, errors: list[str]):
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One field-level mismatch between a baseline and an emitted ledger."""
+
+    path: str  # dotted field path inside the gate, e.g. gate.rows[3].de_j
+    base: object | None  # baseline value (None = field is new)
+    got: object | None  # emitted value (None = field disappeared)
+    rel_err: float | None  # relative error for numeric drift, else None
+    note: str = ""  # classification, e.g. "missing from new ledger"
+
+    def lines(self) -> list[str]:
+        """Unified-diff hunk for this field."""
+        head = f"@@ {self.path}" + (f"  [{self.note}]" if self.note else "")
+        out = [head]
+        if self.base is not None:
+            out.append(f"- {self.base!r}")
+        if self.got is not None:
+            rel = (
+                f"    rel-err {100 * self.rel_err:.2f}%"
+                if self.rel_err is not None
+                else ""
+            )
+            out.append(f"+ {self.got!r}{rel}")
+        return out
+
+
+def _diff(base, new, tol: float, path: str, errors: list[Finding]):
     if isinstance(base, dict) and isinstance(new, dict):
         for k in base:
             if k not in new:
-                errors.append(f"{path}.{k}: missing from new ledger")
+                errors.append(
+                    Finding(f"{path}.{k}", base[k], None, None,
+                            "missing from new ledger")
+                )
             else:
                 _diff(base[k], new[k], tol, f"{path}.{k}", errors)
         for k in new:
             if k not in base:
-                errors.append(f"{path}.{k}: not in baseline (new field)")
+                errors.append(
+                    Finding(f"{path}.{k}", None, new[k], None,
+                            "not in baseline (new field)")
+                )
         return
     if isinstance(base, list) and isinstance(new, list):
         if len(base) != len(new):
-            errors.append(f"{path}: length {len(base)} -> {len(new)}")
+            errors.append(
+                Finding(path, len(base), len(new), None, "length changed")
+            )
             return
         for i, (b, n) in enumerate(zip(base, new)):
             _diff(b, n, tol, f"{path}[{i}]", errors)
         return
     if isinstance(base, bool) or isinstance(new, bool):
         if base != new:
-            errors.append(f"{path}: {base} -> {new}")
+            errors.append(Finding(path, base, new, None))
         return
     if isinstance(base, (int, float)) and isinstance(new, (int, float)):
         if math.isclose(base, new, rel_tol=tol, abs_tol=1e-9):
             return
         rel = abs(new - base) / max(abs(base), 1e-300)
-        errors.append(f"{path}: {base} -> {new} ({100 * rel:.1f}% drift)")
+        errors.append(Finding(path, base, new, rel, "numeric drift"))
         return
     if base != new:
-        errors.append(f"{path}: {base!r} -> {new!r}")
+        errors.append(Finding(path, base, new, None))
 
 
-def check_one(name: str, tol: float) -> list[str]:
+def check_one(name: str, tol: float) -> list[Finding]:
     with open(os.path.join(BASELINES, name)) as f:
         base = json.load(f)
     led_path = os.path.join(LEDGERS, name)
     if not os.path.exists(led_path):
-        return [f"{name}: ledger was not emitted (run benchmarks.run --smoke)"]
+        return [
+            Finding("gate", None, None, None,
+                    "ledger was not emitted (run benchmarks.run --smoke)")
+        ]
     with open(led_path) as f:
         new = json.load(f)
-    errors: list[str] = []
+    errors: list[Finding] = []
     _diff(base.get("gate", {}), new.get("gate", {}), tol, "gate", errors)
-    return [f"{name}: {e}" for e in errors]
+    return errors
+
+
+def render_diff(name: str, findings: list[Finding], limit: int = 40) -> str:
+    """Per-file unified diff: header + one hunk per drifted field."""
+    lines = [
+        f"--- {os.path.join('benchmarks', 'baselines', name)}",
+        f"+++ {os.path.join('runs', 'ledgers', name)}",
+    ]
+    for f in findings[:limit]:
+        lines.extend(f.lines())
+    if len(findings) > limit:
+        lines.append(f"... and {len(findings) - limit} more field(s)")
+    return "\n".join(lines)
 
 
 def _smoke_ledgers() -> list[str]:
@@ -115,25 +172,28 @@ def main(argv=None) -> int:
     if not names:
         print("no baseline ledgers checked in")
         return 1
-    failures: list[str] = []
+    per_file: dict[str, list[Finding]] = {}
+    n_failures = 0
     for name in names:
         errs = check_one(name, args.tol)
         status = "OK" if not errs else f"FAIL ({len(errs)} diffs)"
         print(f"[{status:>14s}] {name}")
-        failures.extend(errs)
+        if errs:
+            per_file[name] = errs
+            n_failures += len(errs)
     # every emitted smoke ledger must be gated — a benchmark added without a
     # baseline would otherwise silently run ungated forever
-    for fn in _smoke_ledgers():
-        if fn not in names:
-            failures.append(
-                f"{fn}: emitted but has no baseline — check one in with "
-                "`python -m benchmarks.check_ledgers --update`"
-            )
-    if failures:
-        print(f"\n{len(failures)} ledger regression(s) beyond "
-              f"{100 * args.tol:.0f}% tolerance:")
-        for e in failures[:50]:
-            print(f"  {e}")
+    ungated = [fn for fn in _smoke_ledgers() if fn not in names]
+    if per_file or ungated:
+        print(f"\n{n_failures} ledger regression(s) beyond "
+              f"{100 * args.tol:.0f}% tolerance, "
+              f"{len(ungated)} ungated ledger(s):")
+        for name, errs in per_file.items():
+            print()
+            print(render_diff(name, errs))
+        for fn in ungated:
+            print(f"\n{fn}: emitted but has no baseline — check one in with "
+                  "`python -m benchmarks.check_ledgers --update`")
         return 1
     print(f"\nall {len(names)} ledgers within {100 * args.tol:.0f}% of baseline")
     return 0

@@ -1,0 +1,155 @@
+"""Energy-aware autotuning: model-pruned, trial-measured configuration
+selection for the distributed sparse solver stack.
+
+PRs 1–4 built the knobs — kernel backend, ELL/HYB/BCSR interiors, the
+communication-hiding schedule, hs/fcg/pipecg — and the per-region executed
+energy ledger that prices them. This subsystem closes the loop from
+measurement to decision (docs/autotune.md):
+
+1. :func:`space.enumerate_space` spans {format × variant × overlap × BCSR
+   block × DVFS frequency};
+2. :func:`prune.prune` scores the whole space analytically (stored-bytes
+   format model + CG hot-path traffic + the frequency-extended power
+   model) and keeps the top-K Pareto candidates;
+3. :func:`trial.run_trials` runs each survivor for a few real iterations
+   under the region trace and scores the *executed* ledger extrapolated
+   to convergence;
+4. the winner is persisted in a fingerprint-keyed cache
+   (:class:`cache.TuneCache`, ``runs/autotune/cache.json``) so repeat
+   solves skip the search entirely.
+
+Entry point: :func:`autotune`. ``launch.solve --autotune`` wires it into
+the solver driver and reports the decision in the ledger's ``autotune``
+section (docs/ledger_schema.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.autotune.cache import DEFAULT_PATH, TuneCache, fingerprint, model_hash
+from repro.autotune.objective import OBJECTIVES, score, total_energy_j
+from repro.autotune.prune import Prediction, interior_stats, prune
+from repro.autotune.space import DEFAULT, Candidate, enumerate_space, sort_key
+from repro.autotune.trial import Trial, extrapolate_iters, run_trials
+from repro.energy.accounting import CostModel
+
+__all__ = [
+    "OBJECTIVES", "DEFAULT", "DEFAULT_PATH", "Candidate", "Prediction",
+    "Trial", "TuneCache", "TuneResult", "autotune", "enumerate_space",
+    "extrapolate_iters", "fingerprint", "interior_stats", "model_hash",
+    "prune", "run_trials", "score", "sort_key", "total_energy_j",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    """Outcome of one :func:`autotune` call (cache hit or full search)."""
+
+    chosen: Candidate
+    objective: str
+    fingerprint: dict
+    cached: bool  # True = served from the tuning cache, nothing ran
+    candidates_total: int  # enumerated space size (0 on a cache hit)
+    candidates_pruned: int  # dropped by the analytic model stage
+    candidates_trialed: int  # executed trial solves (0 on a cache hit)
+    trials: tuple  # Trial records, best score first
+
+    def ledger_section(self) -> dict:
+        """The ledger's ``autotune`` section (docs/ledger_schema.md)."""
+        return dict(
+            objective=self.objective,
+            fingerprint=self.fingerprint,
+            cached=self.cached,
+            candidates_total=self.candidates_total,
+            candidates_pruned=self.candidates_pruned,
+            candidates_trialed=self.candidates_trialed,
+            chosen=self.chosen.to_dict(),
+            chosen_label=self.chosen.label,
+            trials=[t.to_ledger() for t in self.trials],
+        )
+
+
+def autotune(
+    a_csr,
+    mesh,
+    n_shards: int,
+    *,
+    objective: str = "energy",
+    budget: int = 6,
+    cost: CostModel | None = None,
+    cache_path: str = DEFAULT_PATH,
+    tol: float = 1e-8,
+    trial_iters: int = 8,
+    maxiter_cap: int = 10000,
+    force: bool = False,
+    mats: dict | None = None,
+) -> TuneResult:
+    """Select the solver configuration minimizing ``objective``.
+
+    Args:
+        a_csr: host scipy CSR system matrix (SPD).
+        mesh: 1-D ``shards`` mesh the trials and the final solve run on.
+        n_shards: shard count (part of the fingerprint — a different
+            partition is a different search).
+        objective: ``"energy"`` | ``"edp"`` | ``"time"``.
+        budget: max candidates the trial stage may execute (top-K of the
+            model stage's Pareto front; the default config always rides
+            along, so at most ``budget + 1`` are scored).
+        cost: cost model to price with (hashed into the cache key).
+        cache_path: tuning-cache location (``runs/autotune/cache.json``).
+        tol: solve tolerance the iteration extrapolation targets.
+        trial_iters: real iterations each trial executes.
+        maxiter_cap: extrapolation cap for stagnating trials.
+        force: re-tune even on a cache hit (the fresh result overwrites).
+        mats: optional ``(fmt, block) -> sharded DistMat`` cache shared
+            with the caller, so the final solve reuses the winner's
+            partition.
+
+    Returns:
+        :class:`TuneResult`; ``result.chosen`` is the winning
+        :class:`Candidate`. On a cache hit nothing is partitioned or run
+        (``cached=True``, ``candidates_trialed == 0``).
+    """
+    if objective not in OBJECTIVES:
+        raise ValueError(f"objective must be one of {OBJECTIVES}: {objective}")
+    cost = cost or CostModel()
+    fp = fingerprint(a_csr, n_shards, objective)
+    cache = TuneCache(cache_path)
+    if not force:
+        hit = cache.get(fp, cost)
+        if hit is not None:
+            return TuneResult(
+                chosen=hit, objective=objective, fingerprint=fp, cached=True,
+                candidates_total=0, candidates_pruned=0,
+                candidates_trialed=0, trials=(),
+            )
+
+    from repro.core.partition import partition_csr
+    from repro.core.spmv import shard_matrix
+
+    mats = mats if mats is not None else {}
+    ell_key = ("ell", DEFAULT.block)
+    if ell_key not in mats:
+        mats[ell_key] = shard_matrix(mesh, partition_csr(a_csr, n_shards))
+    mat_ell = mats[ell_key]
+
+    candidates = enumerate_space(cost.power.chip)
+    survivors, _ = prune(
+        candidates, a_csr, mat_ell, cost=cost, objective=objective,
+        keep=budget,
+    )
+    trials = run_trials(
+        a_csr, mesh, n_shards, survivors, cost=cost, objective=objective,
+        tol=tol, trial_iters=trial_iters, maxiter_cap=maxiter_cap, mats=mats,
+    )
+    trials = sorted(trials, key=lambda t: (t.score, sort_key(t.candidate)))
+    chosen = trials[0].candidate
+    cache.put(fp, cost, chosen, extra=dict(objective=objective))
+    return TuneResult(
+        chosen=chosen, objective=objective, fingerprint=fp, cached=False,
+        candidates_total=len(candidates),
+        candidates_pruned=len(candidates) - len(survivors),
+        candidates_trialed=sum(1 for t in trials if t.executed),
+        trials=tuple(trials),
+    )

@@ -1,0 +1,39 @@
+"""Objectives the autotuner can minimize.
+
+All three are computed from the same PowerMonitor ``totals`` dict (the
+executed-energy ledger's ``totals`` section, or the pruning model's
+per-iteration monitor — the two stages score through one function so model
+and measurement can never rank on different quantities):
+
+* ``energy`` — total Joules to solution, ``te_gpu + te_cpu``. *Total*
+  (static + dynamic), not the ledger's dynamic-only ``de_total`` headline:
+  race-to-idle only exists as a trade-off when the idle power a slower run
+  keeps burning is charged to it.
+* ``time``   — modeled runtime (seconds).
+* ``edp``    — energy-delay product, ``energy * time``: the standard
+  compromise metric when neither axis should be sacrificed outright.
+
+Lower is better for all objectives.
+"""
+
+from __future__ import annotations
+
+OBJECTIVES = ("energy", "edp", "time")
+
+
+def total_energy_j(totals: dict) -> float:
+    """Total (static + dynamic) chip + host energy of a ledger/monitor."""
+    return float(totals["te_gpu"]) + float(totals["te_cpu"])
+
+
+def score(objective: str, totals: dict) -> float:
+    """Scalar score (lower is better) of one ``totals`` dict."""
+    if objective == "energy":
+        return total_energy_j(totals)
+    if objective == "time":
+        return float(totals["runtime"])
+    if objective == "edp":
+        return total_energy_j(totals) * float(totals["runtime"])
+    raise ValueError(
+        f"unknown objective {objective!r} (one of {OBJECTIVES})"
+    )

@@ -1,0 +1,315 @@
+"""Stage 1 — analytic model pruning of the tuning space.
+
+Every candidate is priced per CG iteration by composing the models the
+earlier PRs calibrated, without executing anything:
+
+* **matrix traffic** — ``roofline/format_model`` stored-bytes per interior
+  format (``ell_cost``/``hyb_cost``/``bcsr_cost``; ``auto`` resolved via
+  ``choose_format``), swapped into the ELL-partitioned
+  :func:`energy/accounting.spmv_counts` base (the halo plan and boundary
+  block are format-agnostic, so only the interior stored-bytes term
+  moves);
+* **vector-op traffic** — ``roofline/analysis.CG_HOTPATH`` fused-stream
+  counts (``cg_vector_traffic`` / ``cg_vector_flops``) plus the variant's
+  all-reduce pattern (``CG_COMM`` — pipecg's hidden reduction is credited
+  only when the overlap schedule is on);
+* **time + power** — the :class:`CostModel` engine times and calibrated
+  chip/host power at the candidate's DVFS point
+  (``CostModel.at_freq`` → ``ChipSpec.at_freq``: compute and dynamic power
+  scale with frequency, HBM/ICI stay flat — this is where race-to-idle
+  vs. slow-and-efficient falls out analytically).
+
+The survivors are the Pareto front over (time, energy) ranked by the
+objective, truncated to the trial budget (counted in *executions* — see
+:func:`prune`), with :data:`space.DEFAULT` always retained — so stage 2's
+argmin can never pick something worse than the out-of-the-box
+configuration.
+
+The model is a *ranking* device: flops are taken from the ELL layout for
+every format (padding-flop differences are second-order on memory-bound
+kernels) and the per-iteration segments mirror — but simplify — the trace
+regions. Stage 2 (``trial.py``) re-scores every survivor on executed
+counts, so pruning-model bias cannot pick the winner on its own.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.autotune.objective import score as objective_score
+from repro.autotune.space import DEFAULT, BCSR_BLOCKS, Candidate, sort_key
+from repro.energy.accounting import CostModel, OpCounts, spmv_counts
+from repro.roofline.analysis import (
+    CG_COMM,
+    cg_reduce_scalars,
+    cg_vector_flops,
+    cg_vector_traffic,
+)
+from repro.roofline.format_model import (
+    bcsr_cost,
+    choose_format,
+    ell_cost,
+    hyb_cost,
+)
+
+
+# ---------------------------------------------------------------------------
+# Host-side interior statistics (cheap numpy sweeps over the CSR)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class InteriorStats:
+    """Per-shard interior row/block statistics of one partitioned problem."""
+
+    n_rows: int  # padded rows per shard (R)
+    shard_row_lens: tuple  # per shard: interior nnz of each local row
+    shard_blocks: dict  # block side -> per-shard (n_blocks, max bpr)
+
+
+def interior_stats(a_csr, row_starts, blocks=BCSR_BLOCKS) -> InteriorStats:
+    """Interior row-length + BCSR block statistics per shard.
+
+    ``row_starts`` is the contiguous block-row partition actually used by
+    the trial stage (``DistMat.row_starts``), so the stats priced here are
+    the stats packed there.
+    """
+    from repro.core.partition import block_stats_from_arrays
+
+    a = a_csr.tocsr()
+    indptr, indices = a.indptr, a.indices.astype(np.int64)
+    n_shards = len(row_starts) - 1
+    R = max(
+        row_starts[s + 1] - row_starts[s] for s in range(n_shards)
+    )
+    lens, blk = [], {b: [] for b in blocks}
+    for s in range(n_shards):
+        lo, hi = row_starts[s], row_starts[s + 1]
+        cols = indices[indptr[lo]:indptr[hi]]
+        rows = np.repeat(
+            np.arange(lo, hi, dtype=np.int64), np.diff(indptr[lo:hi + 1])
+        )
+        mask = (cols >= lo) & (cols < hi)
+        r_loc, c_loc = rows[mask] - lo, cols[mask] - lo
+        lens.append(np.bincount(r_loc, minlength=hi - lo).astype(np.int64))
+        for b in blocks:
+            # same tile-counting code path the BCSR packer uses, so the
+            # priced layout is the packed layout
+            blk[b].append(block_stats_from_arrays(r_loc, c_loc, R, b, b))
+    return InteriorStats(
+        n_rows=int(R),
+        shard_row_lens=tuple(lens),
+        shard_blocks={b: tuple(v) for b, v in blk.items()},
+    )
+
+
+def format_stored_bytes(stats: InteriorStats) -> dict:
+    """Modeled interior stored bytes per format key (``ell``, ``hyb``,
+    ``bcsr<b>``) — the quantity that moves a candidate's SpMV traffic."""
+    out = {
+        "ell": ell_cost(stats.shard_row_lens, stats.n_rows).stored_bytes,
+        "hyb": hyb_cost(stats.shard_row_lens, stats.n_rows).stored_bytes,
+    }
+    for b, sb in stats.shard_blocks.items():
+        out[f"bcsr{b}"] = bcsr_cost(
+            sb, stats.n_rows, br=b, bc=b
+        ).stored_bytes
+    return out
+
+
+def resolve_auto(stats: InteriorStats, block: int = 4) -> tuple[str, int]:
+    """Resolve ``fmt="auto"`` exactly like ``partition_csr`` does — via the
+    stored-bytes/traffic model — returning ``(fmt, block)``."""
+    fmt, _ = choose_format(
+        stats.shard_row_lens, n_rows=stats.n_rows,
+        shard_blocks=stats.shard_blocks.get(block), br=block, bc=block,
+    )
+    return fmt, block
+
+
+# ---------------------------------------------------------------------------
+# Per-candidate per-iteration prediction
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Prediction:
+    """Stage-1 output for one candidate: modeled per-iteration cost."""
+
+    candidate: Candidate
+    time_s: float  # modeled seconds per iteration
+    energy_j: float  # modeled total (static+dynamic) J per iteration
+    score: float  # objective score per iteration (lower is better)
+
+
+def phase_counts(
+    mat_ell, candidate: Candidate, stored: dict
+) -> tuple[OpCounts, OpCounts]:
+    """Per-iteration, per-shard (SpMV-phase, vector-phase) counts.
+
+    The SpMV phase starts from the executed-counts formula on the ELL
+    partition and swaps the interior stored-bytes term for the candidate
+    format's (the boundary block + halo plan are format-agnostic); the
+    vector phase carries the variant's CG_HOTPATH streams and all-reduce
+    pattern.
+    """
+    S = max(mat_ell.n_shards, 1)
+    fmt_key = (
+        f"bcsr{candidate.block}" if candidate.fmt == "bcsr" else candidate.fmt
+    )
+    sp = spmv_counts(mat_ell, overlap=candidate.overlap)
+    delta = (stored[fmt_key] - stored["ell"]) / S
+    sp = OpCounts(sp.flops, sp.hbm_bytes + delta, sp.ici_bytes, sp.n_collectives)
+    n = mat_ell.n_own_pad
+    v = candidate.variant
+    vec = OpCounts(
+        flops=cg_vector_flops(n, variant=v),
+        hbm_bytes=cg_vector_traffic(n, variant=v),
+        ici_bytes=8.0 * cg_reduce_scalars(v),
+        n_collectives=float(CG_COMM[v]["allreduces"]),
+    )
+    return sp, vec
+
+
+def iteration_counts(mat_ell, candidate: Candidate, stored: dict) -> OpCounts:
+    """Total per-iteration, per-shard :class:`OpCounts` of one candidate."""
+    sp, vec = phase_counts(mat_ell, candidate, stored)
+    return sp + vec
+
+
+def predict(
+    mat_ell, candidate: Candidate, stored: dict, *, cost: CostModel,
+    objective: str,
+) -> Prediction:
+    """Model one candidate's per-iteration (time, energy, score).
+
+    The iteration is composed as SpMV-phase + vector-phase, mirroring the
+    trace regions: the halo collective is absorbed into the SpMV max() when
+    the overlap schedule is on, and the variant's all-reduce latency is
+    hidden behind the SpMV only for the reductions ``CG_COMM`` marks hidden
+    (pipecg) — hs/fcg block on theirs.
+    """
+    S = max(mat_ell.n_shards, 1)
+    fcost = cost.at_freq(candidate.freq)
+    sp, vec = phase_counts(mat_ell, candidate, stored)
+    v = candidate.variant
+    t_sp, _ = fcost.times(sp, S, candidate.overlap)
+    _, (tc2, tm2, tl2) = fcost.times(vec, S, True)
+    hidden = CG_COMM[v]["hidden"] / max(CG_COMM[v]["allreduces"], 1)
+    tl_hidden = min(tl2 * hidden, t_sp) if candidate.overlap else 0.0
+    t = t_sp + max(tc2, tm2) + (tl2 - tl_hidden)
+
+    c = sp + vec
+    power = fcost.power
+    p_chip = power.chip_power(c.flops / t, c.hbm_bytes / t, c.ici_bytes / t)
+    # Host priced at idle for ranking: the monitor's active-host increment
+    # scales with the comm *fraction*, so at ranking time it would reward
+    # extra HBM traffic (more bytes -> smaller fraction -> cheaper host).
+    # The measured stage prices trials through the full monitor model.
+    p_host = power.host_power(0.0)
+    n_hosts = max(S // 4, 1)
+    totals = dict(
+        runtime=t,
+        te_gpu=p_chip * t * S,
+        te_cpu=p_host * t * n_hosts,
+    )
+    return Prediction(
+        candidate=candidate,
+        time_s=t,
+        energy_j=totals["te_gpu"] + totals["te_cpu"],
+        score=objective_score(objective, totals),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pareto filter + top-K
+# ---------------------------------------------------------------------------
+
+
+def pareto_front(preds: list[Prediction]) -> list[Prediction]:
+    """Predictions not *strictly* dominated on (time, energy).
+
+    Strict domination (worse on both axes) — not the weak kind: on
+    memory-bound problems downclocking is modeled time-*free*, so a weak
+    filter would kill every nominal-frequency candidate on an exact time
+    tie. Model ties are precisely what the model must not resolve; the
+    tied candidates ride to stage 2, where the measured argmin's
+    tie-break (``space.sort_key``) prefers nominal frequency — i.e. a
+    ``time``-objective tuner only downclocks when measurement, not the
+    model, says it is free.
+    """
+    out = []
+    for p in preds:
+        dominated = any(
+            q.time_s < p.time_s and q.energy_j < p.energy_j for q in preds
+        )
+        if not dominated:
+            out.append(p)
+    return out
+
+
+def prune(
+    candidates: list[Candidate],
+    a_csr,
+    mat_ell,
+    *,
+    cost: CostModel,
+    objective: str,
+    keep: int,
+) -> tuple[list[Prediction], InteriorStats]:
+    """Stage 1: score ``candidates`` analytically; keep the Pareto front's
+    top-``keep`` *executions* (objective-ranked) plus :data:`space.DEFAULT`,
+    each with its full frequency column (see the exec-key comment below).
+
+    ``mat_ell`` is the ELL partition of ``a_csr`` (built once by the
+    caller; trials reuse it) — it supplies the halo plan and padded shard
+    shape the counts need. ``auto`` candidates are resolved to their
+    concrete format here and deduplicated against the explicit ones.
+    """
+    stats = interior_stats(
+        a_csr, mat_ell.row_starts,
+        blocks=sorted({c.block for c in candidates if c.fmt == "bcsr"})
+        or list(BCSR_BLOCKS),
+    )
+    stored = format_stored_bytes(stats)
+
+    resolved: list[Candidate] = []
+    seen: set[tuple] = set()
+    for c in sorted(candidates, key=sort_key):
+        if c.fmt == "auto":
+            fmt, block = resolve_auto(stats, c.block)
+            c = dataclasses.replace(c, fmt=fmt, block=block)
+        key = (c.exec_key, c.freq)
+        if key in seen:
+            continue
+        seen.add(key)
+        resolved.append(c)
+
+    preds = [
+        predict(mat_ell, c, stored, cost=cost, objective=objective)
+        for c in resolved
+    ]
+    front = sorted(
+        pareto_front(preds), key=lambda p: (p.score, sort_key(p.candidate))
+    )
+    # The budget counts *executions* (trial solves). A candidate differing
+    # from a survivor only in frequency shares its execution
+    # (Candidate.exec_key) and is merely re-priced, so every chosen
+    # execution brings its whole DVFS column along for free — the measured
+    # stage then owns the race-to-idle vs. downclock call even when the
+    # model's ranking collapsed (tiny latency-dominated problems).
+    exec_keys: list[tuple] = []
+    for p in front:
+        if p.candidate.exec_key not in exec_keys:
+            exec_keys.append(p.candidate.exec_key)
+        if len(exec_keys) >= max(keep, 1):
+            break
+    if DEFAULT.exec_key not in exec_keys:
+        exec_keys.append(DEFAULT.exec_key)
+    survivors = sorted(
+        (p for p in preds if p.candidate.exec_key in exec_keys),
+        key=lambda p: (p.score, sort_key(p.candidate)),
+    )
+    return survivors, stats

@@ -1,0 +1,121 @@
+"""Search space of the energy-aware autotuner.
+
+One :class:`Candidate` is a full operating point of the solver stack built
+by the earlier layers — every axis maps onto an existing knob:
+
+* ``fmt``     — interior storage format (``core/partition.py`` DistMat:
+  ``ell`` / ``hyb`` / ``bcsr``, or ``auto`` = resolve via the stored-bytes
+  cost model ``roofline/format_model.choose_format`` at prune time);
+* ``block``   — BCSR tile side (``br == bc``; ignored by the other formats);
+* ``variant`` — CG variant (``core/cg.py``: ``hs`` / ``fcg`` / ``pipecg``;
+  ``sstep`` is excluded — its blocked Gram body rejects the hot-path kernel
+  plumbing the trial stage relies on);
+* ``overlap`` — the communication-hiding schedule (``core/spmv.py``);
+* ``freq``    — relative DVFS point (``roofline/hw.ChipSpec.at_freq``:
+  compute + dynamic power scale down, HBM/ICI held flat).
+
+The space is deliberately small (~100 points): stage 1 (``prune.py``)
+scores all of it analytically, stage 2 (``trial.py``) measures only the
+top-K survivors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+from repro.roofline.hw import DEFAULT_CHIP, ChipSpec
+
+FORMATS = ("ell", "hyb", "bcsr", "auto")
+VARIANTS = ("hs", "fcg", "pipecg")
+BCSR_BLOCKS = (2, 4, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One operating point of the tuning space."""
+
+    fmt: str  # "ell" | "hyb" | "bcsr" | "auto" (resolved at prune time)
+    variant: str  # "hs" | "fcg" | "pipecg"
+    overlap: bool
+    block: int = 4  # BCSR tile side; meaningful only when fmt == "bcsr"
+    freq: float = 1.0  # relative DVFS point (ChipSpec.at_freq)
+
+    @property
+    def exec_key(self) -> tuple:
+        """Key of the *execution* this candidate requires. Frequency is not
+        part of it — downclocking only re-prices the traced counts, so
+        candidates differing solely in ``freq`` share one measured trial."""
+        return (
+            self.fmt,
+            self.block if self.fmt == "bcsr" else 0,
+            self.variant,
+            self.overlap,
+        )
+
+    @property
+    def label(self) -> str:
+        """Stable human/ledger label, e.g. ``hyb/pipecg/ov/f0.6``."""
+        fmt = f"bcsr{self.block}" if self.fmt == "bcsr" else self.fmt
+        ov = "ov" if self.overlap else "ser"
+        return f"{fmt}/{self.variant}/{ov}/f{self.freq:g}"
+
+    def to_dict(self) -> dict:
+        return dict(
+            fmt=self.fmt, variant=self.variant, overlap=self.overlap,
+            block=self.block, freq=self.freq,
+        )
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Candidate":
+        return cls(
+            fmt=str(d["fmt"]), variant=str(d["variant"]),
+            overlap=bool(d["overlap"]), block=int(d["block"]),
+            freq=float(d["freq"]),
+        )
+
+
+#: The repo's out-of-the-box configuration (``launch.solve`` defaults):
+#: ELL interior, HS-CG, communication hiding on, nominal frequency. The
+#: pruner always keeps it, so the chosen config can never score worse.
+DEFAULT = Candidate(fmt="ell", variant="hs", overlap=True, block=4, freq=1.0)
+
+
+def sort_key(c: Candidate) -> tuple:
+    """Deterministic preference order for score ties: nominal frequency
+    first (never downclock without a measured win), then the simplest
+    format/variant/schedule."""
+    return (
+        -c.freq,
+        FORMATS.index(c.fmt),
+        c.block,
+        VARIANTS.index(c.variant),
+        not c.overlap,
+    )
+
+
+def enumerate_space(
+    chip: ChipSpec = DEFAULT_CHIP,
+    *,
+    formats: Iterable[str] = FORMATS,
+    variants: Iterable[str] = VARIANTS,
+    overlaps: Iterable[bool] = (True, False),
+    blocks: Iterable[int] = BCSR_BLOCKS,
+    freqs: Iterable[float] | None = None,
+) -> list[Candidate]:
+    """All candidates, deterministically ordered (``sort_key``).
+
+    ``freqs`` defaults to the chip's DVFS grid (``ChipSpec.freq_points``).
+    ``bcsr`` fans out over ``blocks``; the other formats carry the default
+    tile side (it is dead weight for them).
+    """
+    freqs = tuple(freqs) if freqs is not None else chip.freq_points
+    out = []
+    for fmt in formats:
+        fmt_blocks = tuple(blocks) if fmt == "bcsr" else (DEFAULT.block,)
+        for block in fmt_blocks:
+            for variant in variants:
+                for overlap in overlaps:
+                    for freq in freqs:
+                        out.append(Candidate(fmt, variant, overlap, block, freq))
+    return sorted(out, key=sort_key)

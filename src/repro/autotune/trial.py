@@ -1,0 +1,164 @@
+"""Stage 2 — measured trials of the pruning survivors.
+
+Each surviving candidate runs for a few *real* iterations through the
+existing machinery: its format is partitioned (``core/partition``), its
+solver built (``core/cg.make_solver``) and executed under the region trace
+(``energy/trace.capture``), so the trial's operation counts are the
+executed counts of the lowered program — not the pruning model's. The
+trial's measured convergence rate extrapolates the iteration count to the
+requested tolerance, and ``trace.ledger_from_trace`` integrates the counts
+at that iteration count through the candidate's DVFS-point cost model. The
+decision therefore rests on measurements; the analytic model only chose
+*what* to measure.
+
+Candidates that differ only in frequency share one execution
+(``Candidate.exec_key``): downclocking changes how traced counts are
+priced, never what executes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.autotune.objective import score as objective_score
+from repro.autotune.objective import total_energy_j
+from repro.autotune.prune import Prediction
+from repro.autotune.space import Candidate
+from repro.energy import trace
+from repro.energy.accounting import CostModel
+
+
+@dataclasses.dataclass(frozen=True)
+class Trial:
+    """One scored survivor: model prediction next to measurement."""
+
+    candidate: Candidate
+    executed: bool  # False = priced off another candidate's execution
+    iters_trial: int  # iterations the trial solve actually ran
+    relres_trial: float  # relative residual after the trial iterations
+    iters_est: int  # iterations extrapolated to convergence
+    predicted_time_s: float  # stage-1 model, extrapolated to iters_est
+    predicted_energy_j: float
+    measured_time_s: float  # executed-counts ledger at iters_est
+    measured_energy_j: float
+    score: float  # objective score of the measured ledger
+
+    def to_ledger(self) -> dict:
+        d = self.candidate.to_dict()
+        d.update(
+            label=self.candidate.label,
+            executed=self.executed,
+            iters_trial=self.iters_trial,
+            iters_est=self.iters_est,
+            predicted_time_s=self.predicted_time_s,
+            predicted_energy_j=self.predicted_energy_j,
+            measured_time_s=self.measured_time_s,
+            measured_energy_j=self.measured_energy_j,
+            score=self.score,
+        )
+        return d
+
+
+def extrapolate_iters(
+    iters: int, relres: float, tol: float, cap: int = 100000
+) -> int:
+    """Iterations to reach ``tol`` at the trial's measured reduction rate.
+
+    The trial solve ran ``iters`` iterations and ended at relative residual
+    ``relres``; assuming the per-iteration reduction factor
+    ``rho = relres**(1/iters)`` persists, convergence needs
+    ``log(tol)/log(rho)`` iterations. Already-converged (or zero-iteration)
+    trials return their own count; a stagnating trial (rho ~ 1) returns
+    ``cap``.
+    """
+    iters = int(iters)
+    if iters <= 0:
+        return 1
+    if relres <= tol:
+        return iters
+    rho = relres ** (1.0 / iters)
+    if rho >= 1.0 - 1e-12:
+        return int(cap)
+    need = math.ceil(math.log(tol) / math.log(rho))
+    return int(min(max(need, iters), cap))
+
+
+def run_trials(
+    a_csr,
+    mesh,
+    n_shards: int,
+    survivors: list[Prediction],
+    *,
+    cost: CostModel,
+    objective: str,
+    tol: float,
+    trial_iters: int = 8,
+    maxiter_cap: int = 10000,
+    mats: dict | None = None,
+) -> list[Trial]:
+    """Execute (or share) one trial per survivor and score it.
+
+    ``mats`` optionally seeds/collects the ``(fmt, block) -> sharded
+    DistMat`` partition cache, letting the caller reuse the winner's
+    partition for the final solve.
+    """
+    import jax
+
+    from repro.core.cg import make_solver
+    from repro.core.partition import pad_vector, partition_csr
+    from repro.core.spmv import shard_matrix, shard_vector
+
+    mats = mats if mats is not None else {}
+    executions: dict[tuple, tuple] = {}  # exec_key -> (trace, iters, relres)
+    trials: list[Trial] = []
+    for pred in survivors:
+        c = pred.candidate
+        first = c.exec_key not in executions
+        if first:
+            fmt_key = (c.fmt, c.block)
+            if fmt_key not in mats:
+                mats[fmt_key] = shard_matrix(
+                    mesh,
+                    partition_csr(
+                        a_csr, n_shards, fmt=c.fmt, block=(c.block, c.block)
+                    ),
+                )
+            mat = mats[fmt_key]
+            solver = make_solver(
+                mesh, mat, variant=c.variant, overlap=c.overlap,
+                tol=tol, maxiter=trial_iters,
+            )
+            b = np.ones(a_csr.shape[0])
+            bp = shard_vector(mesh, pad_vector(b, mat))
+            x0 = shard_vector(mesh, np.zeros_like(pad_vector(b, mat)))
+            with trace.capture() as tr:
+                res = solver(bp, x0)
+            jax.block_until_ready(res.x)
+            executions[c.exec_key] = (
+                tr, int(res.iters), float(res.rel_residual)
+            )
+        tr, iters, relres = executions[c.exec_key]
+        iters_est = extrapolate_iters(iters, relres, tol, cap=maxiter_cap)
+        led = trace.ledger_from_trace(
+            tr, iters=iters_est, n_shards=n_shards,
+            cost=cost.at_freq(c.freq), overlap=c.overlap,
+        )
+        tot = led["totals"]
+        trials.append(
+            Trial(
+                candidate=c,
+                executed=first,
+                iters_trial=iters,
+                relres_trial=relres,
+                iters_est=iters_est,
+                predicted_time_s=pred.time_s * iters_est,
+                predicted_energy_j=pred.energy_j * iters_est,
+                measured_time_s=float(tot["runtime"]),
+                measured_energy_j=total_energy_j(tot),
+                score=objective_score(objective, tot),
+            )
+        )
+    return trials

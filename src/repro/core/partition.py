@@ -573,9 +573,29 @@ def pack_interior(
     raise ValueError(f"unknown interior format {fmt!r}; want {FORMATS} or 'auto'")
 
 
+def block_stats_from_arrays(
+    r_loc: np.ndarray, c_loc: np.ndarray, R: int, br: int, bc: int
+) -> tuple[int, int]:
+    """(n_blocks, max_blocks_per_block_row) of one shard's interior, from
+    flat local (row, col) index arrays.
+
+    Single source of the BCSR block-counting formula — the packer/auto
+    selector (via :func:`_shard_block_stats`) and the autotune pricing
+    model (``autotune/prune.interior_stats``) must count the same tiles.
+    """
+    n_bcols = -(-R // bc)
+    if not len(c_loc):
+        return 0, 0
+    keys = np.unique(
+        (np.asarray(r_loc, np.int64) // br) * n_bcols
+        + np.asarray(c_loc, np.int64) // bc
+    )
+    counts = np.bincount(keys // n_bcols)
+    return len(keys), int(counts.max())
+
+
 def _shard_block_stats(rows, R: int, br: int, bc: int) -> tuple[int, int]:
     """(n_blocks, max_blocks_per_block_row) of one shard's interior."""
-    n_bcols = -(-R // bc)
     rids = np.repeat(
         np.arange(len(rows), dtype=np.int64), [len(c) for c, _ in rows]
     )
@@ -584,11 +604,7 @@ def _shard_block_stats(rows, R: int, br: int, bc: int) -> tuple[int, int]:
         if rows
         else np.zeros(0, np.int64)
     )
-    if not len(cols):
-        return 0, 0
-    keys = np.unique((rids // br) * n_bcols + cols // bc)
-    counts = np.bincount(keys // n_bcols)
-    return len(keys), int(counts.max())
+    return block_stats_from_arrays(rids, cols, R, br, bc)
 
 
 def partition_csr(

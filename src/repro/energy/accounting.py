@@ -183,6 +183,14 @@ class CostModel:
     # sparse kernels rarely hit peak BW either; same knob applies)
     bw_efficiency: float = 0.80
 
+    def at_freq(self, freq: float) -> "CostModel":
+        """The same cost model on the chip downclocked to ``freq``
+        (relative; :meth:`ChipSpec.at_freq` — compute and dynamic power
+        scale down, HBM/ICI bandwidth and the latency term stay flat)."""
+        if freq == 1.0:
+            return self
+        return dataclasses.replace(self, power=self.power.at_freq(freq))
+
     def times(self, c: OpCounts, n_shards: int, overlap: bool):
         chip = self.power.chip
         t_comp = c.flops / (chip.peak_flops_f32 * self.flops_efficiency)

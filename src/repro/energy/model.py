@@ -21,6 +21,16 @@ Solving those three constraints for (e_flop, e_hbm, e_ici):
 
 The host (CPU) model is LIKWID-socket-scoped: P_idle plus an active
 increment while the host drives collectives/launch work.
+
+DVFS axis (used by the autotune subsystem): :meth:`PowerModel.at_freq`
+re-derives the same three calibration constraints on the downclocked chip
+(``ChipSpec.at_freq``: peak FLOP/s and the dynamic envelope scale with
+``f`` and ``~f*V^2``; HBM/ICI bandwidth held flat). The calibration
+invariants are therefore preserved at every grid point — ``e_ici ==
+2 * e_hbm``, instantaneous power clamped to the (scaled) ``p_peak_w`` —
+and energy-per-byte falls monotonically as the frequency drops, which is
+exactly where the race-to-idle vs. slow-and-efficient trade-off comes
+from (see docs/autotune.md).
 """
 
 from __future__ import annotations
@@ -36,6 +46,13 @@ class PowerModel:
     host: HostSpec = DEFAULT_HOST
     hbm_fraction: float = 0.65  # share of dynamic envelope at HBM saturation
     ici_hbm_ratio: float = 2.0  # ICI J/B relative to HBM J/B
+
+    def at_freq(self, freq: float) -> "PowerModel":
+        """The same calibrated model on the chip downclocked to ``freq``
+        (relative; see :meth:`ChipSpec.at_freq`). Identity at 1.0."""
+        if freq == 1.0:
+            return self
+        return dataclasses.replace(self, chip=self.chip.at_freq(freq))
 
     @property
     def dyn_envelope(self) -> float:

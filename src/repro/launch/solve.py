@@ -17,6 +17,12 @@ integrates those counts — scaled by the executed iteration count — into the
 per-region energy ledger printed below the summary line and written as JSON
 via ``--ledger``; ``totals.comm_exposed_s`` vs ``totals.comm_hidden_s``
 quantify the hiding (schema: docs/ledger_schema.md).
+
+``--autotune`` delegates the configuration choice (interior format, CG
+variant, overlap schedule, BCSR block, DVFS frequency) to the two-stage
+autotuner (``repro.autotune``, docs/autotune.md), minimizing
+``--objective``; the decision lands in the ledger's ``autotune`` section
+and repeat solves are served from ``runs/autotune/cache.json``.
 """
 
 from __future__ import annotations
@@ -47,6 +53,21 @@ def parse_args(argv=None):
                          "docs/formats.md)")
     ap.add_argument("--block", type=int, default=4,
                     help="BCSR tile side (br = bc)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="pick (format x variant x overlap x block x "
+                         "frequency) via the two-stage autotuner "
+                         "(docs/autotune.md) instead of the flags above; "
+                         "repeat solves are served from the tuning cache")
+    ap.add_argument("--objective", default="energy",
+                    choices=["energy", "edp", "time"],
+                    help="what --autotune minimizes (docs/autotune.md)")
+    ap.add_argument("--tune-budget", type=int, default=6,
+                    help="max executions the trial stage may budget for "
+                         "(the default config always rides along, so up to "
+                         "budget+1 trial solves run; candidates differing "
+                         "only in frequency share one execution)")
+    ap.add_argument("--tune-cache", default=None,
+                    help="tuning-cache path (default runs/autotune/cache.json)")
     ap.add_argument("--amg", action="store_true", help="PCG with AMG")
     ap.add_argument("--amgx-analog", action="store_true",
                     help="PCG with the plain-aggregation (AmgX-analog) AMG")
@@ -118,11 +139,40 @@ def main(argv=None):
     print(f"problem={name} n={n} nnz={a.nnz} shards={n_shards}")
 
     cost = CostModel()
+    tune = None
+    tune_mats: dict = {}
+    if args.autotune:
+        if args.op != "cg" or args.amg or args.amgx_analog:
+            raise SystemExit(
+                "--autotune tunes the unpreconditioned CG path "
+                "(--op cg without --amg/--amgx-analog)"
+            )
+        from repro.autotune import DEFAULT_PATH
+        from repro.autotune import autotune as run_autotune
+
+        tune = run_autotune(
+            a, mesh, n_shards, objective=args.objective,
+            budget=args.tune_budget,
+            cache_path=args.tune_cache or DEFAULT_PATH, tol=args.tol,
+            mats=tune_mats,
+        )
+        ch = tune.chosen
+        args.fmt, args.block = ch.fmt, ch.block
+        args.variant, args.overlap = ch.variant, ch.overlap
+        cost = cost.at_freq(ch.freq)
+        print(
+            f"autotune: objective={tune.objective} chosen={ch.label} "
+            f"cached={tune.cached} trialed={tune.candidates_trialed} "
+            f"(space {tune.candidates_total})"
+        )
+
     payload = dict(
         schema=1, problem=name, n=int(n), nnz=int(a.nnz),
         shards=int(n_shards), op=args.op, overlap=bool(args.overlap),
         format=args.fmt, solvers={},
     )
+    if tune is not None:
+        payload["autotune"] = tune.ledger_section()
 
     precond = None
     amg_info = None
@@ -146,20 +196,25 @@ def main(argv=None):
             operator_complexity=amg_info.operator_complexity,
         )
 
-    mat = shard_matrix(
-        mesh,
-        partition_csr(
-            a, n_shards, fmt=args.fmt, block=(args.block, args.block)
-        ),
-    )
+    # The autotune trials already partitioned the winner's format — reuse
+    # that sharded DistMat instead of re-packing it.
+    mat = tune_mats.get((args.fmt, args.block))
+    if mat is None:
+        mat = shard_matrix(
+            mesh,
+            partition_csr(
+                a, n_shards, fmt=args.fmt, block=(args.block, args.block)
+            ),
+        )
     # The Ginkgo-analog baseline keeps the flat ELL layout by definition;
     # only build its (expensive) padded-global partition when a naive leg
-    # will actually run — the format sweep (--format != ell) and the AMG
-    # comparisons never consume it.
+    # will actually run — the format sweep (--format != ell), the AMG
+    # comparisons, and the tuned path (whose comparison legs are the
+    # autotune trials themselves) never consume it.
     need_naive = (
         mat.fmt == "ell"  # resolved format: --format auto may pick ELL
         if args.op == "spmv"
-        else not (args.amg or args.amgx_analog)
+        else not (args.amg or args.amgx_analog or args.autotune)
     )
     matg = (
         shard_matrix(mesh, partition_csr(a, n_shards, force_allgather=True))

@@ -244,6 +244,24 @@ def cg_vector_sweeps(variant: str = "hs", *, fused: bool = True) -> int:
     return CG_HOTPATH[variant]["fused" if fused else "unfused"][1]
 
 
+def cg_vector_flops(n: int, *, variant: str = "hs", fused: bool = True) -> float:
+    """Vector-op FLOPs per CG iteration outside the SpMV: ~1 flop per
+    streamed element (axpy: 2 flops / 3 streams, dot: 2 flops / 2 streams —
+    the hot path sits between, and these ops are all memory-bound anyway).
+    Used by the autotune pruning model (autotune/prune.py) to price a
+    variant's compute engine next to :func:`cg_vector_traffic`'s memory
+    term."""
+    streams, _ = CG_HOTPATH[variant]["fused" if fused else "unfused"]
+    return float(streams) * n
+
+
+def cg_reduce_scalars(variant: str = "hs") -> int:
+    """Scalars carried by the variant's fused all-reduce(s) per iteration
+    (hs: alpha pair + beta; fcg: one 3-term fusion; pipecg: the single
+    Ghysels–Vanroose fusion)."""
+    return {"hs": 3, "fcg": 3, "pipecg": 3}[variant]
+
+
 def spmv_traffic(n: int, k: int, *, matfree: bool = False,
                  dtype_bytes: int = 8, idx_bytes: int = 4) -> float:
     """SpMV HBM bytes per application: ELL (values + local indices + vector

@@ -28,6 +28,42 @@ class ChipSpec:
     # Power model (see energy/model.py for calibration notes).
     p_idle_w: float
     p_peak_w: float
+    # DVFS axis (autotune/): relative core-frequency grid the autotuner may
+    # select from; 1.0 is the calibration point of the constants above.
+    freq_points: tuple[float, ...] = (0.6, 0.8, 1.0)
+    # Voltage floor as a fraction of nominal V as f -> 0; V scales linearly
+    # with f above the floor (the classic P_dyn ~ f * V^2 DVFS model).
+    v_floor: float = 0.5
+
+    def v_frac(self, freq: float) -> float:
+        """Relative supply voltage at relative core frequency ``freq``."""
+        return self.v_floor + (1.0 - self.v_floor) * freq
+
+    def at_freq(self, freq: float) -> "ChipSpec":
+        """This chip downclocked to relative core frequency ``freq``.
+
+        The compute engines and their dynamic power envelope scale with the
+        core clock (``P_dyn ~ f * V(f)^2``, ``V`` linear in ``f`` down to
+        ``v_floor``); the HBM and ICI run their own clock domains and are
+        held flat. That asymmetry is what makes slow-and-efficient beat
+        race-to-idle on memory-bound sparse kernels (time barely moves,
+        dynamic energy drops) and lose on compute-bound ones (time — and
+        with it static energy — grows 1/f). Static (idle) power is leakage
+        and does not scale with the core clock.
+        """
+        if not 0.0 < freq <= 1.0:
+            raise ValueError(f"relative frequency must be in (0, 1]: {freq}")
+        if freq == 1.0:
+            return self
+        v = self.v_frac(freq)
+        dyn = (self.p_peak_w - self.p_idle_w) * freq * v * v
+        return dataclasses.replace(
+            self,
+            name=f"{self.name}@f{freq:g}",
+            peak_flops_bf16=self.peak_flops_bf16 * freq,
+            peak_flops_f32=self.peak_flops_f32 * freq,
+            p_peak_w=self.p_idle_w + dyn,
+        )
 
 
 TPU_V5E = ChipSpec(

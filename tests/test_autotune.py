@@ -1,0 +1,301 @@
+"""Autotune subsystem: space, pruning, trials, cache hygiene, e2e."""
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.autotune import (
+    DEFAULT,
+    Candidate,
+    TuneCache,
+    autotune,
+    enumerate_space,
+    extrapolate_iters,
+    fingerprint,
+    model_hash,
+    sort_key,
+)
+from repro.autotune.objective import OBJECTIVES, score
+from repro.autotune.prune import (
+    format_stored_bytes,
+    interior_stats,
+    pareto_front,
+    prune,
+)
+from repro.autotune.prune import Prediction
+from repro.energy.accounting import CostModel
+from repro.energy.model import PowerModel
+from repro.roofline.hw import TPU_V5E
+
+
+def _poisson(side=8):
+    from repro.matrices import poisson
+
+    return poisson.poisson_scipy(poisson.cube(side, "7pt"))
+
+
+# ---------------------------------------------------------------------------
+# space
+# ---------------------------------------------------------------------------
+
+
+def test_space_enumeration():
+    space = enumerate_space()
+    assert DEFAULT in space
+    assert len(space) == len(set(space))
+    # 6 format points (ell, hyb, bcsr x {2,4,8}, auto) x 3 variants x
+    # 2 overlap x 3 freqs
+    assert len(space) == 6 * 3 * 2 * 3
+    # deterministic order
+    assert space == enumerate_space()
+
+
+def test_exec_key_ignores_frequency_and_dead_block():
+    a = Candidate("hyb", "fcg", True, 4, 1.0)
+    b = Candidate("hyb", "fcg", True, 4, 0.6)
+    assert a.exec_key == b.exec_key
+    # block is dead weight unless the format is bcsr
+    assert (
+        Candidate("ell", "hs", True, 2, 1.0).exec_key
+        == Candidate("ell", "hs", True, 8, 1.0).exec_key
+    )
+    assert (
+        Candidate("bcsr", "hs", True, 2, 1.0).exec_key
+        != Candidate("bcsr", "hs", True, 8, 1.0).exec_key
+    )
+
+
+def test_sort_key_prefers_nominal_frequency_then_simplicity():
+    tied = [
+        Candidate("hyb", "hs", True, 4, 0.6),
+        Candidate("ell", "hs", True, 4, 1.0),
+        Candidate("ell", "hs", True, 4, 0.6),
+    ]
+    assert min(tied, key=sort_key) == Candidate("ell", "hs", True, 4, 1.0)
+
+
+def test_candidate_roundtrip_and_label():
+    c = Candidate("bcsr", "pipecg", False, 8, 0.8)
+    assert Candidate.from_dict(c.to_dict()) == c
+    assert c.label == "bcsr8/pipecg/ser/f0.8"
+    assert DEFAULT.label == "ell/hs/ov/f1"
+
+
+# ---------------------------------------------------------------------------
+# objective
+# ---------------------------------------------------------------------------
+
+
+def test_objective_scores():
+    totals = dict(te_gpu=3.0, te_cpu=1.0, runtime=2.0)
+    assert score("energy", totals) == 4.0
+    assert score("time", totals) == 2.0
+    assert score("edp", totals) == 8.0
+    with pytest.raises(ValueError):
+        score("joules", totals)
+    assert set(OBJECTIVES) == {"energy", "edp", "time"}
+
+
+# ---------------------------------------------------------------------------
+# prune
+# ---------------------------------------------------------------------------
+
+
+def test_interior_stats_and_format_bytes():
+    a = _poisson(6)
+    row_starts = (0, a.shape[0])
+    stats = interior_stats(a, row_starts)
+    assert stats.n_rows == a.shape[0]
+    # single shard: interior row lens are the full row lens
+    assert np.array_equal(
+        np.concatenate(stats.shard_row_lens), np.diff(a.indptr)
+    )
+    stored = format_stored_bytes(stats)
+    assert set(stored) == {"ell", "hyb", "bcsr2", "bcsr4", "bcsr8"}
+    assert all(v > 0 for v in stored.values())
+
+
+def test_pareto_front_strict_dominance_keeps_time_ties():
+    mk = lambda f, t, e: Prediction(
+        Candidate("ell", "hs", True, 4, f), t, e, e
+    )
+    a = mk(1.0, 1.0, 10.0)  # nominal: same time, more energy
+    b = mk(0.6, 1.0, 5.0)  # downclocked: time-free energy win
+    c = mk(0.8, 2.0, 20.0)  # strictly dominated by both
+    front = pareto_front([a, b, c])
+    assert a in front and b in front and c not in front
+
+
+def test_prune_budget_counts_executions_and_keeps_default(single_mesh):
+    from repro.core.partition import partition_csr
+    from repro.core.spmv import shard_matrix
+
+    a = _poisson(6)
+    mat = shard_matrix(single_mesh, partition_csr(a, 1))
+    cost = CostModel()
+    survivors, _ = prune(
+        enumerate_space(), a, mat, cost=cost, objective="energy", keep=2
+    )
+    execs = {p.candidate.exec_key for p in survivors}
+    assert len(execs) <= 3  # 2 budgeted + the always-kept default
+    assert DEFAULT.exec_key in execs
+    # every chosen execution carries its whole frequency column
+    freqs = {p.candidate.freq for p in survivors}
+    assert freqs == set(cost.power.chip.freq_points)
+    # scores sorted ascending
+    scores = [p.score for p in survivors]
+    assert scores == sorted(scores)
+
+
+# ---------------------------------------------------------------------------
+# trial extrapolation
+# ---------------------------------------------------------------------------
+
+
+def test_extrapolate_iters():
+    # converged within the trial: the measured count stands
+    assert extrapolate_iters(5, 1e-12, 1e-8) == 5
+    # rate 0.1/iter from 4 trial iters: 1e-8 needs ~8 total at that rate
+    # (9 when float log rounding tips the ceil)
+    assert extrapolate_iters(4, 1e-4, 1e-8) in (8, 9)
+    # stagnation hits the cap
+    assert extrapolate_iters(8, 0.99999999999999, 1e-8, cap=123) == 123
+    # degenerate inputs
+    assert extrapolate_iters(0, 1.0, 1e-8) == 1
+    # never extrapolates below what already ran
+    assert extrapolate_iters(10, 1e-4, 1e-3) == 10
+
+
+# ---------------------------------------------------------------------------
+# cache hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_cache_roundtrip(tmp_path):
+    cache = TuneCache(os.path.join(tmp_path, "cache.json"))
+    a = _poisson(6)
+    cost = CostModel()
+    fp = fingerprint(a, 2, "energy")
+    chosen = Candidate("hyb", "pipecg", True, 4, 0.6)
+    assert cache.get(fp, cost) is None
+    cache.put(fp, cost, chosen)
+    assert cache.get(fp, cost) == chosen
+    # a different objective or shard count is a different key
+    assert cache.get(fingerprint(a, 4, "energy"), cost) is None
+    assert cache.get(fingerprint(a, 2, "time"), cost) is None
+
+
+def test_cache_invalidates_on_frequency_grid_change(tmp_path):
+    """Regression: an entry tuned against one DVFS grid must not be served
+    for another — the chosen freq may not even exist there."""
+    cache = TuneCache(os.path.join(tmp_path, "cache.json"))
+    a = _poisson(6)
+    fp = fingerprint(a, 2, "energy")
+    cost_a = CostModel()
+    cost_b = CostModel(
+        power=PowerModel(
+            chip=dataclasses.replace(TPU_V5E, freq_points=(0.5, 1.0))
+        )
+    )
+    assert model_hash(cost_a) != model_hash(cost_b)
+    cache.put(fp, cost_a, Candidate("ell", "hs", True, 4, 0.6))
+    assert cache.get(fp, cost_b) is None
+    assert cache.get(fp, cost_a) is not None
+    # any PowerModel recalibration invalidates too
+    cost_c = CostModel(power=PowerModel(hbm_fraction=0.7))
+    assert cache.get(fp, cost_c) is None
+
+
+def test_cache_schema_version_gates_entries(tmp_path):
+    import json
+
+    from repro.autotune import cache as cache_mod
+
+    path = os.path.join(tmp_path, "cache.json")
+    cache = TuneCache(path)
+    a = _poisson(6)
+    fp = fingerprint(a, 1, "energy")
+    cost = CostModel()
+    key = cache.put(fp, cost, DEFAULT)
+    # simulate an entry written by an older schema
+    with open(path) as f:
+        d = json.load(f)
+    d["entries"][key]["schema"] = cache_mod.SCHEMA - 1
+    with open(path, "w") as f:
+        json.dump(d, f)
+    assert cache.get(fp, cost) is None
+
+
+@pytest.mark.parametrize("content", ["{not json", '{"entries": []}', "[1]"])
+def test_cache_survives_corrupt_file(tmp_path, content):
+    path = os.path.join(tmp_path, "cache.json")
+    with open(path, "w") as f:
+        f.write(content)
+    cache = TuneCache(path)
+    a = _poisson(6)
+    fp = fingerprint(a, 1, "energy")
+    assert cache.get(fp, CostModel()) is None
+    cache.put(fp, CostModel(), DEFAULT)  # overwrites the corrupt file
+    assert cache.get(fp, CostModel()) == DEFAULT
+
+
+def test_fingerprint_shape():
+    a = _poisson(6)
+    fp = fingerprint(a, 2, "edp")
+    assert fp["n"] == a.shape[0] and fp["nnz"] == a.nnz
+    assert len(fp["row_nnz_q"]) == 5
+    assert fp["row_nnz_q"][0] <= fp["row_nnz_q"][-1]
+    assert fp["bandwidth"] > 0
+    assert fp["shards"] == 2 and fp["objective"] == "edp"
+
+
+# ---------------------------------------------------------------------------
+# end to end
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_end_to_end(tmp_path, single_mesh):
+    a = _poisson(6)
+    cache_path = os.path.join(tmp_path, "cache.json")
+    res = autotune(
+        a, single_mesh, 1, objective="energy", budget=2,
+        cache_path=cache_path, trial_iters=4,
+    )
+    assert not res.cached
+    assert res.candidates_total == 108
+    assert res.candidates_trialed >= 1
+    assert res.candidates_pruned + len(res.trials) == res.candidates_total
+    # the energy objective always downclocks a memory-bound solve, so the
+    # winner cannot be the out-of-the-box default...
+    assert res.chosen != DEFAULT
+    assert res.chosen.freq < 1.0
+    # ...and can never score worse than it (default always trials along)
+    by_cand = {t.candidate: t for t in res.trials}
+    assert DEFAULT in by_cand
+    assert by_cand[res.chosen].score <= by_cand[DEFAULT].score
+    assert by_cand[res.chosen].measured_energy_j <= by_cand[
+        DEFAULT
+    ].measured_energy_j
+    # trials are best-first and carry prediction next to measurement
+    assert res.trials[0].candidate == res.chosen
+    for t in res.trials:
+        assert t.predicted_energy_j > 0 and t.measured_energy_j > 0
+        assert t.iters_est >= t.iters_trial
+
+    # second invocation: served from the cache, nothing executes
+    res2 = autotune(
+        a, single_mesh, 1, objective="energy", budget=2,
+        cache_path=cache_path,
+    )
+    assert res2.cached and res2.candidates_trialed == 0
+    assert res2.chosen == res.chosen
+    # force re-tunes even on a hit
+    res3 = autotune(
+        a, single_mesh, 1, objective="energy", budget=2,
+        cache_path=cache_path, trial_iters=4, force=True,
+    )
+    assert not res3.cached and res3.chosen == res.chosen
+    with pytest.raises(ValueError):
+        autotune(a, single_mesh, 1, objective="watts")

@@ -127,3 +127,92 @@ def test_spmv_counts_scale_with_halo():
     big = spmv_counts(_fake_mat(mode="allgather"))
     assert big.ici_bytes > small.ici_bytes
     assert small.flops == big.flops
+
+
+# ---------------------------------------------------------------------------
+# DVFS axis: the frequency-scaled chip must preserve the calibration
+# invariants the default model is built on (docs/autotune.md)
+# ---------------------------------------------------------------------------
+
+
+def test_freq_axis_preserves_calibration_invariants():
+    base = PowerModel()
+    prev_e_hbm = -1.0
+    for f in sorted(base.chip.freq_points):
+        m = base.at_freq(f)
+        # ICI energy-per-byte stays exactly 2x HBM energy-per-byte
+        assert np.isclose(m.e_ici, 2.0 * m.e_hbm)
+        # instantaneous power is clamped to the (scaled) p_peak_w
+        assert m.chip_power(1e18, 1e14, 1e13) == m.chip.p_peak_w
+        assert m.chip.p_peak_w <= base.chip.p_peak_w
+        # the roofline-saturating point still draws exactly peak
+        assert np.isclose(
+            m.chip_power(m.chip.peak_flops_bf16, m.chip.hbm_bw, 0),
+            m.chip.p_peak_w,
+        )
+        # static power is leakage: it does not scale with the core clock
+        assert m.chip_static_w == base.chip_static_w
+        # energy-per-byte is monotone in frequency (drops as f drops)
+        assert m.e_hbm > prev_e_hbm
+        prev_e_hbm = m.e_hbm
+    # identity at nominal frequency — the default path is untouched
+    assert base.at_freq(1.0) is base
+    assert base.chip.at_freq(1.0) is base.chip
+
+
+def test_freq_axis_scales_compute_not_bandwidth():
+    chip = PowerModel().chip
+    half = chip.at_freq(0.5)
+    assert half.peak_flops_bf16 == chip.peak_flops_bf16 * 0.5
+    assert half.peak_flops_f32 == chip.peak_flops_f32 * 0.5
+    assert half.hbm_bw == chip.hbm_bw
+    assert half.ici_bw == chip.ici_bw
+    # dynamic envelope scales ~ f * V(f)^2 with the voltage floor
+    v = chip.v_frac(0.5)
+    assert np.isclose(
+        half.p_peak_w - half.p_idle_w,
+        (chip.p_peak_w - chip.p_idle_w) * 0.5 * v * v,
+    )
+    with pytest.raises(ValueError):
+        chip.at_freq(0.0)
+    with pytest.raises(ValueError):
+        chip.at_freq(1.5)
+
+
+def test_region_sum_equals_monitor_total_at_nondefault_freq():
+    """The executed-ledger invariant must survive a downclocked pricing."""
+    cm = CostModel().at_freq(0.6)
+    mon = PowerMonitor(n_devices=4, cost=cm)
+    mon.idle(0.01)
+    mon.region(
+        "overlap",
+        OpCounts(flops=1e9, hbm_bytes=4e9, ici_bytes=1e7, n_collectives=2),
+        n_shards=4, repeats=7,
+    )
+    mon.region(
+        "reductions",
+        OpCounts(flops=2e8, hbm_bytes=8e8, ici_bytes=8.0, n_collectives=1),
+        n_shards=4, repeats=7,
+    )
+    mon.idle(0.01)
+    tot = mon.energy()
+    by_region = mon.energy_by_region()
+    regions = {k: v for k, v in by_region.items() if k != "idle"}
+    assert np.isclose(
+        sum(r["de_j"] for r in regions.values()), tot["de_total"]
+    )
+    # peak respects the scaled envelope, and the downclocked solve is
+    # strictly cheaper than the nominal one on identical counts
+    assert tot["gpu_power_peak"] <= cm.power.chip.p_peak_w
+    mon1 = PowerMonitor(n_devices=4, cost=CostModel())
+    mon1.region(
+        "overlap",
+        OpCounts(flops=1e9, hbm_bytes=4e9, ici_bytes=1e7, n_collectives=2),
+        n_shards=4, repeats=7,
+    )
+    mon1.region(
+        "reductions",
+        OpCounts(flops=2e8, hbm_bytes=8e8, ici_bytes=8.0, n_collectives=1),
+        n_shards=4, repeats=7,
+    )
+    assert tot["de_gpu"] < mon1.energy()["de_gpu"]

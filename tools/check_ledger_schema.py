@@ -1,0 +1,167 @@
+"""Ledger ↔ docs schema gate (CI `energy-ledger` job).
+
+    python tools/check_ledger_schema.py            # validate all ledgers
+    python tools/check_ledger_schema.py --list     # dump the inventory
+
+Validates every JSON under ``runs/ledgers/`` and ``benchmarks/baselines/``
+against the field inventory of ``docs/ledger_schema.md``, in both
+directions:
+
+* **undocumented** — a dict key appearing in any ledger that the doc never
+  names fails the check (new fields must be documented before they ship);
+* **missing-documented** — a field the doc's ``| field | ... |`` tables
+  promise that appears in *no* scanned ledger also fails (the doc may not
+  describe fields that no longer exist).
+
+What counts as "documented": every `backticked` identifier in the page
+(tables and prose; cells like ``a`` / ``b`` contribute each token) and
+every ``"key":`` inside its fenced JSON examples. What counts as
+"promised": rows of tables whose header's first cell is ``field`` —
+tables with other headers (the region-name table, the autotune *member*
+table) document vocabulary that smoke ledgers may legitimately lack.
+
+Together with ``benchmarks/check_ledgers.py`` (value drift) this makes
+ledger and docs unable to drift apart silently: the former gates numbers,
+this gates structure.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCHEMA_DOC = os.path.join(REPO, "docs", "ledger_schema.md")
+SCAN_DIRS = (
+    os.path.join(REPO, "runs", "ledgers"),
+    os.path.join(REPO, "benchmarks", "baselines"),
+)
+
+_BACKTICK_RE = re.compile(r"`([^`]+)`")
+_FENCE_KEY_RE = re.compile(r'"([^"\\]+)"\s*:')
+_IDENT_RE = re.compile(r"^[A-Za-z_][A-Za-z0-9_.\-]*$")
+_TABLE_ROW_RE = re.compile(r"^\|([^|]*)\|")
+
+
+def doc_inventory(path: str = SCHEMA_DOC) -> tuple[set[str], set[str]]:
+    """Parse the doc -> (documented keys, required ``| field |`` keys)."""
+    documented: set[str] = set()
+    required: set[str] = set()
+    in_fence = False
+    required_table = False
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            if line.startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                for m in _FENCE_KEY_RE.finditer(line):
+                    documented.add(m.group(1))
+                continue
+            tokens = [
+                t for t in _BACKTICK_RE.findall(line) if _IDENT_RE.match(t)
+            ]
+            documented.update(tokens)
+            row = _TABLE_ROW_RE.match(line.strip())
+            if not row:
+                required_table = False
+                continue
+            first_cell = row.group(1).strip()
+            if first_cell == "field":
+                required_table = True  # header row of a required table
+                continue
+            if set(first_cell) <= {"-", " ", ":"}:
+                continue  # separator row keeps the current table state
+            if required_table:
+                required.update(
+                    t
+                    for t in _BACKTICK_RE.findall(row.group(1))
+                    if _IDENT_RE.match(t)
+                )
+    return documented, required
+
+
+def ledger_files() -> list[str]:
+    out = []
+    for d in SCAN_DIRS:
+        if not os.path.isdir(d):
+            continue
+        out += sorted(
+            os.path.join(d, fn) for fn in os.listdir(d)
+            if fn.endswith(".json")
+        )
+    return out
+
+
+def collect_keys(obj, keys: set[str]):
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            keys.add(k)
+            collect_keys(v, keys)
+    elif isinstance(obj, list):
+        for v in obj:
+            collect_keys(v, keys)
+
+
+def check(files: list[str] | None = None) -> list[str]:
+    documented, required = doc_inventory()
+    errors: list[str] = []
+    seen: set[str] = set()
+    files = files if files is not None else ledger_files()
+    if not files:
+        return ["no ledgers found to validate (run benchmarks.run --smoke)"]
+    for path in files:
+        rel = os.path.relpath(path, REPO)
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            errors.append(f"{rel}: unreadable JSON ({e})")
+            continue
+        keys: set[str] = set()
+        collect_keys(data, keys)
+        seen |= keys
+        for k in sorted(keys - documented):
+            errors.append(
+                f"{rel}: field {k!r} is not documented in "
+                "docs/ledger_schema.md"
+            )
+    for k in sorted(required - seen):
+        errors.append(
+            f"docs/ledger_schema.md: documents field {k!r} but no ledger "
+            "under runs/ledgers/ or benchmarks/baselines/ carries it"
+        )
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--list", action="store_true",
+                    help="print the parsed doc inventory and exit")
+    args = ap.parse_args(argv)
+
+    documented, required = doc_inventory()
+    if args.list:
+        print(f"documented ({len(documented)}): {sorted(documented)}")
+        print(f"required ({len(required)}): {sorted(required)}")
+        return 0
+    files = ledger_files()
+    errors = check(files)
+    print(f"validated {len(files)} ledger(s) against "
+          f"{len(documented)} documented / {len(required)} required fields")
+    if errors:
+        print(f"\n{len(errors)} schema problem(s):")
+        for e in errors[:80]:
+            print(f"  {e}")
+        if len(errors) > 80:
+            print(f"  ... and {len(errors) - 80} more")
+        return 1
+    print("ledger schema OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
