@@ -1,0 +1,256 @@
+"""Batched multi-RHS block-CG: matrix-traffic amortization (§MultiRHS).
+
+The paper's energy argument is that sparse solves are dominated by
+streaming the matrix from HBM; with r right-hand sides batched into one
+block solve (core/cg.make_block_solver + the SpMM interiors), the matrix
+is read ONCE per iteration while only the O(n*r) vector traffic scales —
+so energy-per-solve falls toward the vector-bound floor as r grows.
+
+* **modeled** — per-iteration traffic/time/energy at the paper's sizes for
+  r in {1, 4, 8, 16} (spmv_counts(nrhs=...) + the block-HS hot-path row of
+  roofline/analysis.CG_HOTPATH), reporting the per-solve matrix-byte
+  amortization curve.
+* **executed** — real solves through ``launch.solve --ledger``:
+  ``--nrhs 8`` batched vs sequential ``--nrhs 1``, with per-repeat wall
+  times (p50/p99 per-solve latency, solves/sec, GB/s — info side).
+  HARD-ASSERTS the acceptance invariants:
+
+  1. per-solve SpMV-region HBM *matrix* bytes at nrhs=8 are <= 0.2x the
+     nrhs=1 value in the executed ledger, and the traced matrix bytes
+     match the stored-bytes model within 5% on both legs;
+  2. batched solves/sec at nrhs=8 are >= 2x eight sequential nrhs=1
+     solves of the same system;
+  3. a tuned ``--nrhs 8 --autotune`` run never loses (ledger energy) to
+     the untuned batched default, and its decision comes from an
+     nrhs-keyed cache entry.
+
+Gated: modeled curves, iteration counts, per-solve modeled energy/time,
+matrix-byte ratios, autotune decisions. Info: everything wall-derived.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import (
+    SHARD_COUNTS,
+    abstract_poisson_mat,
+    run_solver_with_ledger,
+    write_results,
+)
+
+PAPER_SIDE = 405  # 7pt weak-scaled DOFs/device, as in cg_scaling
+RHS_COUNTS = (1, 4, 8, 16)
+
+
+def modeled(
+    shard_counts=SHARD_COUNTS, side: int = PAPER_SIDE, rhs=RHS_COUNTS
+) -> list[dict]:
+    """Per-iteration, per-shard traffic/time/energy of the block solve."""
+    from repro.energy.accounting import CostModel, spmv_counts
+    from repro.roofline.analysis import cg_vector_traffic
+
+    cost = CostModel()
+    rows = []
+    for s in shard_counts:
+        _, mat = abstract_poisson_mat(side, "7pt", s, weak=True)
+        base = None
+        for r in rhs:
+            variant = "block_hs" if r > 1 else "hs"
+            c = spmv_counts(mat, nrhs=r)
+            vec_bytes = cg_vector_traffic(
+                mat.n_own_pad, variant=variant, nrhs=r
+            )
+            t_sp, _ = cost.times(c, s, True)
+            p_chip = cost.power.chip_power(
+                c.flops / t_sp, c.hbm_bytes / t_sp, c.ici_bytes / t_sp
+            )
+            per_solve_mat = c.hbm_matrix_bytes / r
+            if base is None:
+                base = per_solve_mat  # r == 1 reference (rhs is sorted)
+            rows.append(
+                dict(
+                    figure="multirhs_modeled",
+                    stencil="7pt",
+                    n_shards=s,
+                    nrhs=r,
+                    dofs=side**3 * s,
+                    matrix_bytes_iter=c.hbm_matrix_bytes,
+                    per_solve_matrix_bytes=per_solve_mat,
+                    matrix_amortization=per_solve_mat / base,
+                    vector_bytes_iter=vec_bytes,
+                    spmv_iter_s=t_sp,
+                    spmv_iter_j=p_chip * t_sp,
+                    per_solve_spmv_j=p_chip * t_sp / r,
+                )
+            )
+    return rows
+
+
+def _solver_entry(led: dict) -> dict:
+    return led["solvers"]["BCMGX-analog"]
+
+
+def _total_energy(led: dict) -> float:
+    tot = _solver_entry(led)["totals"]
+    return tot["te_gpu"] + tot["te_cpu"]
+
+
+def _traced_matrix_bytes(sol: dict) -> float:
+    return sum(
+        reg.get("hbm_matrix_bytes", 0.0) for reg in sol["regions"].values()
+    )
+
+
+def executed(
+    shards: int = 2, side: int = 12, maxiter: int = 300, tol: float = 1e-8,
+    nrhs: int = 8, repeats: int = 5,
+) -> list[dict]:
+    """Batched vs sequential solves; asserts the amortization invariants."""
+    rows = []
+    base = [
+        "--problem", "poisson7", "--side", str(side), "--shards", str(shards),
+        "--maxiter", str(maxiter), "--tol", str(tol),
+        "--repeats", str(repeats),
+    ]
+    legs = {}
+    for r in (1, nrhs):
+        args = base + ["--nrhs", str(r)]
+        _, led = run_solver_with_ledger(args, n_devices=shards)
+        sol = _solver_entry(led)
+        walls = np.asarray(sol["wall_repeats_s"], dtype=float)
+        per_solve_wall = walls / r
+        traced_mat = _traced_matrix_bytes(sol)
+        # stored-bytes model: one full matrix stream per sweep, per shard,
+        # (iters + 1) sweeps (init residual + one per iteration)
+        modeled_mat = (
+            led["stored_bytes"] / led["shards"] * (sol["iters"] + 1)
+        )
+        hbm_total = sum(
+            reg["hbm_bytes"] for reg in sol["regions"].values()
+        )
+        legs[r] = dict(sol=sol, led=led, traced_mat=traced_mat,
+                       modeled_mat=modeled_mat, wall=float(walls.mean()))
+        rows.append(
+            dict(
+                figure="multirhs_executed",
+                n_shards=shards,
+                nrhs=r,
+                iters=sol["iters"],
+                relres=sol["relres"],
+                per_solve_spmv_matrix_bytes=sol["per_solve_spmv_matrix_bytes"],
+                traced_matrix_bytes=traced_mat,
+                modeled_matrix_bytes=modeled_mat,
+                per_solve_modeled_s=sol["per_solve_modeled_s"],
+                per_solve_de_j=sol["per_solve_de_j"],
+                # wall-derived (machine-dependent): info side
+                wall_s=legs[r]["wall"],
+                per_solve_wall_p50_s=float(np.percentile(per_solve_wall, 50)),
+                per_solve_wall_p99_s=float(np.percentile(per_solve_wall, 99)),
+                solves_per_wall_sec=r / legs[r]["wall"],
+                hbm_gbps_wall=hbm_total / legs[r]["wall"] / 1e9,
+            )
+        )
+    # invariant 1a: modeled == traced matrix bytes (both legs, 5%)
+    for r, leg in legs.items():
+        err = abs(leg["traced_mat"] - leg["modeled_mat"]) / leg["modeled_mat"]
+        assert err <= 0.05, (
+            f"traced matrix bytes diverge from the stored-bytes model at "
+            f"nrhs={r}: traced {leg['traced_mat']} vs modeled "
+            f"{leg['modeled_mat']} ({100 * err:.1f}%)"
+        )
+    # invariant 1b: batched per-solve matrix traffic <= 0.2x single-RHS
+    ps_batched = legs[nrhs]["sol"]["per_solve_spmv_matrix_bytes"]
+    ps_single = legs[1]["sol"]["per_solve_spmv_matrix_bytes"]
+    assert ps_batched <= 0.2 * ps_single, (
+        f"per-solve matrix bytes at nrhs={nrhs} ({ps_batched}) exceed 0.2x "
+        f"the nrhs=1 value ({ps_single}): amortization broke"
+    )
+    # invariant 2: batched throughput >= 2x sequential single-RHS solves
+    batched_rate = nrhs / legs[nrhs]["wall"]
+    sequential_rate = 1.0 / legs[1]["wall"]  # nrhs solves take nrhs*wall
+    assert batched_rate >= 2.0 * sequential_rate, (
+        f"batched nrhs={nrhs} at {batched_rate:.2f} solves/s is not 2x the "
+        f"sequential rate {sequential_rate:.2f} solves/s"
+    )
+    # invariant 3: a tuned batched run never loses to the untuned default
+    untuned_e = _total_energy(legs[nrhs]["led"])
+    cache_dir = tempfile.mkdtemp(prefix="multirhs_bench_")
+    try:
+        cache = os.path.join(cache_dir, "cache.json")
+        tuned_args = base + [
+            "--nrhs", str(nrhs), "--autotune", "--objective", "energy",
+            "--tune-budget", "4", "--tune-cache", cache,
+        ]
+        _, tled = run_solver_with_ledger(tuned_args, n_devices=shards)
+        at = tled["autotune"]
+        tuned_e = _total_energy(tled)
+        assert at["fingerprint"]["nrhs"] == nrhs, (
+            f"tuned run keyed its cache entry at nrhs="
+            f"{at['fingerprint']['nrhs']}, not {nrhs}"
+        )
+        assert tuned_e <= untuned_e, (
+            f"tuned nrhs={nrhs} solve ({tuned_e} J) lost to the untuned "
+            f"batched default ({untuned_e} J)"
+        )
+        rows.append(
+            dict(
+                figure="multirhs_tuned",
+                n_shards=shards,
+                nrhs=nrhs,
+                chosen=at["chosen_label"],
+                candidates_trialed=at["candidates_trialed"],
+                iters=_solver_entry(tled)["iters"],
+                tuned_energy_j=tuned_e,
+                untuned_energy_j=untuned_e,
+                wall_s=_solver_entry(tled)["wall_s"],
+            )
+        )
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+    return rows
+
+
+def main(smoke: bool = False):
+    from benchmarks.common import set_smoke
+
+    set_smoke(smoke)
+    from repro.energy.report import fmt_table
+
+    mo = modeled(
+        shard_counts=(1, 4) if smoke else SHARD_COUNTS,
+        side=32 if smoke else PAPER_SIDE,
+    )
+    print(fmt_table(
+        mo,
+        [("n_shards", "#GPUs"), ("nrhs", "r"),
+         ("per_solve_matrix_bytes", "matrix B/solve"),
+         ("matrix_amortization", "amortized x"),
+         ("spmv_iter_s", "SpMV iter (s)"),
+         ("per_solve_spmv_j", "SpMV J/solve")],
+        "Modeled per-iteration matrix amortization (paper sizes, 7pt weak)",
+    ))
+    ex = executed(
+        shards=2,
+        side=10 if smoke else 16,
+        maxiter=200 if smoke else 400,
+        repeats=5 if smoke else 20,
+    )
+    print(fmt_table(
+        ex,
+        [("figure", "figure"), ("nrhs", "r"), ("iters", "iters"),
+         ("per_solve_spmv_matrix_bytes", "matrix B/solve"),
+         ("per_solve_de_j", "DE J/solve"),
+         ("solves_per_wall_sec", "solves/s"),
+         ("per_solve_wall_p99_s", "p99 (s)")],
+        "Executed: batched nrhs=8 vs sequential nrhs=1",
+    ))
+    write_results("multirhs_scaling", mo + ex)
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,7 @@ BENCHES = [
     ("suitesparse (Tab 7-8)", "benchmarks.suitesparse"),
     ("hotpath_fusion (§Perf)", "benchmarks.hotpath_fusion"),
     ("overlap_scaling (§Overlap)", "benchmarks.overlap_scaling"),
+    ("multirhs_scaling (§MultiRHS)", "benchmarks.multirhs_scaling"),
     ("autotune_sweep (§Autotune)", "benchmarks.autotune_sweep"),
     ("roofline_table (§Roofline)", "benchmarks.roofline_table"),
 ]
@@ -64,7 +65,7 @@ def main(argv=None):
         if args.fast and not args.smoke and modname in (
             "benchmarks.pcg_scaling", "benchmarks.suitesparse",
             "benchmarks.hotpath_fusion", "benchmarks.overlap_scaling",
-            "benchmarks.autotune_sweep",
+            "benchmarks.multirhs_scaling", "benchmarks.autotune_sweep",
         ):
             print(f"=== {title}: SKIPPED (--fast) ===\n")
             continue

@@ -84,6 +84,7 @@ def autotune(
     maxiter_cap: int = 10000,
     force: bool = False,
     mats: dict | None = None,
+    nrhs: int = 1,
 ) -> TuneResult:
     """Select the solver configuration minimizing ``objective``.
 
@@ -93,6 +94,12 @@ def autotune(
         n_shards: shard count (part of the fingerprint — a different
             partition is a different search).
         objective: ``"energy"`` | ``"edp"`` | ``"time"``.
+        nrhs: right-hand sides per solve. ``nrhs`` > 1 tunes the batched
+            block solver: the variant axis collapses to ``hs`` (the block
+            body is block-HS), the model stage prices the SpMM's amortized
+            matrix traffic, and the trials run the block solver. The
+            fingerprint carries ``nrhs``, so batched and single-RHS
+            decisions never share a cache entry.
         budget: max candidates the trial stage may execute (top-K of the
             model stage's Pareto front; the default config always rides
             along, so at most ``budget + 1`` are scored).
@@ -113,8 +120,9 @@ def autotune(
     """
     if objective not in OBJECTIVES:
         raise ValueError(f"objective must be one of {OBJECTIVES}: {objective}")
+    nrhs = max(int(nrhs), 1)
     cost = cost or CostModel()
-    fp = fingerprint(a_csr, n_shards, objective)
+    fp = fingerprint(a_csr, n_shards, objective, nrhs=nrhs)
     cache = TuneCache(cache_path)
     if not force:
         hit = cache.get(fp, cost)
@@ -134,14 +142,20 @@ def autotune(
         mats[ell_key] = shard_matrix(mesh, partition_csr(a_csr, n_shards))
     mat_ell = mats[ell_key]
 
-    candidates = enumerate_space(cost.power.chip)
+    if nrhs > 1:
+        # the block body is block-HS; the fcg/pipecg recurrences have no
+        # block counterpart here, so the variant axis collapses
+        candidates = enumerate_space(cost.power.chip, variants=("hs",))
+    else:
+        candidates = enumerate_space(cost.power.chip)
     survivors, _ = prune(
         candidates, a_csr, mat_ell, cost=cost, objective=objective,
-        keep=budget,
+        keep=budget, nrhs=nrhs,
     )
     trials = run_trials(
         a_csr, mesh, n_shards, survivors, cost=cost, objective=objective,
         tol=tol, trial_iters=trial_iters, maxiter_cap=maxiter_cap, mats=mats,
+        nrhs=nrhs,
     )
     trials = sorted(trials, key=lambda t: (t.score, sort_key(t.candidate)))
     chosen = trials[0].candidate

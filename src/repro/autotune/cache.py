@@ -34,8 +34,9 @@ from repro.energy.accounting import CostModel
 
 #: Cache entry schema version. Bump on any change to the entry layout or
 #: to the meaning of the fingerprint/key — old files keep working, their
-#: entries just stop matching.
-SCHEMA = 1
+#: entries just stop matching. v2: fingerprint gained the ``nrhs`` key
+#: (multi-RHS block solves tune separately from single-RHS ones).
+SCHEMA = 2
 
 #: Default on-disk location (relative to the process cwd, which is the
 #: repo root for ``launch.solve`` / the benchmarks).
@@ -44,8 +45,14 @@ DEFAULT_PATH = os.path.join("runs", "autotune", "cache.json")
 _QUANTILES = (0.0, 0.25, 0.5, 0.75, 1.0)
 
 
-def fingerprint(a_csr, n_shards: int, objective: str) -> dict:
-    """Cheap, stable identity of one tuning problem (see module doc)."""
+def fingerprint(a_csr, n_shards: int, objective: str, *,
+                nrhs: int = 1) -> dict:
+    """Cheap, stable identity of one tuning problem (see module doc).
+
+    ``nrhs`` is part of the problem identity: a decision tuned for a
+    single-RHS solve (SpMV-bound, latency-sensitive reductions) must never
+    be served to a batched multi-RHS solve whose matrix traffic is
+    amortized r ways — the format/frequency trade-offs differ."""
     a = a_csr.tocsr()
     row_nnz = np.diff(a.indptr)
     if row_nnz.size:
@@ -61,6 +68,7 @@ def fingerprint(a_csr, n_shards: int, objective: str) -> dict:
         bandwidth=bandwidth,
         shards=int(n_shards),
         objective=str(objective),
+        nrhs=int(nrhs),
     )
 
 

@@ -144,8 +144,15 @@ class Prediction:
     score: float  # objective score per iteration (lower is better)
 
 
+def _hotpath_variant(candidate: Candidate, nrhs: int) -> str:
+    """CG_HOTPATH/CG_COMM row a candidate's vector phase is priced with:
+    multi-RHS solves run the block-HS body regardless of the (hs-only)
+    candidate variant axis."""
+    return "block_hs" if nrhs > 1 else candidate.variant
+
+
 def phase_counts(
-    mat_ell, candidate: Candidate, stored: dict
+    mat_ell, candidate: Candidate, stored: dict, *, nrhs: int = 1
 ) -> tuple[OpCounts, OpCounts]:
     """Per-iteration, per-shard (SpMV-phase, vector-phase) counts.
 
@@ -153,35 +160,43 @@ def phase_counts(
     partition and swaps the interior stored-bytes term for the candidate
     format's (the boundary block + halo plan are format-agnostic); the
     vector phase carries the variant's CG_HOTPATH streams and all-reduce
-    pattern.
+    pattern. ``nrhs`` > 1 prices the SpMM sweep (matrix bytes once, vector
+    bytes r times) and the block-HS vector/Gram phase.
     """
     S = max(mat_ell.n_shards, 1)
     fmt_key = (
         f"bcsr{candidate.block}" if candidate.fmt == "bcsr" else candidate.fmt
     )
-    sp = spmv_counts(mat_ell, overlap=candidate.overlap)
+    sp = spmv_counts(mat_ell, overlap=candidate.overlap, nrhs=nrhs)
     delta = (stored[fmt_key] - stored["ell"]) / S
-    sp = OpCounts(sp.flops, sp.hbm_bytes + delta, sp.ici_bytes, sp.n_collectives)
+    # the format swap moves *matrix* bytes, so both totals shift together
+    sp = dataclasses.replace(
+        sp,
+        hbm_bytes=sp.hbm_bytes + delta,
+        hbm_matrix_bytes=sp.hbm_matrix_bytes + delta,
+    )
     n = mat_ell.n_own_pad
-    v = candidate.variant
+    v = _hotpath_variant(candidate, nrhs)
     vec = OpCounts(
-        flops=cg_vector_flops(n, variant=v),
-        hbm_bytes=cg_vector_traffic(n, variant=v),
-        ici_bytes=8.0 * cg_reduce_scalars(v),
+        flops=cg_vector_flops(n, variant=v, nrhs=nrhs),
+        hbm_bytes=cg_vector_traffic(n, variant=v, nrhs=nrhs),
+        ici_bytes=8.0 * cg_reduce_scalars(v, nrhs),
         n_collectives=float(CG_COMM[v]["allreduces"]),
     )
     return sp, vec
 
 
-def iteration_counts(mat_ell, candidate: Candidate, stored: dict) -> OpCounts:
+def iteration_counts(
+    mat_ell, candidate: Candidate, stored: dict, *, nrhs: int = 1
+) -> OpCounts:
     """Total per-iteration, per-shard :class:`OpCounts` of one candidate."""
-    sp, vec = phase_counts(mat_ell, candidate, stored)
+    sp, vec = phase_counts(mat_ell, candidate, stored, nrhs=nrhs)
     return sp + vec
 
 
 def predict(
     mat_ell, candidate: Candidate, stored: dict, *, cost: CostModel,
-    objective: str,
+    objective: str, nrhs: int = 1,
 ) -> Prediction:
     """Model one candidate's per-iteration (time, energy, score).
 
@@ -193,8 +208,8 @@ def predict(
     """
     S = max(mat_ell.n_shards, 1)
     fcost = cost.at_freq(candidate.freq)
-    sp, vec = phase_counts(mat_ell, candidate, stored)
-    v = candidate.variant
+    sp, vec = phase_counts(mat_ell, candidate, stored, nrhs=nrhs)
+    v = _hotpath_variant(candidate, nrhs)
     t_sp, _ = fcost.times(sp, S, candidate.overlap)
     _, (tc2, tm2, tl2) = fcost.times(vec, S, True)
     hidden = CG_COMM[v]["hidden"] / max(CG_COMM[v]["allreduces"], 1)
@@ -258,6 +273,7 @@ def prune(
     cost: CostModel,
     objective: str,
     keep: int,
+    nrhs: int = 1,
 ) -> tuple[list[Prediction], InteriorStats]:
     """Stage 1: score ``candidates`` analytically; keep the Pareto front's
     top-``keep`` *executions* (objective-ranked) plus :data:`space.DEFAULT`,
@@ -288,7 +304,7 @@ def prune(
         resolved.append(c)
 
     preds = [
-        predict(mat_ell, c, stored, cost=cost, objective=objective)
+        predict(mat_ell, c, stored, cost=cost, objective=objective, nrhs=nrhs)
         for c in resolved
     ]
     front = sorted(

@@ -98,17 +98,21 @@ def run_trials(
     trial_iters: int = 8,
     maxiter_cap: int = 10000,
     mats: dict | None = None,
+    nrhs: int = 1,
 ) -> list[Trial]:
     """Execute (or share) one trial per survivor and score it.
 
     ``mats`` optionally seeds/collects the ``(fmt, block) -> sharded
     DistMat`` partition cache, letting the caller reuse the winner's
-    partition for the final solve.
+    partition for the final solve. With ``nrhs`` > 1 each trial runs the
+    block solver on the deterministic RHS block; its convergence is the
+    slowest column's (relres = max over columns), so the extrapolated
+    iteration count covers the whole batch.
     """
     import jax
 
-    from repro.core.cg import make_solver
-    from repro.core.partition import pad_vector, partition_csr
+    from repro.core.cg import default_rhs_block, make_block_solver, make_solver
+    from repro.core.partition import pad_block, pad_vector, partition_csr
     from repro.core.spmv import shard_matrix, shard_vector
 
     mats = mats if mats is not None else {}
@@ -127,19 +131,31 @@ def run_trials(
                     ),
                 )
             mat = mats[fmt_key]
-            solver = make_solver(
-                mesh, mat, variant=c.variant, overlap=c.overlap,
-                tol=tol, maxiter=trial_iters,
-            )
-            b = np.ones(a_csr.shape[0])
-            bp = shard_vector(mesh, pad_vector(b, mat))
-            x0 = shard_vector(mesh, np.zeros_like(pad_vector(b, mat)))
-            with trace.capture() as tr:
-                res = solver(bp, x0)
-            jax.block_until_ready(res.x)
-            executions[c.exec_key] = (
-                tr, int(res.iters), float(res.rel_residual)
-            )
+            if nrhs > 1:
+                solver = make_block_solver(
+                    mesh, mat, overlap=c.overlap, tol=tol,
+                    maxiter=trial_iters,
+                )
+                Bp = pad_block(default_rhs_block(a_csr.shape[0], nrhs), mat)
+                bp = shard_vector(mesh, Bp)
+                x0 = shard_vector(mesh, np.zeros_like(Bp))
+                with trace.capture() as tr:
+                    res = solver(bp, x0)
+                jax.block_until_ready(res.x)
+                relres = float(np.max(np.asarray(res.rel_residual)))
+            else:
+                solver = make_solver(
+                    mesh, mat, variant=c.variant, overlap=c.overlap,
+                    tol=tol, maxiter=trial_iters,
+                )
+                b = np.ones(a_csr.shape[0])
+                bp = shard_vector(mesh, pad_vector(b, mat))
+                x0 = shard_vector(mesh, np.zeros_like(pad_vector(b, mat)))
+                with trace.capture() as tr:
+                    res = solver(bp, x0)
+                jax.block_until_ready(res.x)
+                relres = float(res.rel_residual)
+            executions[c.exec_key] = (tr, int(res.iters), relres)
         tr, iters, relres = executions[c.exec_key]
         iters_est = extrapolate_iters(iters, relres, tol, cap=maxiter_cap)
         led = trace.ledger_from_trace(

@@ -107,6 +107,27 @@ class SolveResult:
         return jnp.sqrt(self.rr / jnp.maximum(self.bb, 1e-300))
 
 
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("x", "iters", "iters_cols", "rr", "bb"),
+    meta_fields=(),
+)
+@dataclasses.dataclass(frozen=True)
+class BlockSolveResult:
+    """Result of a multi-RHS block solve (``make_block_solver``)."""
+
+    x: jax.Array  # (S, R, r) padded sharded solution block
+    iters: jax.Array  # scalar int — iterations until the LAST column converged
+    iters_cols: jax.Array  # (r,) iteration at which each column first converged
+    rr: jax.Array  # (r,) final per-column ||r_j||^2
+    bb: jax.Array  # (r,) per-column ||b_j||^2
+
+    @property
+    def rel_residual(self):
+        """(r,) per-column relative residuals."""
+        return jnp.sqrt(self.rr / jnp.maximum(self.bb, 1e-300))
+
+
 # ---------------------------------------------------------------------------
 # Per-shard solver bodies (inside shard_map)
 # ---------------------------------------------------------------------------
@@ -421,6 +442,78 @@ def _sstep_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, s, axis):
     return c[1], c[0], c[6], bb
 
 
+def _block_hs_body(A, B, X0, *, tol, maxiter, axis, ops):
+    """Breakdown-guarded block Hestenes–Stiefel CG for (R, r) RHS blocks.
+
+    The scalar recurrences become r×r Gram algebra: alpha/beta are small
+    matrix solves against the P'AP and R'R Grams, and the matrix is read
+    ONCE per iteration for all r right-hand sides (the SpMM interior).
+    Still 2 all-reduces/iter — each now carries r² scalars instead of 1.
+
+    Guard policy (see docs/solvers.md):
+      * deflation — a column whose residual has met its per-column target
+        is masked out of both Gram solves (its alpha/beta columns are
+        exactly zero, freezing x_j and r_j) and its search direction is
+        zeroed, so a converged system cannot re-pollute the block;
+      * ridge — the masked Grams get a trace-scaled ``eps`` ridge before
+        the solve, so (near-)linearly-dependent RHS columns degrade the
+        step slightly instead of producing NaNs (rank-deficient P'W).
+    """
+    dt = B.dtype
+    nrhs = B.shape[1]
+    eye = jnp.eye(nrhs, dtype=dt)
+
+    with trace.region("spmv"):
+        R_ = B - A(X0)
+    with trace.region("reductions"):
+        rr0_loc, bb_loc = ops.block_gram([(R_, R_), (B, B)])
+        d0 = fused_blocks([rr0_loc, jnp.diagonal(bb_loc)], axis)
+    RR = d0[: nrhs * nrhs].reshape(nrhs, nrhs)
+    bb = d0[nrhs * nrhs :]
+    tol2 = tol * tol * bb  # per-column targets
+
+    def _msolve(G, RHS, md):
+        # mask converged rows/cols out, keep the system well-posed with a
+        # unit diagonal there, and ridge against RHS-column collinearity
+        m2 = md[:, None] * md[None, :]
+        Gm = G * m2 + jnp.diag(1.0 - md)
+        ridge = jnp.finfo(dt).eps * jnp.trace(Gm) / nrhs
+        return jnp.linalg.solve(Gm + ridge * eye, RHS * m2)
+
+    def cond(c):
+        i, X, R_, Pb, RR, it_cols = c
+        return (i < maxiter) & jnp.any(jnp.diagonal(RR) > tol2)
+
+    def body(c):
+        i, X, R_, Pb, RR, it_cols = c
+        md = (jnp.diagonal(RR) > tol2).astype(dt)  # 1 = still active
+        with kd.ledger_section("iteration"):
+            with trace.region("spmv"):
+                W = A(Pb)  # matrix read once for all r columns
+            with trace.region("reductions"):
+                pw_loc = ops.block_gram([(Pb, W)])[0]
+                PW = fused_blocks([pw_loc], axis).reshape(nrhs, nrhs)  # AR 1
+                alpha = _msolve(PW, RR, md)
+                # X += P alpha ; R -= W alpha — ONE fused pass
+                X, R_ = ops.block_update2(alpha, Pb, X, -alpha, W, R_)
+                rr_loc = ops.block_gram([(R_, R_)])[0]
+                RRn = fused_blocks([rr_loc], axis).reshape(nrhs, nrhs)  # AR 2
+                beta = _msolve(RR, RRn, md)
+                Pb = ops.block_update(beta, Pb, R_, mask=md)
+        it_cols = jnp.where(
+            jnp.diagonal(RRn) <= tol2, jnp.minimum(it_cols, i + 1), it_cols
+        )
+        return (i + 1, X, R_, Pb, RRn, it_cols)
+
+    i0 = jnp.asarray(0, jnp.int32)
+    maxit = jnp.asarray(maxiter, jnp.int32)
+    it0 = jnp.where(
+        jnp.diagonal(RR) <= tol2, jnp.zeros_like(maxit), maxit
+    ).astype(jnp.int32)
+    c = lax.while_loop(cond, body, (i0, X0, R_, R_, RR, it0))
+    return c[1], c[0], c[5], jnp.diagonal(c[4]), bb
+
+
 _BODIES = {
     "hs": _hs_body,
     "fcg": _fcg_body,
@@ -648,3 +741,99 @@ def solve_cg(mesh, mat: DistMat, b_np, *, x0_np=None, **kw) -> SolveResult:
     )
     solver = make_solver(mesh, mat, **kw)
     return solver(shard_vector(mesh, bp), shard_vector(mesh, xp))
+
+
+def make_block_solver(
+    mesh,
+    mat: DistMat,
+    *,
+    precond: Preconditioner | None = None,
+    tol: float = 1e-8,
+    maxiter: int = 100,
+    axis: str = "shards",
+    kernels: str | None = None,
+    overlap: bool = True,
+):
+    """Build a jitted multi-RHS block solver: ``solve(B, X0) -> BlockSolveResult``.
+
+    ``B``/``X0`` are (S, R, r) padded sharded blocks (``partition.pad_block``
+    + ``spmv.shard_vector``). Runs the breakdown-guarded block-HS body: the
+    matrix is streamed from HBM once per iteration for all ``r`` right-hand
+    sides, converged columns are deflated, and each column's convergence is
+    declared against its own ``tol^2 * ||b_j||^2`` target.
+
+    Only the identity preconditioner is supported (the block recurrences
+    assume the unpreconditioned R'R Gram); pass ``precond=None``.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    if precond is not None and not precond.is_identity:
+        raise ValueError(
+            "block-CG supports the identity preconditioner only; "
+            "use make_solver(variant=...) per column for preconditioned solves"
+        )
+    ops = kd.ops_for(kernels)
+    kw = dict(tol=tol, maxiter=maxiter, axis=axis, ops=ops)
+    mat_specs = dist_specs(mat)
+
+    def fn(m, Bv, X0):
+        mb = local_block(m)
+        A = lambda v: spmv_shard(mb, v, axis, overlap=overlap)
+        with overlap_default(overlap):
+            X, iters, it_cols, rr, bb = _block_hs_body(A, Bv[0], X0[0], **kw)
+        return X[None], iters, it_cols, rr, bb
+
+    mapped = shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(
+            mat_specs,
+            P("shards", None, None),
+            P("shards", None, None),
+        ),
+        out_specs=(P("shards", None, None), P(), P(), P(), P()),
+        check_rep=False,  # jax 0.4.37: no replication rule for while_loop
+    )
+
+    @jax.jit
+    def solve(Bv, X0):
+        X, iters, it_cols, rr, bb = mapped(mat, Bv, X0)
+        return BlockSolveResult(
+            x=X, iters=iters, iters_cols=it_cols, rr=rr, bb=bb
+        )
+
+    return solve
+
+
+def default_rhs_block(n: int, nrhs: int, dtype="float64"):
+    """Deterministic (n, nrhs) RHS block with distinct, well-scaled columns.
+
+    Column 0 is the all-ones vector the single-RHS benchmarks use; later
+    columns add a small distinct sinusoid so the block is full-rank without
+    changing the magnitude scale (keeps iteration counts comparable)."""
+    import numpy as np
+
+    i = np.arange(n, dtype=np.float64)
+    cols = [
+        np.ones(n) + 0.1 * j * np.sin((j + 1) * np.pi * (i + 0.5) / n)
+        for j in range(nrhs)
+    ]
+    return np.stack(cols, axis=1).astype(dtype)
+
+
+def solve_block_cg(mesh, mat: DistMat, B_np, *, x0_np=None, **kw):
+    """Convenience host-level block solve: numpy (n, r) in, BlockSolveResult
+    out."""
+    import numpy as np
+
+    from repro.core.partition import pad_block
+    from repro.core.spmv import shard_vector
+
+    Bp = pad_block(np.asarray(B_np), mat)
+    Xp = (
+        pad_block(np.asarray(x0_np), mat)
+        if x0_np is not None
+        else np.zeros_like(Bp)
+    )
+    solver = make_block_solver(mesh, mat, **kw)
+    return solver(shard_vector(mesh, Bp), shard_vector(mesh, Xp))

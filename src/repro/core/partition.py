@@ -955,3 +955,23 @@ def unpad_vector(xp: np.ndarray, mat: DistMat) -> np.ndarray:
         lo, hi = mat.row_starts[s], mat.row_starts[s + 1]
         parts.append(xp[s, : hi - lo])
     return np.concatenate(parts)
+
+
+def pad_block(X: np.ndarray, mat: DistMat) -> np.ndarray:
+    """Global (n, r) RHS block -> (S, R, r) padded shard layout."""
+    S, R = mat.n_shards, mat.n_own_pad
+    out = np.zeros((S, R, X.shape[1]), X.dtype)
+    for s in range(S):
+        lo, hi = mat.row_starts[s], mat.row_starts[s + 1]
+        out[s, : hi - lo] = X[lo:hi]
+    return out
+
+
+def unpad_block(Xp: np.ndarray, mat: DistMat) -> np.ndarray:
+    """(S, R, r) padded shard layout -> global (n, r) block."""
+    Xp = np.asarray(Xp)
+    parts = []
+    for s in range(mat.n_shards):
+        lo, hi = mat.row_starts[s], mat.row_starts[s + 1]
+        parts.append(Xp[s, : hi - lo])
+    return np.concatenate(parts)

@@ -45,22 +45,34 @@ from repro.energy.accounting import OpCounts
 # ---------------------------------------------------------------------------
 
 
+def _nrhs(x: jax.Array) -> int:
+    """RHS count of a vector (n,) or column block (n, r) operand."""
+    return 1 if x.ndim == 1 else x.shape[1]
+
+
 def ell_matvec(data: jax.Array, col: jax.Array, x: jax.Array) -> jax.Array:
-    """y[r] = sum_k data[r,k] * x[col[r,k]].  Padding (data=0,col=0) is free."""
+    """y[r] = sum_k data[r,k] * x[col[r,k]].  Padding (data=0,col=0) is free.
+
+    ``x`` may be an (n, r) column block: the SpMM form reuses the gathered
+    ``x[col]`` tiles against the SAME streamed matrix pass, so matrix bytes
+    are paid once while vector bytes scale with ``r`` — recorded as such.
+    """
     # Executed-counts entry (trace-time only): matrix values + 4B indices
-    # streamed once, source vector read once, result written once.
+    # streamed once, source vector(s) read once, result(s) written once.
     b = data.dtype.itemsize
+    r = _nrhs(x)
+    mat_bytes = float(data.size * (b + col.dtype.itemsize))
     trace.record_op(
-        "ell_matvec",
+        "ell_matvec" if r == 1 else "ell_spmm",
         OpCounts(
-            flops=2.0 * data.size,
-            hbm_bytes=float(
-                data.size * (b + col.dtype.itemsize)
-                + x.size * b
-                + data.shape[0] * b
-            ),
+            flops=2.0 * data.size * r,
+            hbm_bytes=mat_bytes
+            + float(x.shape[0] + data.shape[0]) * r * b,
+            hbm_matrix_bytes=mat_bytes,
         ),
     )
+    if x.ndim == 2:
+        return jnp.einsum("rk,rkc->rc", data, x[col])
     return jnp.einsum("rk,rk->r", data, x[col])
 
 
@@ -76,20 +88,27 @@ def hyb_matvec(block: HYBBlock, x: jax.Array) -> jax.Array:
     """
     data, col = block.data, block.col
     b = data.dtype.itemsize
+    r = _nrhs(x)
+    mat_bytes = float(
+        data.size * (b + col.dtype.itemsize)
+        + block.tail_data.size * (b + 2 * block.tail_col.dtype.itemsize)
+    )
     trace.record_op(
-        "hyb_matvec",
+        "hyb_matvec" if r == 1 else "hyb_spmm",
         OpCounts(
-            flops=2.0 * (data.size + block.tail_data.size),
-            hbm_bytes=float(
-                data.size * (b + col.dtype.itemsize)
-                + block.tail_data.size * (b + 2 * block.tail_col.dtype.itemsize)
-                + x.size * b
-                + data.shape[0] * b
-            ),
+            flops=2.0 * (data.size + block.tail_data.size) * r,
+            hbm_bytes=mat_bytes
+            + float(x.shape[0] + data.shape[0]) * r * b,
+            hbm_matrix_bytes=mat_bytes,
         ),
     )
-    y = jnp.einsum("rk,rk->r", data, x[col])
-    return y.at[block.tail_row].add(block.tail_data * x[block.tail_col])
+    if x.ndim == 2:
+        y = jnp.einsum("rk,rkc->rc", data, x[col])
+        tail = block.tail_data[:, None] * x[block.tail_col]
+    else:
+        y = jnp.einsum("rk,rk->r", data, x[col])
+        tail = block.tail_data * x[block.tail_col]
+    return y.at[block.tail_row].add(tail)
 
 
 def interior_matvec(interior: InteriorBlock, x_own: jax.Array) -> jax.Array:
@@ -108,7 +127,9 @@ def interior_matvec(interior: InteriorBlock, x_own: jax.Array) -> jax.Array:
     if isinstance(interior, BCSRBlock):
         from repro.kernels import dispatch as kd
 
-        return kd.ops_for(None).bcsr_spmv(
+        op = kd.ops_for(None)
+        fn = op.bcsr_spmm if x_own.ndim == 2 else op.bcsr_spmv
+        return fn(
             interior.blocks,
             interior.bcol,
             x_own,
@@ -143,21 +164,26 @@ def boundary_matvec(
     """
     b = data_bnd.dtype.itemsize
     B = data_bnd.shape[0]
+    r = _nrhs(x_ext)
     if src_elems is None:
-        src_elems = min(x_ext.size, data_bnd.size)
+        src_elems = min(x_ext.shape[0], data_bnd.size)
     # entries + 4B indices streamed once, the touched source elements read
     # once, and the scatter-add's read-modify-write of the B result rows.
+    mat_bytes = float(data_bnd.size * (b + col_bnd.dtype.itemsize))
     trace.record_op(
-        "bnd_matvec",
+        "bnd_matvec" if r == 1 else "bnd_spmm",
         OpCounts(
-            flops=2.0 * data_bnd.size,
-            hbm_bytes=float(
-                data_bnd.size * (b + col_bnd.dtype.itemsize)
-                + min(int(src_elems), data_bnd.size) * b
-                + B * (2 * b + 4)
+            flops=2.0 * data_bnd.size * r,
+            hbm_bytes=mat_bytes
+            + float(
+                min(int(src_elems), data_bnd.size) * r * b
+                + B * (2 * b * r + 4)
             ),
+            hbm_matrix_bytes=mat_bytes,
         ),
     )
+    if x_ext.ndim == 2:
+        return jnp.einsum("bk,bkc->bc", data_bnd, x_ext[col_bnd])
     return jnp.einsum("bk,bk->b", data_bnd, x_ext[col_bnd])
 
 
@@ -169,12 +195,16 @@ def boundary_matvec(
 def _halo_exchange(
     x_own: jax.Array, send_sel: jax.Array, plan: HaloPlan, axis: str
 ) -> jax.Array:
-    """Ring halo exchange body (records counts in the *caller's* region)."""
-    b = x_own.dtype.itemsize
+    """Ring halo exchange body (records counts in the *caller's* region).
+
+    For an (R, r) column block the exchanged rows are r-wide, so the ICI
+    payload scales with the RHS count (same number of ppermute launches).
+    """
+    row_bytes = x_own.dtype.itemsize * _nrhs(x_own)
     trace.record_op(
         "halo_exchange",
         OpCounts(
-            ici_bytes=float(plan.collective_bytes_per_shard(b)),
+            ici_bytes=float(plan.collective_bytes_per_shard(row_bytes)),
             n_collectives=float(len(plan.shifts)),
         ),
     )
@@ -186,7 +216,7 @@ def _halo_exchange(
         bufs.append(lax.ppermute(buf, axis, plan.perm(k)))
         off += w
     if not bufs:
-        return jnp.zeros((0,), x_own.dtype)
+        return jnp.zeros((0,) + x_own.shape[1:], x_own.dtype)
     return jnp.concatenate(bufs)
 
 
@@ -217,7 +247,9 @@ def gather_ext(mat: DistMat, x_own: jax.Array, axis: str) -> jax.Array:
             "allgather",
             OpCounts(
                 ici_bytes=float(
-                    mat.plan.collective_bytes_per_shard(x_own.dtype.itemsize)
+                    mat.plan.collective_bytes_per_shard(
+                        x_own.dtype.itemsize * _nrhs(x_own)
+                    )
                 ),
                 n_collectives=1.0,
             ),
@@ -256,7 +288,9 @@ def spmv_shard(
     """y_own = (A @ x)_own via the interior/boundary row-block split.
 
     ``mat`` is the *local* DistMat block (leading shard axis squeezed; see
-    ``local_block``); ``x_own`` the local (R,) vector shard. ``overlap=None``
+    ``local_block``); ``x_own`` the local (R,) vector shard or an (R, r)
+    multi-RHS column block (the SpMM sweep: same schedule, matrix streamed
+    once, vector traffic and halo payload scaled by ``r``). ``overlap=None``
     resolves the scoped :func:`overlap_default` (True unless a solver set
     otherwise).
 
@@ -281,13 +315,13 @@ def spmv_shard(
             y = interior_matvec(mat.interior, x_own)
             x_ext = jnp.concatenate([x_own, halo])
             yb = boundary_matvec(
-                mat.data_ext, mat.col_ext, x_ext, src_elems=halo.size
+                mat.data_ext, mat.col_ext, x_ext, src_elems=halo.shape[0]
             )
             return y.at[mat.bnd_rows].add(yb)
     x_ext = gather_ext(mat, x_own, axis)
     y = interior_matvec(mat.interior, x_own)
     # ring: the boundary gathers touch only the received halo buffers
-    src = x_ext.size - x_own.size if ring else None
+    src = x_ext.shape[0] - x_own.shape[0] if ring else None
     yb = boundary_matvec(mat.data_ext, mat.col_ext, x_ext, src_elems=src)
     return y.at[mat.bnd_rows].add(yb)
 
@@ -314,9 +348,13 @@ def vec_spec():
 
 
 def shard_vector(mesh, xp) -> jax.Array:
-    """(S, R) padded host vector -> device array sharded over shards axis."""
-    sh = jax.sharding.NamedSharding(mesh, P("shards", None))
-    return jax.device_put(jnp.asarray(xp), sh)
+    """(S, R[, r]) padded host vector or RHS block -> device array sharded
+    over the shards axis (all trailing axes replicated)."""
+    xp = jnp.asarray(xp)
+    sh = jax.sharding.NamedSharding(
+        mesh, P("shards", *([None] * (xp.ndim - 1)))
+    )
+    return jax.device_put(xp, sh)
 
 
 def shard_matrix(mesh, mat: DistMat) -> DistMat:

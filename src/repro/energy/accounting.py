@@ -42,6 +42,11 @@ class OpCounts:
     hbm_bytes: float = 0.0
     ici_bytes: float = 0.0
     n_collectives: float = 0.0
+    # The subset of ``hbm_bytes`` that is matrix traffic (stored values +
+    # index layout). Multi-RHS SpMM pays this ONCE per sweep while the
+    # vector terms scale with the RHS count — tracking it separately is
+    # what lets the ledger gate the amortization.
+    hbm_matrix_bytes: float = 0.0
 
     def __add__(self, o: "OpCounts") -> "OpCounts":
         return OpCounts(
@@ -49,12 +54,13 @@ class OpCounts:
             self.hbm_bytes + o.hbm_bytes,
             self.ici_bytes + o.ici_bytes,
             self.n_collectives + o.n_collectives,
+            self.hbm_matrix_bytes + o.hbm_matrix_bytes,
         )
 
     def __mul__(self, k: float) -> "OpCounts":
         return OpCounts(
             self.flops * k, self.hbm_bytes * k, self.ici_bytes * k,
-            self.n_collectives * k,
+            self.n_collectives * k, self.hbm_matrix_bytes * k,
         )
 
     __rmul__ = __mul__
@@ -71,28 +77,34 @@ _VB = 8  # value bytes (f64); index bytes (4 B int32 local ids) live in the
 # per-format DistMat.stored_bytes accounting (roofline/format_model.py)
 
 
-def spmv_counts(mat: DistMat, overlap: bool = True) -> OpCounts:
-    """One distributed SpMV, per shard.
+def spmv_counts(mat: DistMat, overlap: bool = True, nrhs: int = 1) -> OpCounts:
+    """One distributed SpMV (or ``nrhs``-wide SpMM sweep), per shard.
 
     Matrix traffic is the *format-aware* stored-bytes term
     (``DistMat.stored_bytes``: values + the index layout of the interior
     format — per-entry 4 B ids for ELL, the prefix + (col, row)-pair tail
     for HYB, per-block ids for BCSR), so the modeled SpMV cost moves with
     the storage format exactly like the executed trace counts do.
+
+    With ``nrhs > 1`` the matrix term is paid ONCE while flops, vector
+    traffic, and halo payload scale with the RHS count — the amortization
+    the multi-RHS block solver is built to exploit.
     """
     S = max(mat.n_shards, 1)
+    r = max(int(nrhs), 1)
     slots = mat.nnz_stored / S
     n = mat.n_own_pad
     halo = mat.plan.ext_len - n if mat.plan.mode == "ring" else (
         n * (mat.n_shards - 1)
     )
-    flops = 2.0 * slots
-    hbm = mat.stored_bytes(_VB) / S + (n + halo) * _VB + n * _VB
-    ici = float(mat.plan.collective_bytes_per_shard(_VB))
+    flops = 2.0 * slots * r
+    mat_bytes = mat.stored_bytes(_VB) / S
+    hbm = mat_bytes + ((n + halo) + n) * _VB * r
+    ici = float(mat.plan.collective_bytes_per_shard(_VB)) * r
     n_coll = len(mat.plan.shifts) if mat.plan.mode == "ring" else 1.0
     if mat.n_shards == 1:
         ici, n_coll = 0.0, 0.0
-    return OpCounts(flops, hbm, ici, n_coll)
+    return OpCounts(flops, hbm, ici, n_coll, hbm_matrix_bytes=mat_bytes)
 
 
 def dot_counts(n: int, fused_terms: int = 1) -> OpCounts:

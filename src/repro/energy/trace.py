@@ -269,6 +269,30 @@ def fused_dots_counts(pairs, n_out: int | None = None) -> OpCounts:
     )
 
 
+def block_gram_counts(pairs) -> OpCounts:
+    """Local (r, r) Gram blocks for ``[(X, Y), ...]`` of (n, r) operands:
+    2·n·r² flops per pair; each *distinct* block streamed once (the block
+    kernel dedups repeated operands, order-sensitively)."""
+    n, r = pairs[0][0].shape
+    itemsize = pairs[0][0].dtype.itemsize
+    distinct = {id(a) for x, y in pairs for a in (x, y)}
+    return OpCounts(
+        flops=2.0 * n * r * r * len(pairs),
+        hbm_bytes=float(len(distinct)) * n * r * itemsize,
+    )
+
+
+def block_update_counts(n: int, r: int, itemsize: int,
+                        terms: int = 1) -> OpCounts:
+    """``terms`` block updates ``Y + X @ M`` in one pass: per term, stream
+    X and Y in and the result out (2·n·r² matmul flops + n·r adds); the
+    (r, r) coefficient blocks are noise next to the streamed blocks."""
+    return OpCounts(
+        flops=(2.0 * n * r * r + n * r) * terms,
+        hbm_bytes=3.0 * n * r * itemsize * terms,
+    )
+
+
 def pointwise_counts(n: int, itemsize: int, reads: int) -> OpCounts:
     """Elementwise vector work not covered by a dispatch op: ``reads``
     streamed operands + one written result, one flop per read."""
@@ -375,6 +399,7 @@ def ledger_from_trace(
             e,
             flops=c.flops,
             hbm_bytes=c.hbm_bytes,
+            hbm_matrix_bytes=c.hbm_matrix_bytes,
             ici_bytes=c.ici_bytes,
             n_collectives=c.n_collectives,
         )

@@ -40,12 +40,22 @@ from repro.energy import trace
 from repro.energy.accounting import OpCounts
 from repro.kernels import ref
 from repro.kernels.fused_reductions import (
+    _require_1d,
+    block_gram,
+    block_update,
+    block_update2,
     fused_axpy,
     fused_axpy2,
     fused_axpy2_dots,
     fused_dots_n,
 )
-from repro.kernels.spmv_bcsr import bcsr_finish_y, bcsr_prepare_x
+from repro.kernels.spmv_bcsr import (
+    bcsr_finish_y,
+    bcsr_finish_yb,
+    bcsr_prepare_x,
+    bcsr_prepare_xb,
+)
+from repro.kernels.spmv_bcsr import bcsr_spmm as _bcsr_spmm_kernel
 from repro.kernels.spmv_bcsr import bcsr_spmv as _bcsr_spmv_kernel
 from repro.kernels.spmv_stencil import (
     pick_bz,
@@ -57,11 +67,18 @@ BACKENDS = ("pallas", "interpret", "jnp")
 ENV_VAR = "REPRO_KERNELS"
 
 # Ops that stream full-length vectors exactly once per call (1 sweep each).
-VECTOR_OPS = ("axpy", "fused_axpy2", "fused_axpy2_dots", "fused_dots_n")
+# The block_* ops are the multi-RHS generalization: each call streams its
+# (n, r) operand blocks once, so one call is still one sweep (of n*r
+# elements per operand).
+VECTOR_OPS = (
+    "axpy", "fused_axpy2", "fused_axpy2_dots", "fused_dots_n",
+    "block_gram", "block_update", "block_update2",
+)
 # The SpMV is accounted separately (its traffic is the matrix term);
 # stencil_boundary is the overlap path's two-plane edge fix-up; bcsr_spmv
-# is the blocked interior matvec of the BCSR-format DistMat.
-SPMV_OPS = ("stencil_matvec", "stencil_boundary", "bcsr_spmv")
+# is the blocked interior matvec of the BCSR-format DistMat and bcsr_spmm
+# its multi-RHS sibling.
+SPMV_OPS = ("stencil_matvec", "stencil_boundary", "bcsr_spmv", "bcsr_spmm")
 
 _override: str | None = None
 
@@ -229,6 +246,7 @@ class OpSet:
         One fused HBM pass: 2n flops, 3n elements streamed (read x, y;
         write the result). Returns the (n,) updated vector.
         """
+        _require_1d("axpy", x, y)
         _record("axpy", _axpy_counts(x.size, x.dtype.itemsize))
         b = _pallas_mode(self.backend, x.dtype)
         if b == "jnp":
@@ -243,6 +261,7 @@ class OpSet:
         the inputs as given). Returns the pair of (n,) results; counts as a
         single HBM sweep of 6n streamed elements / 4n flops.
         """
+        _require_1d("fused_axpy2", x1, y1, x2, y2)
         _record("fused_axpy2", _axpy_counts(x1.size, x1.dtype.itemsize, 2))
         b = _pallas_mode(self.backend, x1.dtype)
         if b == "jnp":
@@ -258,6 +277,7 @@ class OpSet:
         while the operands are already streaming. Same HBM traffic as
         :meth:`fused_axpy2`, +2n flops.
         """
+        _require_1d("fused_axpy2_dots", x1, y1, x2, y2)
         n, ib = x1.size, x1.dtype.itemsize
         # two fused updates + the in-flight dot of the second output (no
         # extra HBM pass — the operands are already streaming).
@@ -279,12 +299,55 @@ class OpSet:
         ``u is r`` reads only {r, w}. Results are LOCAL partial sums — the
         caller packs them into a single ``lax.psum``.
         """
+        _require_1d("fused_dots_n", *[a for p in pairs for a in p])
         _record("fused_dots_n", trace.local_dots_counts(pairs))
         b = _pallas_mode(self.backend, pairs[0][0].dtype)
         if b == "jnp":
             return ref.fused_dots_n_ref(pairs)
         return fused_dots_n(pairs, chunk=self.chunk,
                             interpret=(b == "interpret"))
+
+    # -- multi-RHS block ops (1 HBM sweep each) -----------------------------
+
+    def block_gram(self, pairs):
+        """Local Gram blocks ``[Xᵀ @ Y, ...]`` for (n, r) pairs, ONE pass.
+
+        The block-CG reduction primitive: each distinct operand block is
+        streamed once, the (r, r) accumulators stay resident. Results are
+        LOCAL — callers pack them into a single psum (`fused_blocks`).
+        Order-sensitive (XᵀY != YᵀX), unlike the scalar dots.
+        """
+        _record("block_gram", trace.block_gram_counts(pairs))
+        b = _pallas_mode(self.backend, pairs[0][0].dtype)
+        if b == "jnp":
+            return ref.block_gram_ref(pairs)
+        return block_gram(pairs, interpret=(b == "interpret"))
+
+    def block_update(self, m, x, y, mask=None):
+        """``y * mask + x @ m`` for (n, r) blocks and an (r, r) coefficient
+        block; ``mask`` is an optional (r,) column scale (the deflation
+        mask) folded into the same pass. One sweep: read x, y; write o.
+        """
+        n, r = x.shape
+        _record("block_update", trace.block_update_counts(
+            n, r, x.dtype.itemsize))
+        b = _pallas_mode(self.backend, x.dtype)
+        if b == "jnp":
+            return ref.block_update_ref(m, x, y, mask)
+        return block_update(m, x, y, mask, chunk=self.chunk,
+                            interpret=(b == "interpret"))
+
+    def block_update2(self, a1, x1, y1, a2, x2, y2):
+        """``(y1 + x1 @ a1, y2 + x2 @ a2)`` — the block-CG X/R update pair
+        in ONE pass over all four (n, r) blocks."""
+        n, r = x1.shape
+        _record("block_update2", trace.block_update_counts(
+            n, r, x1.dtype.itemsize, terms=2))
+        b = _pallas_mode(self.backend, x1.dtype)
+        if b == "jnp":
+            return ref.block_update2_ref(a1, x1, y1, a2, x2, y2)
+        return block_update2(a1, x1, y1, a2, x2, y2, chunk=self.chunk,
+                             interpret=(b == "interpret"))
 
     # -- SpMV ---------------------------------------------------------------
 
@@ -332,16 +395,13 @@ class OpSet:
         """
         _, br, bc = blocks.shape
         b = x.dtype.itemsize
+        mat_bytes = float(blocks.size * b + bcol.size * bcol.dtype.itemsize)
         _record(
             "bcsr_spmv",
             OpCounts(
                 flops=2.0 * blocks.size,
-                hbm_bytes=float(
-                    blocks.size * b
-                    + bcol.size * bcol.dtype.itemsize
-                    + x.size * b
-                    + n_brows * br * b
-                ),
+                hbm_bytes=mat_bytes + float(x.size * b + n_brows * br * b),
+                hbm_matrix_bytes=mat_bytes,
             ),
         )
         backend_name = _pallas_mode(self.backend, x.dtype)
@@ -356,6 +416,37 @@ class OpSet:
                 interpret=(backend_name == "interpret"),
             )
         return bcsr_finish_y(y, flat, n_out)
+
+    def bcsr_spmm(self, blocks, bcol, x, *, n_brows, bpr, n_out=None):
+        """Multi-RHS :meth:`bcsr_spmv`: ``x`` is an (n, r) RHS block (or
+        the native (n_bcols, bc, r) tile layout). The matrix blocks and
+        ids are streamed ONCE while vector traffic scales with ``r`` — the
+        amortization the multi-RHS solver exists for, visible in the
+        recorded ``hbm_matrix_bytes``."""
+        _, br, bc = blocks.shape
+        r = x.shape[-1]
+        b = x.dtype.itemsize
+        mat_bytes = float(blocks.size * b + bcol.size * bcol.dtype.itemsize)
+        _record(
+            "bcsr_spmm",
+            OpCounts(
+                flops=2.0 * blocks.size * r,
+                hbm_bytes=mat_bytes + float(x.size * b + n_brows * br * r * b),
+                hbm_matrix_bytes=mat_bytes,
+            ),
+        )
+        backend_name = _pallas_mode(self.backend, x.dtype)
+        x, flat, n_out = bcsr_prepare_xb(
+            blocks, x, n_brows=n_brows, bpr=bpr, n_out=n_out
+        )
+        if backend_name == "jnp":
+            y = ref.bcsr_spmm_ref(blocks, bcol, x, n_brows, bpr)
+        else:
+            y = _bcsr_spmm_kernel(
+                blocks, bcol, x, n_brows=n_brows, bpr=bpr,
+                interpret=(backend_name == "interpret"),
+            )
+        return bcsr_finish_yb(y, flat, n_out)
 
     def stencil_boundary(self, x3, prev_halo, next_halo, *, stencil="7pt",
                          aniso=(1.0, 1.0, 1.0)):

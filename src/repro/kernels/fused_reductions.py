@@ -44,6 +44,19 @@ def _round_up(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m
 
 
+def _require_1d(op: str, *arrays):
+    """The fused vector kernels stream (n,) vectors; (n, r) RHS blocks have
+    their own one-pass kernels. Fail loudly instead of deep inside the
+    masked ragged-block reshape."""
+    for a in arrays:
+        if a.ndim != 1:
+            raise ValueError(
+                f"{op} expects 1-D (n,) vectors, got shape {a.shape}; "
+                "multi-RHS (n, r) column blocks go through the block "
+                "kernels block_gram / block_update / block_update2"
+            )
+
+
 def _chunking(n: int, chunk: int) -> tuple[int, int]:
     """(effective chunk, grid size): lane-aligned, ragged tail allowed."""
     chunk_eff = min(chunk, _round_up(n, 128))
@@ -96,6 +109,7 @@ def fused_dots_n(pairs, *, chunk: int = 65536, interpret: bool = False) -> jax.A
     are read once; identical pairs are multiplied once.
     """
     uniq, prods, out_map = _dedup_pairs(pairs)
+    _require_1d("fused_dots_n", *uniq)
     k = len(prods)
     (n,) = uniq[0].shape
     dt = uniq[0].dtype
@@ -141,6 +155,7 @@ def _axpy_kernel(a_ref, x_ref, y_ref, o_ref):
 
 def fused_axpy(a, x, y, *, chunk: int = 65536, interpret: bool = False):
     """a*x + y in one pass; ``a`` may be a traced scalar."""
+    _require_1d("fused_axpy", x, y)
     (n,) = x.shape
     chunk_eff, grid = _chunking(n, chunk)
     spec = pl.BlockSpec((chunk_eff,), lambda i: (i,))
@@ -163,6 +178,7 @@ def _axpy2_kernel(a_ref, x1_ref, y1_ref, x2_ref, y2_ref, o1_ref, o2_ref):
 def fused_axpy2(a1, x1, y1, a2, x2, y2, *, chunk: int = 65536,
                 interpret: bool = False):
     """(a1*x1 + y1, a2*x2 + y2) in one pass over all four vectors."""
+    _require_1d("fused_axpy2", x1, y1, x2, y2)
     (n,) = x1.shape
     chunk_eff, grid = _chunking(n, chunk)
     spec = pl.BlockSpec((chunk_eff,), lambda i: (i,))
@@ -185,6 +201,7 @@ def fused_axpy2_dots(a1, x1, y1, a2, x2, y2, *, chunk: int = 65536,
     d = (1,) LOCAL partial [o2 . o2] — the new-residual norm accumulated
     while the o2 chunk is still in VMEM.
     """
+    _require_1d("fused_axpy2_dots", x1, y1, x2, y2)
     (n,) = x1.shape
     chunk_eff, grid = _chunking(n, chunk)
     spec = pl.BlockSpec((chunk_eff,), lambda i: (i,))
@@ -213,6 +230,162 @@ def fused_axpy2_dots(a1, x1, y1, a2, x2, y2, *, chunk: int = 65536,
             jax.ShapeDtypeStruct((n,), x1.dtype),
             jax.ShapeDtypeStruct((1,), x1.dtype),
         ],
+        interpret=interpret,
+    )(av, x1, y1, x2, y2)
+
+
+# ---------------------------------------------------------------------------
+# Multi-RHS block kernels: (n, r) column blocks, one HBM pass each
+# ---------------------------------------------------------------------------
+#
+# The block-CG hot path works on (n, r) column blocks instead of (n,)
+# vectors. Same streaming discipline as above — every block is read once
+# per call — but the reduction outputs are small (r, r) Gram matrices and
+# the updates contract with (r, r) coefficient blocks:
+#
+# * ``block_gram``    — local Xᵀ·Y Gram blocks for a list of pairs, one
+#   pass over the distinct operands. The (r, r) accumulators live in a
+#   VMEM output block revisited at every grid step (index_map pins (0, 0)).
+# * ``block_update``  — Y·diag(mask) + X @ M: the P-update of block-CG,
+#   with the deflation column mask folded into the same pass.
+# * ``block_update2`` — two independent block updates (the X/R pair) in
+#   one pass over all four blocks.
+
+
+def _require_block(op: str, *arrays):
+    for a in arrays:
+        if a.ndim != 2:
+            raise ValueError(
+                f"{op} expects 2-D (n, r) column blocks, got shape {a.shape}"
+            )
+
+
+def _dedup_pairs_ordered(pairs):
+    """Like :func:`_dedup_pairs` but ORDER-SENSITIVE: XᵀY is the transpose
+    of YᵀX, not the same product, so Gram pairs must not be symmetrized."""
+    uniq: list = []
+    ids: dict[int, int] = {}
+
+    def idx(a):
+        if id(a) not in ids:
+            ids[id(a)] = len(uniq)
+            uniq.append(a)
+        return ids[id(a)]
+
+    out_map = []
+    prod_ids: dict[tuple[int, int], int] = {}
+    prods = []
+    for x, y in pairs:
+        key = (idx(x), idx(y))
+        if key not in prod_ids:
+            prod_ids[key] = len(prods)
+            prods.append(key)
+        out_map.append(prod_ids[key])
+    return uniq, tuple(prods), tuple(out_map)
+
+
+def block_gram(pairs, *, chunk: int = 1024, interpret: bool = False):
+    """Local Gram blocks ``[Xᵀ @ Y for (X, Y) in pairs]`` — ONE HBM pass.
+
+    Returns a list of (r, r) LOCAL Grams (callers psum once). Operands
+    shared between pairs are read once; identical ordered pairs are
+    multiplied once. The ragged tail is masked on every operand so no
+    out-of-range row can contribute.
+    """
+    uniq, prods, out_map = _dedup_pairs_ordered(pairs)
+    _require_block("block_gram", *uniq)
+    n, r = uniq[0].shape
+    dt = uniq[0].dtype
+    chunk_eff, grid = _chunking(n, chunk)
+    spec = pl.BlockSpec((chunk_eff, r), lambda i: (i, 0))
+    acc = pl.BlockSpec((r, r), lambda i: (0, 0))
+
+    def kernel(*refs):
+        ins, outs = refs[: len(uniq)], refs[len(uniq):]
+        i = pl.program_id(0)
+        for out_ref in outs:
+            @pl.when(i == 0)
+            def _init(out_ref=out_ref):
+                out_ref[...] = jnp.zeros_like(out_ref)
+
+        valid = _valid_mask(i, chunk_eff, n)
+        zero = jnp.zeros((), dt)
+        vals = [jnp.where(valid[:, None], t[...], zero) for t in ins]
+        for j, (a, b) in enumerate(prods):
+            outs[j][...] += jnp.dot(
+                vals[a].T, vals[b], preferred_element_type=dt
+            )
+
+    grams = pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[spec] * len(uniq),
+        out_specs=[acc] * len(prods),
+        out_shape=[jax.ShapeDtypeStruct((r, r), dt)] * len(prods),
+        interpret=interpret,
+    )(*uniq)
+    return [grams[m] for m in out_map]
+
+
+def block_update(m, x, y, mask=None, *, chunk: int = 1024,
+                 interpret: bool = False):
+    """``y * mask + x @ m`` in one pass; ``mask`` is an optional (r,)
+    column scale (the block-CG deflation mask), broadcast over rows."""
+    _require_block("block_update", x, y)
+    n, r = x.shape
+    chunk_eff, grid = _chunking(n, chunk)
+    spec = pl.BlockSpec((chunk_eff, r), lambda i: (i, 0))
+    mm = jnp.asarray(m, x.dtype).reshape(r, r)
+    kv = (jnp.ones((1, r), x.dtype) if mask is None
+          else jnp.asarray(mask, x.dtype).reshape(1, r))
+
+    def kernel(m_ref, k_ref, x_ref, y_ref, o_ref):
+        o_ref[...] = y_ref[...] * k_ref[...] + jnp.dot(
+            x_ref[...], m_ref[...], preferred_element_type=o_ref.dtype
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((r, r), lambda i: (0, 0)),
+            pl.BlockSpec((1, r), lambda i: (0, 0)),
+            spec, spec,
+        ],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n, r), x.dtype),
+        interpret=interpret,
+    )(mm, kv, x, y)
+
+
+def block_update2(a1, x1, y1, a2, x2, y2, *, chunk: int = 1024,
+                  interpret: bool = False):
+    """``(y1 + x1 @ a1, y2 + x2 @ a2)`` in one pass over all four blocks —
+    the block-CG X/R update (a2 = -alpha folds the sign into the
+    coefficient block)."""
+    _require_block("block_update2", x1, y1, x2, y2)
+    n, r = x1.shape
+    chunk_eff, grid = _chunking(n, chunk)
+    spec = pl.BlockSpec((chunk_eff, r), lambda i: (i, 0))
+    av = jnp.stack([
+        jnp.asarray(a1, x1.dtype).reshape(r, r),
+        jnp.asarray(a2, x1.dtype).reshape(r, r),
+    ])
+
+    def kernel(a_ref, x1_ref, y1_ref, x2_ref, y2_ref, o1_ref, o2_ref):
+        o1_ref[...] = y1_ref[...] + jnp.dot(
+            x1_ref[...], a_ref[0], preferred_element_type=o1_ref.dtype
+        )
+        o2_ref[...] = y2_ref[...] + jnp.dot(
+            x2_ref[...], a_ref[1], preferred_element_type=o2_ref.dtype
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((2, r, r), lambda i: (0, 0, 0))] + [spec] * 4,
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((n, r), x1.dtype)] * 2,
         interpret=interpret,
     )(av, x1, y1, x2, y2)
 

@@ -127,6 +127,20 @@ def bcsr_spmv_ref(
     return contrib.reshape(n_brows, bpr, -1).sum(axis=1)
 
 
+def bcsr_spmm_ref(
+    blocks: jax.Array,  # (n_brows * bpr, br, bc) uniform blocks-per-row
+    bcol: jax.Array,  # (n_brows * bpr,) int32 block-column ids
+    x: jax.Array,  # (n_bcols, bc, r) RHS block, blocked rows
+    n_brows: int,
+    bpr: int,
+) -> jax.Array:
+    """Multi-RHS sibling of :func:`bcsr_spmv_ref`: y (n_brows, br, r)."""
+    xb = x[bcol]  # (n_brows*bpr, bc, r)
+    contrib = jnp.einsum("nij,njc->nic", blocks, xb)
+    br = blocks.shape[1]
+    return contrib.reshape(n_brows, bpr, br, -1).sum(axis=1)
+
+
 # ---------------------------------------------------------------------------
 # Fused multi-dot reductions
 # ---------------------------------------------------------------------------
@@ -154,3 +168,26 @@ def fused_axpy2_dots_ref(a1, x1, y1, a2, x2, y2):
     o1 = a1 * x1 + y1
     o2 = a2 * x2 + y2
     return o1, o2, jnp.vdot(o2, o2)[None]
+
+
+# ---------------------------------------------------------------------------
+# Multi-RHS block kernels
+# ---------------------------------------------------------------------------
+
+
+def block_gram_ref(pairs) -> list:
+    """Local (r, r) Gram blocks [Xᵀ @ Y, ...] (kernel: one pass, dedup'd).
+
+    Order-sensitive: XᵀY is the transpose of YᵀX, not the same product.
+    """
+    return [x.T @ y for x, y in pairs]
+
+
+def block_update_ref(m, x: jax.Array, y: jax.Array, mask=None) -> jax.Array:
+    """y * mask + x @ m with ``mask`` an optional (r,) column scale."""
+    ym = y if mask is None else y * mask[None, :]
+    return ym + x @ m
+
+
+def block_update2_ref(a1, x1, y1, a2, x2, y2):
+    return y1 + x1 @ a1, y2 + x2 @ a2

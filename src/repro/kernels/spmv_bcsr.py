@@ -64,6 +64,56 @@ def bcsr_spmv(
     )(bcol, blocks, x)
 
 
+def _bcsr_spmm_kernel(bcol_ref, blocks_ref, x_ref, y_ref, *, bpr):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    blk = blocks_ref[0]  # (br, bc)
+    xv = x_ref[0]  # (bc, r)
+    y_ref[0] += jnp.dot(blk, xv, preferred_element_type=y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_brows", "bpr", "interpret"))
+def bcsr_spmm(
+    blocks: jax.Array,  # (n_brows * bpr, br, bc)
+    bcol: jax.Array,  # (n_brows * bpr,) int32
+    x: jax.Array,  # (n_bcols, bc, r) RHS block
+    *,
+    n_brows: int,
+    bpr: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Multi-RHS sibling of :func:`bcsr_spmv`: each (br, bc) matrix tile is
+    fetched ONCE and contracted against the full (bc, r) RHS tile, so matrix
+    traffic is amortized across the batch while the grid/prefetch schedule
+    stays identical to the SpMV kernel."""
+    _, br, bc = blocks.shape
+    r = x.shape[2]
+    kernel = functools.partial(_bcsr_spmm_kernel, bpr=bpr)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_brows, bpr),
+        in_specs=[
+            pl.BlockSpec(
+                (1, br, bc), lambda i, j, bcol_ref: (i * bpr + j, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, bc, r), lambda i, j, bcol_ref: (bcol_ref[i * bpr + j], 0, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, br, r), lambda i, j, bcol_ref: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_brows, br, r), x.dtype),
+        interpret=interpret,
+    )(bcol, blocks, x)
+
+
 def bcsr_prepare_x(blocks, x, *, n_brows: int, bpr: int, n_out: int | None):
     """Shared ragged-size guard for the uniform-layout BCSR SpMV callers.
 
@@ -98,6 +148,34 @@ def bcsr_finish_y(y, flat: bool, n_out: int | None):
     """Inverse of :func:`bcsr_prepare_x`'s flat handling: flatten and trim
     the (n_brows, br) kernel result back to the caller's vector length."""
     return y.reshape(-1)[:n_out] if flat else y
+
+
+def bcsr_prepare_xb(blocks, x, *, n_brows: int, bpr: int, n_out: int | None):
+    """:func:`bcsr_prepare_x` for (n, r) RHS blocks: zero-pads the row
+    dimension to the tile grid and reshapes to the kernel's native
+    (n_bcols, bc, r) layout. Native 3-D inputs pass through untouched."""
+    _, br, bc = blocks.shape
+    if blocks.shape[0] != n_brows * bpr:
+        raise ValueError(
+            f"blocks leading dim {blocks.shape[0]} != n_brows*bpr "
+            f"({n_brows}*{bpr}); pack with core.sparse.pack_bcsr"
+        )
+    flat = x.ndim == 2
+    if flat:
+        n, r = x.shape
+        n_bcols = -(-n // bc)
+        pad = n_bcols * bc - n
+        if pad:
+            x = jnp.concatenate([x, jnp.zeros((pad, r), x.dtype)], axis=0)
+        x = x.reshape(n_bcols, bc, r)
+        if n_out is None:
+            n_out = min(n, n_brows * br)
+    return x, flat, n_out
+
+
+def bcsr_finish_yb(y, flat: bool, n_out: int | None):
+    """Flatten/trim the (n_brows, br, r) SpMM result to (n_out, r)."""
+    return y.reshape(-1, y.shape[-1])[:n_out] if flat else y
 
 
 # Host-side packing lives with the other format conversions in

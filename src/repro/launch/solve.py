@@ -68,6 +68,12 @@ def parse_args(argv=None):
                          "only in frequency share one execution)")
     ap.add_argument("--tune-cache", default=None,
                     help="tuning-cache path (default runs/autotune/cache.json)")
+    ap.add_argument("--nrhs", type=int, default=1,
+                    help="right-hand sides per solve; > 1 runs the batched "
+                         "block-CG (core/cg.make_block_solver): the matrix "
+                         "is streamed once per iteration for all RHS "
+                         "columns (docs/solvers.md). Requires --op cg, "
+                         "--variant hs, no AMG")
     ap.add_argument("--amg", action="store_true", help="PCG with AMG")
     ap.add_argument("--amgx-analog", action="store_true",
                     help="PCG with the plain-aggregation (AmgX-analog) AMG")
@@ -94,8 +100,11 @@ def _write_ledger(path: str | None, payload: dict):
         return
     d = os.path.dirname(os.path.abspath(path))
     os.makedirs(d, exist_ok=True)
-    with open(path, "w") as f:
+    # atomic: a reader (or a killed run) never sees a half-written ledger
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
     print(f"ledger written: {path}")
 
 
@@ -114,8 +123,8 @@ def main(argv=None):
     import numpy as np
 
     from repro.core.baselines import make_naive_solver
-    from repro.core.cg import make_solver
-    from repro.core.partition import pad_vector, partition_csr
+    from repro.core.cg import default_rhs_block, make_block_solver, make_solver
+    from repro.core.partition import pad_block, pad_vector, partition_csr
     from repro.core.spmv import shard_matrix, shard_vector
     from repro.energy import trace
     from repro.energy.accounting import CostModel
@@ -136,7 +145,16 @@ def main(argv=None):
         name = args.problem
     n = a.shape[0]
     b = np.ones(n)
-    print(f"problem={name} n={n} nnz={a.nnz} shards={n_shards}")
+    nrhs = max(int(args.nrhs), 1)
+    if nrhs > 1 and (
+        args.op != "cg" or args.amg or args.amgx_analog
+        or args.variant != "hs"
+    ):
+        raise SystemExit(
+            "--nrhs > 1 runs the batched block-HS CG: requires --op cg, "
+            "--variant hs, and no --amg/--amgx-analog"
+        )
+    print(f"problem={name} n={n} nnz={a.nnz} shards={n_shards} nrhs={nrhs}")
 
     cost = CostModel()
     tune = None
@@ -154,7 +172,7 @@ def main(argv=None):
             a, mesh, n_shards, objective=args.objective,
             budget=args.tune_budget,
             cache_path=args.tune_cache or DEFAULT_PATH, tol=args.tol,
-            mats=tune_mats,
+            mats=tune_mats, nrhs=nrhs,
         )
         ch = tune.chosen
         args.fmt, args.block = ch.fmt, ch.block
@@ -169,7 +187,7 @@ def main(argv=None):
     payload = dict(
         schema=1, problem=name, n=int(n), nnz=int(a.nnz),
         shards=int(n_shards), op=args.op, overlap=bool(args.overlap),
-        format=args.fmt, solvers={},
+        format=args.fmt, nrhs=nrhs, solvers={},
     )
     if tune is not None:
         payload["autotune"] = tune.ledger_section()
@@ -214,7 +232,10 @@ def main(argv=None):
     need_naive = (
         mat.fmt == "ell"  # resolved format: --format auto may pick ELL
         if args.op == "spmv"
-        else not (args.amg or args.amgx_analog or args.autotune)
+        # the naive baseline is single-RHS by definition: the batched
+        # path's comparison legs are sequential nrhs=1 runs of this driver
+        # (benchmarks/multirhs_scaling.py)
+        else not (args.amg or args.amgx_analog or args.autotune or nrhs > 1)
     )
     matg = (
         shard_matrix(mesh, partition_csr(a, n_shards, force_allgather=True))
@@ -230,8 +251,13 @@ def main(argv=None):
     payload["interior_stored_bytes"] = int(mat.interior_stored_bytes())
     payload["stored_bytes"] = int(mat.stored_bytes())
 
-    bp = shard_vector(mesh, pad_vector(b, mat))
-    x0 = shard_vector(mesh, np.zeros_like(pad_vector(b, mat)))
+    if nrhs > 1:
+        Bpad = pad_block(default_rhs_block(n, nrhs), mat)
+        bp = shard_vector(mesh, Bpad)
+        x0 = shard_vector(mesh, np.zeros_like(Bpad))
+    else:
+        bp = shard_vector(mesh, pad_vector(b, mat))
+        x0 = shard_vector(mesh, np.zeros_like(pad_vector(b, mat)))
 
     if args.op == "spmv":
         from repro.core.baselines import make_naive_spmv
@@ -248,8 +274,11 @@ def main(argv=None):
             jax.block_until_ready(y)
             t0 = time.perf_counter()
             for _ in range(100):
-                y = fn(m, bp)
-            jax.block_until_ready(y)
+                # sync every launch: keeps exactly one execution in flight,
+                # so the per-run collective rendezvous can't interleave with
+                # the next launch's (XLA CPU spin-waits; on a starved host
+                # two in-flight ppermute rounds can livelock each other)
+                jax.block_until_ready(fn(m, bp))
             wall = (time.perf_counter() - t0) / 100
             overlap = args.overlap and label == "BCMGX-analog"
             led = trace.ledger_from_trace(
@@ -271,10 +300,16 @@ def main(argv=None):
         _write_ledger(args.ledger, payload)
         return
 
-    solver = make_solver(
-        mesh, mat, variant=args.variant, precond=precond,
-        tol=args.tol, maxiter=args.maxiter, overlap=args.overlap,
-    )
+    if nrhs > 1:
+        solver = make_block_solver(
+            mesh, mat, tol=args.tol, maxiter=args.maxiter,
+            overlap=args.overlap,
+        )
+    else:
+        solver = make_solver(
+            mesh, mat, variant=args.variant, precond=precond,
+            tol=args.tol, maxiter=args.maxiter, overlap=args.overlap,
+        )
     legs = [("BCMGX-analog" if not args.amgx_analog else "AmgX-analog",
              solver)]
     if need_naive:  # paper compares PCG against AmgX, not Ginkgo
@@ -288,12 +323,17 @@ def main(argv=None):
         with trace.capture() as tr:
             res = fn(bp, x0)  # warmup/compile: executed counts recorded
         jax.block_until_ready(res.x)
-        t0 = time.perf_counter()
+        walls = []
         for _ in range(args.repeats):
+            t0 = time.perf_counter()
             res = fn(bp, x0)
             jax.block_until_ready(res.x)
-        wall = (time.perf_counter() - t0) / args.repeats
+            walls.append(time.perf_counter() - t0)
+        wall = sum(walls) / len(walls)
         iters = int(res.iters)
+        # the batched leg converges each column independently: report the
+        # slowest column's residual (convergence of the whole batch)
+        relres = float(np.max(np.asarray(res.rel_residual)))
         # energy ledger: executed per-region counts x executed iterations
         led = trace.ledger_from_trace(
             tr, iters=iters, n_shards=n_shards, cost=cost,
@@ -301,19 +341,34 @@ def main(argv=None):
         )
         e = led["totals"]
         t_model = sum(r["time_s"] for r in led["regions"].values())
+        matrix_bytes = sum(
+            r.get("hbm_matrix_bytes", 0.0) for r in led["regions"].values()
+        )
         print(
-            f"{label:14s} iters={iters} relres={float(res.rel_residual):.2e} "
+            f"{label:14s} iters={iters} relres={relres:.2e} "
             f"wall={wall:.4f}s modeled={t_model:.4e}s "
             f"DE={e['de_total']:.4f}J peak={e['gpu_power_peak']:.0f}W "
             f"DEgpu={e['de_gpu']:.4f}J DEcpu={e['de_cpu']:.4f}J "
             f"setup={setup_time:.4f}s solve={wall:.4f}s"
         )
         _print_regions(label, led)
-        payload["solvers"][label] = dict(
+        entry = dict(
             led, wall_s=wall, modeled_s=t_model,
-            relres=float(res.rel_residual), setup_s=setup_time,
+            relres=relres, setup_s=setup_time,
             variant=args.variant if label == bcmgx_label else "naive",
+            # per-solve amortization view: a batched run is nrhs solves
+            nrhs=nrhs,
+            per_solve_modeled_s=t_model / nrhs,
+            per_solve_de_j=e["de_total"] / nrhs,
+            per_solve_spmv_matrix_bytes=matrix_bytes / nrhs,
+            wall_repeats_s=walls,
+            per_solve_wall_s=wall / nrhs,
         )
+        if nrhs > 1:
+            entry["iters_cols"] = [
+                int(v) for v in np.asarray(res.iters_cols)
+            ]
+        payload["solvers"][label] = entry
     _write_ledger(args.ledger, payload)
 
 

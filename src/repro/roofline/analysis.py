@@ -197,6 +197,14 @@ CG_HOTPATH = {
     "hs": {"unfused": (15, 6), "fused": (11, 3)},
     "fcg": {"unfused": (18, 5), "fused": (14, 3)},
     "pipecg": {"unfused": (22, 8), "fused": (20, 4)},
+    # multi-RHS block-HS (core/cg.py:_block_hs_body): streams are in n*r
+    # element units (pass nrhs to the traffic helpers below). Fused path:
+    # gram(P,W) reads 2 blocks + the fused X/R update reads 4 writes 2 +
+    # gram(R,R) reads 1 (R still hot is not assumed) + P update reads 2
+    # writes 1 = 12 streams in 4 kernel passes. Unfused op-by-op: 15
+    # streams / 7 passes (each gram, axpy-like update, and the mask its
+    # own pass).
+    "block_hs": {"unfused": (15, 7), "fused": (12, 4)},
 }
 
 # All-reduce phases per iteration and how many of them the variant issues
@@ -208,6 +216,10 @@ CG_COMM = {
     "hs": {"allreduces": 2, "hidden": 0},
     "fcg": {"allreduces": 1, "hidden": 0},
     "pipecg": {"allreduces": 1, "hidden": 1},
+    # block-HS keeps the scalar-HS latency structure (2 blocking
+    # all-reduces/iter) but each carries r^2 scalars — see
+    # cg_reduce_scalars(nrhs=...)
+    "block_hs": {"allreduces": 2, "hidden": 0},
 }
 
 
@@ -233,10 +245,12 @@ def cg_exposed_latency_s(
 
 
 def cg_vector_traffic(n: int, *, variant: str = "hs", fused: bool = True,
-                      dtype_bytes: int = 8) -> float:
-    """Vector-op HBM bytes per CG iteration outside the SpMV."""
+                      dtype_bytes: int = 8, nrhs: int = 1) -> float:
+    """Vector-op HBM bytes per CG iteration outside the SpMV. For the
+    multi-RHS ``block_hs`` body the streams are in n*r units — pass
+    ``nrhs``."""
     streams, _ = CG_HOTPATH[variant]["fused" if fused else "unfused"]
-    return float(streams) * n * dtype_bytes
+    return float(streams) * n * dtype_bytes * max(int(nrhs), 1)
 
 
 def cg_vector_sweeps(variant: str = "hs", *, fused: bool = True) -> int:
@@ -244,31 +258,42 @@ def cg_vector_sweeps(variant: str = "hs", *, fused: bool = True) -> int:
     return CG_HOTPATH[variant]["fused" if fused else "unfused"][1]
 
 
-def cg_vector_flops(n: int, *, variant: str = "hs", fused: bool = True) -> float:
+def cg_vector_flops(n: int, *, variant: str = "hs", fused: bool = True,
+                    nrhs: int = 1) -> float:
     """Vector-op FLOPs per CG iteration outside the SpMV: ~1 flop per
     streamed element (axpy: 2 flops / 3 streams, dot: 2 flops / 2 streams —
     the hot path sits between, and these ops are all memory-bound anyway).
+    The block body's Gram/update matmuls do ~2r flops per streamed element,
+    but at the r ≤ 16 the solver targets they remain memory-bound, so the
+    same per-stream pricing is kept (scaled by ``nrhs`` streamed elements).
     Used by the autotune pruning model (autotune/prune.py) to price a
     variant's compute engine next to :func:`cg_vector_traffic`'s memory
     term."""
     streams, _ = CG_HOTPATH[variant]["fused" if fused else "unfused"]
-    return float(streams) * n
+    return float(streams) * n * max(int(nrhs), 1)
 
 
-def cg_reduce_scalars(variant: str = "hs") -> int:
+def cg_reduce_scalars(variant: str = "hs", nrhs: int = 1) -> int:
     """Scalars carried by the variant's fused all-reduce(s) per iteration
     (hs: alpha pair + beta; fcg: one 3-term fusion; pipecg: the single
-    Ghysels–Vanroose fusion)."""
+    Ghysels–Vanroose fusion; block_hs: two r x r Grams)."""
+    if variant == "block_hs":
+        r = max(int(nrhs), 1)
+        return 2 * r * r
     return {"hs": 3, "fcg": 3, "pipecg": 3}[variant]
 
 
 def spmv_traffic(n: int, k: int, *, matfree: bool = False,
-                 dtype_bytes: int = 8, idx_bytes: int = 4) -> float:
+                 dtype_bytes: int = 8, idx_bytes: int = 4,
+                 nrhs: int = 1) -> float:
     """SpMV HBM bytes per application: ELL (values + local indices + vector
-    r/w) or matrix-free stencil (read x + write y only)."""
+    r/w) or matrix-free stencil (read x + write y only). With ``nrhs`` > 1
+    (the SpMM interior) the matrix term is paid ONCE while the vector r/w
+    term scales with r — the amortization the block solver is built on."""
+    r = max(int(nrhs), 1)
     if matfree:
-        return float(n) * 2 * dtype_bytes
-    return float(n) * (k * (dtype_bytes + idx_bytes) + 2 * dtype_bytes)
+        return float(n) * 2 * dtype_bytes * r
+    return float(n) * (k * (dtype_bytes + idx_bytes) + 2 * dtype_bytes * r)
 
 
 def cg_iteration_memory_s(

@@ -249,6 +249,29 @@ def test_fingerprint_shape():
     assert fp["row_nnz_q"][0] <= fp["row_nnz_q"][-1]
     assert fp["bandwidth"] > 0
     assert fp["shards"] == 2 and fp["objective"] == "edp"
+    assert fp["nrhs"] == 1  # default: single-RHS solve
+
+
+def test_cache_nrhs_never_collides(tmp_path):
+    """Regression: a decision tuned for an nrhs=1 solve must MISS for a
+    batched nrhs=32 solve (and vice versa) — the batched solve's matrix
+    traffic is amortized r ways, so the format/frequency trade-offs
+    differ and sharing an entry would serve the wrong config."""
+    cache = TuneCache(os.path.join(tmp_path, "cache.json"))
+    a = _poisson(6)
+    cost = CostModel()
+    fp1 = fingerprint(a, 2, "energy")
+    fp32 = fingerprint(a, 2, "energy", nrhs=32)
+    assert fp1["nrhs"] == 1 and fp32["nrhs"] == 32
+    assert cache.key(fp1, cost) != cache.key(fp32, cost)
+    cache.put(fp1, cost, Candidate("ell", "hs", True, 4, 1.0))
+    assert cache.get(fp32, cost) is None, (
+        "nrhs=32 lookup was served the nrhs=1 decision"
+    )
+    cache.put(fp32, cost, Candidate("hyb", "hs", True, 4, 0.6))
+    # both entries coexist; each nrhs resolves to its own decision
+    assert cache.get(fp1, cost) == Candidate("ell", "hs", True, 4, 1.0)
+    assert cache.get(fp32, cost) == Candidate("hyb", "hs", True, 4, 0.6)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,297 @@
+"""Multi-RHS SpMM + block-CG (PR 6).
+
+Three layers, mirroring how the batched path is built:
+
+* SpMM interiors — the distributed SpMV applied to an (n, r) block equals
+  the per-column SpMV for every interior format, on both kernel backends;
+* block kernels — block_gram / block_update / block_update2 against their
+  dense oracles (including the order-sensitive Gram dedup and the
+  deflation mask), and the 1-D-only guards on the scalar fused family;
+* block-CG — solutions agree with per-column single-RHS ``hs`` solves:
+  at f32 tolerances in-process, and to <= 1e-10 relative error on 1 and 4
+  shards in the x64 subprocess, overlap on and off; converged columns
+  deflate (a zero RHS column is a breakdown for unguarded block-CG and
+  must converge at iteration 0 here).
+
+NOTE: the main pytest process runs WITHOUT x64 (dry-run/smoke parity), so
+device math is f32 even for f64 inputs; the tight f64 agreement checks
+live in the ``run_multidevice`` subprocesses (JAX_ENABLE_X64=1 there).
+"""
+
+import numpy as np
+import pytest
+
+from tests.conftest import run_multidevice
+
+
+def _poisson(side, stencil="7pt"):
+    from repro.matrices.poisson import cube, poisson_scipy
+
+    p = cube(side, stencil)
+    return poisson_scipy(p, dtype=np.float64)
+
+
+def _block(n, r, seed=0):
+    return np.random.default_rng(seed).standard_normal((n, r))
+
+
+# ---------------------------------------------------------------------------
+# SpMM interiors: (n, r) block through the distributed SpMV == per-column
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", ["ell", "hyb", "bcsr"])
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_spmm_matches_per_column(single_mesh, fmt, backend):
+    from repro.core.partition import pad_block, partition_csr, unpad_block
+    from repro.core.spmv import make_spmv, shard_matrix, shard_vector
+    from repro.kernels import dispatch as kd
+
+    a = _poisson(6)
+    x = _block(a.shape[0], 5)
+    mat = shard_matrix(single_mesh, partition_csr(a, 1, fmt=fmt))
+    with kd.use_backend(backend):
+        spmv = make_spmv(single_mesh, mat)
+        xp = shard_vector(single_mesh, pad_block(x, mat))
+        y = unpad_block(np.asarray(spmv(mat, xp)), mat)
+    np.testing.assert_allclose(y, a @ x, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("overlap", [True, False])
+def test_spmm_multishard_overlap(overlap):
+    out = run_multidevice(
+        f"""
+import numpy as np
+from jax.sharding import Mesh
+import jax
+from repro.matrices.poisson import cube, poisson_scipy
+from repro.core.partition import pad_block, partition_csr, unpad_block
+from repro.core.spmv import make_spmv, shard_matrix, shard_vector
+
+mesh = Mesh(np.array(jax.devices()[:4]), ("shards",))
+p = cube(8, "27pt")
+a = poisson_scipy(p, dtype=np.float64)
+x = np.random.default_rng(1).standard_normal((p.n, 3))
+for fmt in ("ell", "hyb", "bcsr"):
+    mat = shard_matrix(mesh, partition_csr(a, 4, fmt=fmt))
+    spmv = make_spmv(mesh, mat, overlap={overlap})
+    xp = shard_vector(mesh, pad_block(x, mat))
+    y = unpad_block(np.asarray(spmv(mat, xp)), mat)
+    np.testing.assert_allclose(y, a @ x, rtol=1e-12, atol=1e-12)
+print("SPMM_OK")
+""",
+        n_devices=4,
+    )
+    assert "SPMM_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Block kernels vs oracles
+# ---------------------------------------------------------------------------
+
+
+def test_block_gram_matches_oracle_and_order():
+    import jax.numpy as jnp
+
+    from repro.kernels.fused_reductions import block_gram
+    from repro.kernels.ref import block_gram_ref
+
+    x = jnp.asarray(_block(137, 4, 1))
+    y = jnp.asarray(_block(137, 4, 2))
+    # XtY != YtX: the order-sensitive dedup must keep both directions
+    got = block_gram([(x, y), (y, x), (x, x)], chunk=64, interpret=True)
+    ref = block_gram_ref([(np.asarray(x), np.asarray(y)),
+                          (np.asarray(y), np.asarray(x)),
+                          (np.asarray(x), np.asarray(x))])
+    for g, r in zip(got, ref):
+        np.testing.assert_allclose(np.asarray(g), r, rtol=1e-4, atol=1e-4)
+    assert not np.allclose(np.asarray(got[0]), np.asarray(got[1]))
+    np.testing.assert_allclose(
+        np.asarray(got[0]), np.asarray(got[1]).T, rtol=1e-4, atol=1e-4
+    )
+
+
+def test_block_update_mask_freezes_columns():
+    import jax.numpy as jnp
+
+    from repro.kernels.fused_reductions import block_update
+    from repro.kernels.ref import block_update_ref
+
+    n, r = 97, 3
+    m = jnp.asarray(_block(r, r, 3))
+    x = jnp.asarray(_block(n, r, 4))
+    y = jnp.asarray(_block(n, r, 5))
+    mask = jnp.asarray([1.0, 0.0, 1.0])
+    got = np.asarray(block_update(m, x, y, mask=mask, chunk=32,
+                                  interpret=True))
+    ref = block_update_ref(np.asarray(m), np.asarray(x), np.asarray(y),
+                           mask=np.asarray(mask))
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    # the masked column carries no y contribution, only the x @ m term
+    np.testing.assert_allclose(
+        got[:, 1], (np.asarray(x) @ np.asarray(m))[:, 1], rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_block_update2_matches_oracle():
+    import jax.numpy as jnp
+
+    from repro.kernels.fused_reductions import block_update2
+    from repro.kernels.ref import block_update2_ref
+
+    n, r = 130, 4
+    a1, a2 = jnp.asarray(_block(r, r, 6)), jnp.asarray(_block(r, r, 7))
+    x1, y1 = jnp.asarray(_block(n, r, 8)), jnp.asarray(_block(n, r, 9))
+    x2, y2 = jnp.asarray(_block(n, r, 10)), jnp.asarray(_block(n, r, 11))
+    o1, o2 = block_update2(a1, x1, y1, a2, x2, y2, chunk=64, interpret=True)
+    r1, r2 = block_update2_ref(
+        np.asarray(a1), np.asarray(x1), np.asarray(y1),
+        np.asarray(a2), np.asarray(x2), np.asarray(y2),
+    )
+    np.testing.assert_allclose(np.asarray(o1), r1, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(o2), r2, rtol=1e-5, atol=1e-5)
+
+
+def test_scalar_fused_family_rejects_blocks():
+    """The 1-D fused family must refuse (n, r) operands by name, pointing
+    at the block kernels — silently flattening would corrupt the solve."""
+    import jax.numpy as jnp
+
+    from repro.kernels import dispatch as kd
+    from repro.kernels.fused_reductions import (
+        fused_axpy,
+        fused_axpy2,
+        fused_axpy2_dots,
+        fused_dots_n,
+    )
+
+    x2 = jnp.asarray(_block(50, 2))
+    x1 = jnp.asarray(np.ones(50))
+    a = jnp.asarray(0.5)
+    with pytest.raises(ValueError, match="block"):
+        fused_dots_n([(x2, x2)])
+    with pytest.raises(ValueError, match="block"):
+        fused_axpy(a, x2, x2)
+    with pytest.raises(ValueError, match="block"):
+        fused_axpy2(a, x2, x2, a, x1, x1)
+    with pytest.raises(ValueError, match="block"):
+        fused_axpy2_dots(a, x1, x1, a, x2, x2)
+    ops = kd.ops_for("jnp")
+    with pytest.raises(ValueError, match="block"):
+        ops.fused_dots_n([(x2, x2)])
+    with pytest.raises(ValueError, match="block"):
+        ops.axpy(a, x2, x2)
+    with pytest.raises(ValueError, match="block"):
+        ops.fused_axpy2(a, x2, x2, a, x1, x1)
+    with pytest.raises(ValueError, match="block"):
+        ops.fused_axpy2_dots(a, x2, x2, a, x2, x2)
+
+
+# ---------------------------------------------------------------------------
+# Block-CG vs per-column single-RHS solves
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("overlap", [True, False])
+@pytest.mark.parametrize("fmt", ["ell", "bcsr"])
+def test_block_cg_matches_per_column(single_mesh, fmt, overlap):
+    from repro.core.cg import default_rhs_block, solve_block_cg, solve_cg
+    from repro.core.partition import partition_csr, unpad_block, unpad_vector
+    from repro.core.spmv import shard_matrix
+
+    a = _poisson(8)
+    nrhs = 4
+    B = default_rhs_block(a.shape[0], nrhs)
+    B[:, 3] = B[:, 1]  # duplicate column: the ridge guard's breakdown case
+    mat = shard_matrix(single_mesh, partition_csr(a, 1, fmt=fmt))
+    res = solve_block_cg(
+        single_mesh, mat, B, tol=1e-5, maxiter=400, overlap=overlap
+    )
+    X = unpad_block(np.asarray(res.x), mat)
+    assert np.asarray(res.rel_residual).shape == (nrhs,)
+    for j in range(nrhs):
+        r1 = solve_cg(
+            single_mesh, mat, B[:, j], variant="hs", tol=1e-5,
+            maxiter=400, overlap=overlap,
+        )
+        x1 = unpad_vector(np.asarray(r1.x), mat)
+        err = np.linalg.norm(X[:, j] - x1) / np.linalg.norm(x1)
+        # f32 in-process: both solves stop at relres 1e-5, so they agree
+        # to ~cond(A)*tol; the <=1e-10 f64 check is the subprocess test
+        assert err <= 1e-3, (fmt, overlap, j, err)
+    # duplicated columns produced identical solutions (identical inputs
+    # walk identical recurrences — the ridge keeps the Grams nonsingular)
+    np.testing.assert_allclose(X[:, 3], X[:, 1], rtol=1e-12, atol=1e-12)
+
+
+def test_block_cg_multishard_matches_per_column():
+    out = run_multidevice(
+        """
+import numpy as np
+from jax.sharding import Mesh
+import jax
+from repro.matrices.poisson import cube, poisson_scipy
+from repro.core.partition import partition_csr, unpad_block, unpad_vector
+from repro.core.spmv import shard_matrix
+from repro.core.cg import default_rhs_block, solve_block_cg, solve_cg
+
+p = cube(10, "7pt")
+a = poisson_scipy(p, dtype=np.float64)
+B = default_rhs_block(p.n, 4)
+for shards in (1, 4):
+    mesh = Mesh(np.array(jax.devices()[:shards]), ("shards",))
+    mat = shard_matrix(mesh, partition_csr(a, shards))
+    for overlap in (True, False):
+        res = solve_block_cg(mesh, mat, B, tol=1e-10, maxiter=400,
+                             overlap=overlap)
+        X = unpad_block(np.asarray(res.x), mat)
+        for j in range(4):
+            r1 = solve_cg(mesh, mat, B[:, j], variant="hs", tol=1e-10,
+                          maxiter=400, overlap=overlap)
+            x1 = unpad_vector(np.asarray(r1.x), mat)
+            err = np.linalg.norm(X[:, j] - x1) / np.linalg.norm(x1)
+            assert err <= 1e-10, (shards, overlap, j, err)
+print("BLOCKCG_OK")
+""",
+        n_devices=4,
+    )
+    assert "BLOCKCG_OK" in out
+
+
+def test_block_cg_deflates_converged_columns(single_mesh):
+    """A zero RHS column is converged at iteration 0 — unguarded block-CG
+    would divide by a singular Gram; the deflation mask must freeze it."""
+    from repro.core.cg import default_rhs_block, solve_block_cg
+    from repro.core.partition import partition_csr, unpad_block
+    from repro.core.spmv import shard_matrix
+
+    a = _poisson(6)
+    B = default_rhs_block(a.shape[0], 3)
+    B[:, 1] = 0.0
+    mat = shard_matrix(single_mesh, partition_csr(a, 1))
+    res = solve_block_cg(single_mesh, mat, B, tol=1e-5, maxiter=300)
+    X = unpad_block(np.asarray(res.x), mat)
+    iters_cols = np.asarray(res.iters_cols)
+    assert iters_cols[1] == 0  # deflated immediately
+    np.testing.assert_allclose(X[:, 1], 0.0, atol=1e-14)  # frozen at x0
+    # the live columns still converged normally
+    assert (iters_cols[[0, 2]] > 0).all()
+    assert int(res.iters) == iters_cols.max()
+    rel = np.asarray(res.rel_residual)
+    assert (rel[[0, 2]] <= 1e-5 * 1.01).all()
+
+
+def test_block_cg_rejects_non_identity_precond(single_mesh):
+    from repro.core.cg import Preconditioner, make_block_solver
+    from repro.core.partition import partition_csr
+    from repro.core.spmv import shard_matrix
+
+    a = _poisson(6)
+    mat = shard_matrix(single_mesh, partition_csr(a, 1))
+    pre = Preconditioner(
+        data=(), specs=(), apply=lambda d, r, axis: r,
+        localize=None, is_identity=False,
+    )
+    with pytest.raises(ValueError, match="identity"):
+        make_block_solver(single_mesh, mat, precond=pre)
