@@ -27,16 +27,19 @@ import os
 import shutil
 import tempfile
 
-from benchmarks.common import run_solver_with_ledger, write_results
+from benchmarks.common import run_api_solve, write_results
+from repro.api import ProblemSpec, SolverConfig
 
 OBJECTIVES = ("energy", "time")
 
 
-def _problem_args(matrix: str, smoke: bool) -> list[str]:
+def _problem_spec(matrix: str, shards: int, smoke: bool) -> ProblemSpec:
     if matrix == "powerlaw":
-        return ["--problem", "powerlaw", "--scale", "0.01" if smoke else "0.05"]
+        return ProblemSpec(problem="powerlaw",
+                           scale=0.01 if smoke else 0.05, shards=shards)
     if matrix == "poisson7":
-        return ["--problem", "poisson7", "--side", "10" if smoke else "16"]
+        return ProblemSpec(problem="poisson7",
+                           side=10 if smoke else 16, shards=shards)
     raise ValueError(matrix)
 
 
@@ -54,12 +57,10 @@ def run_sweep(
     cache_dir = tempfile.mkdtemp(prefix="autotune_bench_")
     try:
         for matrix in matrices:
-            base = _problem_args(matrix, smoke) + [
-                "--shards", str(shards), "--maxiter", str(maxiter),
-            ]
+            spec = _problem_spec(matrix, shards, smoke)
             # untuned reference: ELL / hs / serialized / nominal frequency
-            _, ref = run_solver_with_ledger(
-                base + ["--no-overlap"], n_devices=shards
+            _, ref = run_api_solve(
+                spec, SolverConfig(overlap=False, maxiter=maxiter)
             )
             ref_e = _total_energy(ref)
             rows.append(
@@ -73,12 +74,12 @@ def run_sweep(
             )
             for objective in OBJECTIVES:
                 cache = os.path.join(cache_dir, f"{matrix}_{objective}.json")
-                tuned_args = base + [
-                    "--autotune", "--objective", objective,
-                    "--tune-budget", str(budget), "--tune-cache", cache,
-                ]
+                tuned = SolverConfig(
+                    autotune=True, objective=objective, tune_budget=budget,
+                    tune_cache=cache, maxiter=maxiter,
+                )
                 for invocation in (1, 2):
-                    _, led = run_solver_with_ledger(tuned_args, n_devices=shards)
+                    _, led = run_api_solve(spec, tuned)
                     at = led["autotune"]
                     sol = led["solvers"]["BCMGX-analog"]
                     tuned_e = _total_energy(led)

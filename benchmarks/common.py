@@ -74,10 +74,13 @@ def abstract_poisson_mat(side: int, stencil: str, n_shards: int, weak: bool,
     return p, mat
 
 
-def run_solver_subprocess(args: list[str], n_devices: int, timeout=1800) -> str:
+def run_solver_subprocess(
+    args: list[str], n_devices: int, timeout=1800,
+    module: str = "repro.launch.solve",
+) -> str:
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    cmd = [sys.executable, "-m", "repro.launch.solve", "--devices", str(n_devices)] + args
+    cmd = [sys.executable, "-m", module, "--devices", str(n_devices)] + args
     r = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout, env=env)
     if r.returncode != 0:
         raise RuntimeError(f"solve failed:\n{r.stdout[-2000:]}\n{r.stderr[-2000:]}")
@@ -85,11 +88,12 @@ def run_solver_subprocess(args: list[str], n_devices: int, timeout=1800) -> str:
 
 
 def run_solver_with_ledger(
-    args: list[str], n_devices: int, timeout=1800
+    args: list[str], n_devices: int, timeout=1800,
+    module: str = "repro.launch.solve",
 ) -> tuple[str, dict]:
-    """Run launch.solve with ``--ledger``; returns (stdout, ledger dict).
+    """Run a driver module with ``--ledger``; returns (stdout, ledger dict).
 
-    The ledger is the solver's executed-energy JSON (per-region counts and
+    The ledger is the driver's executed-energy JSON (per-region counts and
     energies integrated from the region trace — see energy/trace.py).
     """
     import tempfile
@@ -98,12 +102,40 @@ def run_solver_with_ledger(
     os.close(fd)
     try:
         out = run_solver_subprocess(
-            args + ["--ledger", path], n_devices, timeout=timeout
+            args + ["--ledger", path], n_devices, timeout=timeout,
+            module=module,
         )
         with open(path) as f:
             return out, json.load(f)
     finally:
         os.unlink(path)
+
+
+def run_api_solve(spec, config, n_devices=None, timeout=1800, ledger=True):
+    """Run :func:`repro.api.solve` in an ``n``-device subprocess.
+
+    The typed benchmark entry point: build a ``ProblemSpec`` + a
+    ``SolverConfig`` (validated at construction — a config that exists is a
+    config that runs) and get ``(stdout, ledger)`` back. A subprocess is
+    unavoidable because the device count must be fixed before jax
+    initializes; ``to_argv()`` is the round-trip-tested bridge onto the
+    ``launch.solve`` CLI adapter (tests/test_api.py), so the flags mean
+    exactly what the dataclasses say.
+    """
+    argv = spec.to_argv() + config.to_argv()
+    n = n_devices or spec.shards or 1
+    if ledger:
+        return run_solver_with_ledger(argv, n, timeout=timeout)
+    return run_solver_subprocess(argv, n, timeout=timeout), None
+
+
+def run_serve_with_ledger(
+    args: list[str], n_devices: int, timeout=1800
+) -> tuple[str, dict]:
+    """Run the serving engine (``launch.serve_solver``) with ``--ledger``."""
+    return run_solver_with_ledger(
+        args, n_devices, timeout=timeout, module="repro.launch.serve_solver"
+    )
 
 
 def parse_solver_output(out: str) -> dict:

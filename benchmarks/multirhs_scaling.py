@@ -10,8 +10,9 @@ so energy-per-solve falls toward the vector-bound floor as r grows.
   r in {1, 4, 8, 16} (spmv_counts(nrhs=...) + the block-HS hot-path row of
   roofline/analysis.CG_HOTPATH), reporting the per-solve matrix-byte
   amortization curve.
-* **executed** — real solves through ``launch.solve --ledger``:
-  ``--nrhs 8`` batched vs sequential ``--nrhs 1``, with per-repeat wall
+* **executed** — real solves through the typed API
+  (``ProblemSpec``/``SolverConfig`` → ``common.run_api_solve``):
+  ``nrhs=8`` batched vs sequential ``nrhs=1``, with per-repeat wall
   times (p50/p99 per-solve latency, solves/sec, GB/s — info side).
   HARD-ASSERTS the acceptance invariants:
 
@@ -39,9 +40,10 @@ import numpy as np
 from benchmarks.common import (
     SHARD_COUNTS,
     abstract_poisson_mat,
-    run_solver_with_ledger,
+    run_api_solve,
     write_results,
 )
+from repro.api import ProblemSpec, SolverConfig
 
 PAPER_SIDE = 405  # 7pt weak-scaled DOFs/device, as in cg_scaling
 RHS_COUNTS = (1, 4, 8, 16)
@@ -112,15 +114,11 @@ def executed(
 ) -> list[dict]:
     """Batched vs sequential solves; asserts the amortization invariants."""
     rows = []
-    base = [
-        "--problem", "poisson7", "--side", str(side), "--shards", str(shards),
-        "--maxiter", str(maxiter), "--tol", str(tol),
-        "--repeats", str(repeats),
-    ]
+    spec = ProblemSpec(problem="poisson7", side=side, shards=shards)
     legs = {}
     for r in (1, nrhs):
-        args = base + ["--nrhs", str(r)]
-        _, led = run_solver_with_ledger(args, n_devices=shards)
+        cfg = SolverConfig(nrhs=r, maxiter=maxiter, tol=tol, repeats=repeats)
+        _, led = run_api_solve(spec, cfg)
         sol = _solver_entry(led)
         walls = np.asarray(sol["wall_repeats_s"], dtype=float)
         per_solve_wall = walls / r
@@ -182,11 +180,12 @@ def executed(
     cache_dir = tempfile.mkdtemp(prefix="multirhs_bench_")
     try:
         cache = os.path.join(cache_dir, "cache.json")
-        tuned_args = base + [
-            "--nrhs", str(nrhs), "--autotune", "--objective", "energy",
-            "--tune-budget", "4", "--tune-cache", cache,
-        ]
-        _, tled = run_solver_with_ledger(tuned_args, n_devices=shards)
+        tuned = SolverConfig(
+            nrhs=nrhs, maxiter=maxiter, tol=tol, repeats=repeats,
+            autotune=True, objective="energy", tune_budget=4,
+            tune_cache=cache,
+        )
+        _, tled = run_api_solve(spec, tuned)
         at = tled["autotune"]
         tuned_e = _total_energy(tled)
         assert at["fingerprint"]["nrhs"] == nrhs, (

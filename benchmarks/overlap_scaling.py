@@ -22,9 +22,10 @@ from __future__ import annotations
 from benchmarks.common import (
     SHARD_COUNTS,
     abstract_poisson_mat,
-    run_solver_with_ledger,
+    run_api_solve,
     write_results,
 )
+from repro.api import ProblemSpec, SolverConfig
 
 PAPER_SIDE = 405  # 7pt weak-scaled DOFs/device, as in cg_scaling
 VARIANTS = ("hs", "pipecg")
@@ -79,17 +80,15 @@ def executed(
     """Real solves, overlap on vs off; asserts the exposure invariant."""
     rows = []
     for s in shards:
+        spec = ProblemSpec(problem="poisson7", side=side, shards=s)
         for variant in VARIANTS:
             got = {}
             for overlap in (True, False):
-                args = [
-                    "--problem", "poisson7", "--side", str(side),
-                    "--variant", variant, "--tol", str(tol),
-                    "--maxiter", str(maxiter), "--shards", str(s),
-                ]
-                if not overlap:
-                    args.append("--no-overlap")
-                _, led = run_solver_with_ledger(args, n_devices=s)
+                cfg = SolverConfig(
+                    variant=variant, overlap=overlap, tol=tol,
+                    maxiter=maxiter,
+                )
+                _, led = run_api_solve(spec, cfg)
                 sol = led["solvers"]["BCMGX-analog"]
                 tot = sol["totals"]
                 got[overlap] = tot

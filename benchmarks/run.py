@@ -30,6 +30,7 @@ BENCHES = [
     ("overlap_scaling (§Overlap)", "benchmarks.overlap_scaling"),
     ("multirhs_scaling (§MultiRHS)", "benchmarks.multirhs_scaling"),
     ("autotune_sweep (§Autotune)", "benchmarks.autotune_sweep"),
+    ("serve_bench (§Serving)", "benchmarks.serve_bench"),
     ("roofline_table (§Roofline)", "benchmarks.roofline_table"),
 ]
 
@@ -66,6 +67,7 @@ def main(argv=None):
             "benchmarks.pcg_scaling", "benchmarks.suitesparse",
             "benchmarks.hotpath_fusion", "benchmarks.overlap_scaling",
             "benchmarks.multirhs_scaling", "benchmarks.autotune_sweep",
+            "benchmarks.serve_bench",
         ):
             print(f"=== {title}: SKIPPED (--fast) ===\n")
             continue

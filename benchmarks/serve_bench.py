@@ -1,0 +1,208 @@
+"""Solve-as-a-service throughput/energy benchmark (§Serving).
+
+Drives ``launch.serve_solver`` (the warm-session serving engine over
+:class:`repro.api.SolverSession`) in subprocesses and HARD-ASSERTS the
+acceptance invariants of the serving path:
+
+a. **warm requests are free of setup**: every non-cold batch in the engine
+   ledger reports ``new_partitions == 0`` and ``new_tune_trials == 0``;
+   on the tuned leg the first invocation runs trials once (batch 0) and a
+   second invocation against the same tuning cache runs ZERO trials in the
+   whole process (``sessions[0].tune_trials == 0``, served from cache);
+b. **batching pays**: batched ``slots=8`` warm throughput (solves per
+   wall-second over warm batches) is >= 2x the sequential ``slots=1``
+   warm throughput — the SpMM reads the matrix once per iteration for all
+   columns — and warm throughput is >= 2x cold on the batched leg (the
+   compile/partition cost is paid once);
+c. **the energy ledger splits exactly**: per-request energies
+   (``energy.attribution.split_block_energy``) sum back to the engine
+   total within 5% (the split is exact by construction; 5% is the
+   acceptance tolerance).
+
+Gated: batch/session counters, iteration counts, modeled energies, the
+invariant booleans, tuned decisions. Info: everything wall-derived
+(throughput, p50/p99 latency).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+
+from benchmarks.common import run_serve_with_ledger, write_results
+
+
+def _serve_args(side: int, shards: int, requests: int, slots: int,
+                maxiter: int, extra=()) -> list[str]:
+    return [
+        "--problem", "poisson7", "--side", str(side),
+        "--shards", str(shards), "--requests", str(requests),
+        "--slots", str(slots), "--maxiter", str(maxiter),
+    ] + list(extra)
+
+
+def _leg_row(leg: str, led: dict) -> dict:
+    tot = led["totals"]
+    warm = [b for b in led["batches"] if not b["cold"]]
+    sess = led["sessions"][0]
+    tuned = led["tuned"][0] if led.get("tuned") else {}
+    split_ok = (
+        abs(tot["energy_requests_j"] - tot["energy_j"])
+        <= 0.05 * tot["energy_j"]
+    )
+    return dict(
+        figure="serve",
+        leg=leg,
+        slots=led["engine"]["slots"],
+        n_requests=led["n_requests"],
+        n_batches=led["n_batches"],
+        cold_batches=led["cold_batches"],
+        warm_batches=led["warm_batches"],
+        iters=tot["iters"],
+        energy_j=tot["energy_j"],
+        energy_per_solve_j=tot["energy_per_solve_j"],
+        session_partitions=sess["partitions"],
+        session_tune_trials=sess["tune_trials"],
+        warm_new_partitions=sum(b["new_partitions"] for b in warm),
+        warm_new_tune_trials=sum(b["new_tune_trials"] for b in warm),
+        energy_split_ok=split_ok,
+        chosen=tuned.get("tuned_label") or "-",
+        tune_cached=bool(tuned.get("tune_cached")),
+        # wall-derived (machine-dependent): routed to the info side
+        wall_s=tot["wall_s"],
+        solves_per_wall_sec=tot["solves_per_wall_sec"],
+        warm_solves_per_wall_sec=tot["warm_solves_per_wall_sec"],
+        cold_solves_per_wall_sec=tot["cold_solves_per_wall_sec"],
+        wall_latency_p50_s=tot["wall_latency_p50_s"],
+        wall_latency_p99_s=tot["wall_latency_p99_s"],
+    )
+
+
+def run(shards: int = 2, side: int = 12, requests: int = 16, slots: int = 8,
+        maxiter: int = 300, budget: int = 4) -> list[dict]:
+    rows, legs = [], {}
+
+    # untuned legs: batched width-`slots` admission vs sequential serving
+    for leg, slot_count in (("batched", slots), ("sequential", 1)):
+        _, led = run_serve_with_ledger(
+            _serve_args(side, shards, requests, slot_count, maxiter),
+            n_devices=shards,
+        )
+        legs[leg] = led
+        rows.append(_leg_row(leg, led))
+
+    # tuned leg, twice against one cache: invocation 1 pays the trials,
+    # invocation 2 must be served entirely from the persistent cache
+    cache_dir = tempfile.mkdtemp(prefix="serve_bench_")
+    try:
+        cache = os.path.join(cache_dir, "cache.json")
+        tuned_args = _serve_args(
+            side, shards, requests, slots, maxiter,
+            extra=["--autotune", "--objective", "energy",
+                   "--tune-budget", str(budget), "--tune-cache", cache],
+        )
+        for invocation in (1, 2):
+            _, led = run_serve_with_ledger(tuned_args, n_devices=shards)
+            legs[f"tuned{invocation}"] = led
+            rows.append(_leg_row(f"tuned{invocation}", led))
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+
+    # invariant (a): warm requests do zero partitions and zero trials
+    for leg, led in legs.items():
+        sess = led["sessions"][0]
+        assert sess["partitions"] >= 1 and led["cold_batches"] == 1, (
+            f"{leg}: expected exactly one cold batch over one partition, "
+            f"got {led['cold_batches']} cold / {sess['partitions']} "
+            f"partitions"
+        )
+        for b in led["batches"]:
+            if not b["cold"]:
+                assert b["new_partitions"] == 0, (
+                    f"{leg} batch {b['batch']}: warm batch re-partitioned "
+                    f"({b['new_partitions']} new partitions)"
+                )
+                assert b["new_tune_trials"] == 0, (
+                    f"{leg} batch {b['batch']}: warm batch ran "
+                    f"{b['new_tune_trials']} tuning trials"
+                )
+    t1, t2 = legs["tuned1"], legs["tuned2"]
+    assert t1["sessions"][0]["tune_trials"] > 0, (
+        "first tuned invocation ran no trials against a fresh cache"
+    )
+    assert t1["batches"][0]["new_tune_trials"] > 0, (
+        "tuned leg did not pay its trials in the cold batch"
+    )
+    assert not t1["tuned"][0]["tune_cached"], (
+        "first tuned invocation claims a cache hit on a fresh cache"
+    )
+    assert t2["sessions"][0]["tune_trials"] == 0, (
+        f"second tuned invocation still ran "
+        f"{t2['sessions'][0]['tune_trials']} trials: the tuning cache "
+        f"did not serve it"
+    )
+    assert t2["tuned"][0]["tune_cached"], (
+        "second tuned invocation missed the tuning cache"
+    )
+    assert t2["tuned"][0]["tuned_label"] == t1["tuned"][0]["tuned_label"], (
+        f"cache returned a different config: "
+        f"{t2['tuned'][0]['tuned_label']} vs {t1['tuned'][0]['tuned_label']}"
+    )
+
+    # invariant (b): batched warm throughput >= 2x sequential, and >= 2x
+    # the batched leg's own cold throughput
+    bt, sq = legs["batched"]["totals"], legs["sequential"]["totals"]
+    assert (
+        bt["warm_solves_per_wall_sec"]
+        >= 2.0 * sq["warm_solves_per_wall_sec"]
+    ), (
+        f"batched warm rate {bt['warm_solves_per_wall_sec']:.2f}/s is not "
+        f"2x the sequential warm rate "
+        f"{sq['warm_solves_per_wall_sec']:.2f}/s"
+    )
+    assert (
+        bt["warm_solves_per_wall_sec"]
+        >= 2.0 * bt["cold_solves_per_wall_sec"]
+    ), (
+        f"warm serving {bt['warm_solves_per_wall_sec']:.2f}/s is not 2x "
+        f"cold {bt['cold_solves_per_wall_sec']:.2f}/s"
+    )
+
+    # invariant (c): per-request energies sum to the engine total
+    for leg, led in legs.items():
+        tot = led["totals"]
+        err = abs(tot["energy_requests_j"] - tot["energy_j"])
+        assert err <= 0.05 * tot["energy_j"], (
+            f"{leg}: per-request energy sum {tot['energy_requests_j']} "
+            f"diverges from the engine total {tot['energy_j']}"
+        )
+    return rows
+
+
+def main(smoke: bool = False):
+    from benchmarks.common import set_smoke
+
+    set_smoke(smoke)
+    from repro.energy.report import fmt_table
+
+    rows = run(
+        shards=2,
+        side=10 if smoke else 12,
+        requests=16 if smoke else 24,
+        maxiter=200 if smoke else 300,
+    )
+    print(fmt_table(
+        rows,
+        [("leg", "leg"), ("slots", "slots"), ("n_requests", "reqs"),
+         ("warm_batches", "warm"), ("session_tune_trials", "trials"),
+         ("energy_per_solve_j", "J/solve"),
+         ("warm_solves_per_wall_sec", "warm solves/s"),
+         ("wall_latency_p99_s", "p99 (s)")],
+        "Serving engine: warm-session throughput and per-request energy",
+    ))
+    write_results("serve_bench", rows)
+
+
+if __name__ == "__main__":
+    main()

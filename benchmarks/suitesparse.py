@@ -20,10 +20,10 @@ from __future__ import annotations
 
 from benchmarks.common import (
     parse_solver_output,
-    run_solver_subprocess,
-    run_solver_with_ledger,
+    run_api_solve,
     write_results,
 )
+from repro.api import ProblemSpec, SolverConfig
 from repro.matrices.suitesparse import TABLE1
 
 MATRICES = list(TABLE1)
@@ -53,12 +53,9 @@ def run_formats(scale: float = 0.01, matrices=FORMAT_MATRICES,
     hbm = {}
     for name in matrices:
         for s in shards:
+            spec = ProblemSpec(problem=name, scale=scale, shards=s)
             for f in formats:
-                _, led = run_solver_with_ledger(
-                    ["--problem", name, "--scale", str(scale), "--op",
-                     "spmv", "--shards", str(s), "--format", f],
-                    n_devices=s,
-                )
+                _, led = run_api_solve(spec, SolverConfig(op="spmv", fmt=f))
                 solver = led["solvers"]["BCMGX-analog"]
                 interior[(name, s, f)] = led["interior_stored_bytes"]
                 hbm[(name, s, f)] = _spmv_hbm(solver)
@@ -102,13 +99,10 @@ def run(scale: float = 0.01, maxiter: int = 100, matrices=MATRICES,
     for op in ("spmv", "cg"):
         for name in matrices:
             for s in shards:
+                spec = ProblemSpec(problem=name, scale=scale, shards=s)
+                cfg = SolverConfig(op=op, maxiter=maxiter, tol=1e-8)
                 try:
-                    out = run_solver_subprocess(
-                        ["--problem", name, "--scale", str(scale), "--op", op,
-                         "--shards", str(s), "--maxiter", str(maxiter),
-                         "--tol", "1e-8"],
-                        n_devices=s,
-                    )
+                    out, _ = run_api_solve(spec, cfg, ledger=False)
                 except RuntimeError as e:  # pragma: no cover
                     rows.append(dict(table="7/8", op=op, matrix=name,
                                      n_shards=s, error=str(e)[:200]))

@@ -1,0 +1,80 @@
+"""Fingerprint-keyed pool of warm solver sessions.
+
+The tuning cache (``cache.py``) already identifies a problem by cheap
+host-side statistics (n, nnz, row-nnz quantiles, bandwidth) plus the shard
+count. The session pool reuses exactly that identity — minus the
+objective/nrhs axes, which select a *decision*, not a *matrix* — to map an
+incoming matrix to its warm :class:`repro.api.SolverSession`: the object
+holding the partitions, the tuning decision and the compiled solvers.
+
+Serving flow (``launch/serve_solver.py``): every request carries a host
+CSR matrix; :meth:`SessionPool.session` fingerprints it, and a hit means
+zero partitions and zero tuning trials for that request — the pool *is*
+the in-process warm path, the same way ``runs/autotune/cache.json`` is the
+cross-process one.
+"""
+
+from __future__ import annotations
+
+import json
+
+from repro.autotune.cache import fingerprint
+
+
+def session_key(a_csr, n_shards: int) -> str:
+    """Stable string identity of (matrix statistics, shard count)."""
+    fp = dict(fingerprint(a_csr, n_shards, "-"))
+    # decision axes, not matrix identity: one session serves every
+    # objective and batch width of the same partitioned matrix
+    fp.pop("objective", None)
+    fp.pop("nrhs", None)
+    return json.dumps(fp, sort_keys=True)
+
+
+class SessionPool:
+    """``session_key -> session`` with hit/miss accounting.
+
+    ``factory(a_csr, n_shards, key=...)`` builds a session on a miss; the
+    default is :class:`repro.api.SolverSession` (injected lazily to keep
+    this module import-light — it must not pull jax in at import time).
+    """
+
+    def __init__(self, factory=None):
+        self._factory = factory
+        self.sessions: dict[str, object] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self.sessions)
+
+    def session(self, a_csr, n_shards: int, **kw):
+        """The warm session for this matrix fingerprint (create on miss)."""
+        key = session_key(a_csr, n_shards)
+        s = self.sessions.get(key)
+        if s is not None:
+            self.hits += 1
+            return s
+        self.misses += 1
+        factory = self._factory
+        if factory is None:
+            from repro.api import SolverSession
+
+            factory = SolverSession
+        s = factory(a_csr, n_shards, key=key, **kw)
+        self.sessions[key] = s
+        return s
+
+    def get(self, key: str):
+        return self.sessions.get(key)
+
+    def stats(self) -> dict:
+        """JSON-ready pool counters (the serving ledger's ``pool`` block)."""
+        return dict(
+            sessions=len(self.sessions), hits=self.hits, misses=self.misses
+        )
+
+    def clear(self):
+        self.sessions.clear()
+        self.hits = 0
+        self.misses = 0

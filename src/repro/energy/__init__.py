@@ -21,6 +21,7 @@ hand-declared estimate.
 """
 
 from repro.energy.accounting import OpCounts, CostModel  # noqa: F401
+from repro.energy.attribution import split_block_energy  # noqa: F401
 from repro.energy.model import PowerModel  # noqa: F401
 from repro.energy.monitor import PowerMonitor  # noqa: F401
 from repro.energy import trace  # noqa: F401

@@ -1,0 +1,88 @@
+"""Per-request energy attribution for batched block solves.
+
+A width-``r`` block solve produces ONE energy ledger for the whole batch
+(``trace.ledger_from_trace`` at the executed iteration count). A serving
+engine admits ``r`` independent requests into that batch, so the paper's
+J/solve methodology needs the batch energy *split back* into per-request
+shares. The block solver's deflation bookkeeping makes a causal split
+possible: ``BlockSolveResult.iters_cols`` records the iteration at which
+each column converged — i.e. for how many iterations each request's column
+actually participated in the SpMM/Gram work.
+
+Attribution model (:func:`split_block_energy`):
+
+* the setup share (trace integrated at ``iters=0``: partition-resident
+  setup ops, RHS norms) is divided equally among the real requests;
+* each iteration's share ``(E_total - E_setup) / iters`` is divided
+  equally among the real columns still *unconverged* at that iteration —
+  a deflated column stops paying the moment it converges, exactly
+  mirroring the deflation mask freezing its updates;
+* padding columns (slots the admission queue filled with zero RHS; they
+  deflate at iteration 0) are charged nothing;
+* the float rounding residue is assigned to the last real request, so the
+  shares sum to the batch total *exactly* — the serving ledger's
+  per-request energies are a partition of the engine total, not an
+  approximation (asserted in ``tests/test_serve.py`` and gated within 5%
+  in ``benchmarks/serve_bench.py``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def split_block_energy(
+    total_j: float,
+    setup_j: float,
+    iters: int,
+    iters_cols,
+    real,
+) -> np.ndarray:
+    """Split one batch's energy across its ``r`` columns; see module doc.
+
+    Args:
+        total_j: batch ledger total at the executed iteration count.
+        setup_j: same trace integrated at ``iters=0`` (setup-only energy).
+        iters: executed iteration count (the last column's convergence).
+        iters_cols: (r,) per-column convergence iteration
+            (``BlockSolveResult.iters_cols``; unconverged columns carry
+            ``maxiter`` and are clipped to ``iters``).
+        real: (r,) bool mask — False marks padding columns (charged 0).
+
+    Returns:
+        (r,) float64 shares; ``shares[real].sum() == total_j`` exactly,
+        ``shares[~real] == 0``.
+    """
+    iters_cols = np.asarray(iters_cols, dtype=np.int64)
+    real = np.asarray(real, dtype=bool)
+    r = int(iters_cols.shape[0])
+    if real.shape != (r,):
+        raise ValueError(
+            f"real mask shape {real.shape} != iters_cols shape ({r},)"
+        )
+    shares = np.zeros(r, dtype=np.float64)
+    idx = np.flatnonzero(real)
+    if idx.size == 0:
+        return shares
+    total_j = float(total_j)
+    iters = int(iters)
+    if iters <= 0:
+        shares[idx] = total_j / idx.size
+    else:
+        cols = np.minimum(iters_cols, iters)
+        # active[i] = real columns still unconverged at iteration i
+        active = np.zeros(iters, dtype=np.float64)
+        for j in idx:
+            active[: cols[j]] += 1.0
+        active = np.maximum(active, 1.0)
+        e_iter = (total_j - float(setup_j)) / iters
+        cum = np.concatenate([[0.0], np.cumsum(e_iter / active)])
+        shares[idx] = float(setup_j) / idx.size + cum[cols[idx]]
+    # exact-sum correction: assign the float rounding residue to the last
+    # real column (a few ulps), iterating in case the re-sum rounds again
+    for _ in range(4):
+        resid = total_j - float(shares.sum())
+        if resid == 0.0:
+            break
+        shares[idx[-1]] += resid
+    return shares

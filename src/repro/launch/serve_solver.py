@@ -1,0 +1,465 @@
+"""Solve-as-a-service: a serving engine over warm ``SolverSession``s.
+
+    python -m repro.launch.serve_solver --problem poisson7 --side 12 \\
+        --shards 2 --devices 2 --requests 16 --slots 8 \\
+        --ledger runs/serve.json
+
+The paper's thesis — minimizing data movement cuts both time-to-solution
+and energy — pays off most when one partitioned, format-packed, autotuned
+matrix is reused across many incoming solves. This engine is that reuse
+loop:
+
+* **Sessions** — every request's matrix is fingerprinted into a
+  :class:`repro.autotune.pool.SessionPool`; the warm
+  :class:`repro.api.SolverSession` holds the partition(s), the autotune
+  decision (``--autotune``: first request for a fingerprint tunes — or
+  hits ``runs/autotune/cache.json`` — later requests are served with zero
+  trials) and the compiled shard_map solver. Repeat requests therefore do
+  **zero** partitions and **zero** tuning trials.
+* **Slot admission** — requests queue into ``--slots`` RHS slots per
+  session; a full queue flushes through the batched block-HS CG
+  (``core.cg.make_block_solver``) as one width-``r`` batch: the matrix is
+  streamed from HBM once per iteration for all columns. A ragged final
+  batch is padded with zero RHS columns, which the deflation mask retires
+  at iteration 0. ``--slots 1`` serves sequentially (the single-RHS
+  comparison leg).
+* **Per-request energy** — the batch's executed-energy ledger is split
+  back into per-request shares via the per-column convergence iterations
+  (``energy.attribution.split_block_energy``): a request pays its part of
+  the setup plus its share of every iteration its column was still
+  unconverged in. The shares sum to the engine total exactly.
+
+The engine ledger (``--ledger``) records per-request rows (iters, energy,
+wall latency), per-batch rows (cold/warm, new partitions, new tuning
+trials), per-session counters, and throughput totals (solves/sec, p50/p99
+latency, J/solve) — see docs/serving.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+from typing import Any, Callable
+
+
+@dataclasses.dataclass
+class Request:
+    """One admitted solve request (RHS vector against a session matrix)."""
+
+    rid: int
+    b: Any  # (n,) host RHS
+    t_submit: float
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """One served request: solution + its slice of the batch accounting."""
+
+    rid: int
+    batch: int
+    iters: int
+    relres: float
+    energy_j: float
+    latency_s: float
+    cold: bool  # True = this request paid the session's compile/tune cost
+    x: Any = None  # (n,) solution (not serialized into the ledger)
+
+    def to_ledger(self) -> dict:
+        return dict(
+            rid=self.rid, batch=self.batch, iters=self.iters,
+            relres=self.relres, energy_j=self.energy_j,
+            wall_latency_s=self.latency_s, cold=self.cold,
+        )
+
+
+class ServeEngine:
+    """Admit solve requests, flush them through warm batched solvers.
+
+    ``clock`` is injectable (a zero-argument callable) so the latency
+    statistics are deterministic under test; defaults to
+    ``time.perf_counter``. ``pool`` is injectable so engines can share
+    warm sessions; defaults to a fresh :class:`SessionPool`.
+    """
+
+    def __init__(
+        self,
+        n_shards: int,
+        *,
+        slots: int = 8,
+        fmt: str = "ell",
+        block: int = 4,
+        variant: str = "hs",
+        overlap: bool = True,
+        tol: float = 1e-8,
+        maxiter: int = 200,
+        autotune: bool = False,
+        objective: str = "energy",
+        tune_budget: int = 4,
+        tune_cache: str | None = None,
+        pool=None,
+        clock: Callable[[], float] | None = None,
+        verbose: bool = False,
+    ):
+        from repro.autotune.pool import SessionPool
+
+        self.n_shards = int(n_shards)
+        self.slots = max(int(slots), 1)
+        self.fmt, self.block = fmt, int(block)
+        self.variant, self.overlap = variant, bool(overlap)
+        self.tol, self.maxiter = float(tol), int(maxiter)
+        self.autotune = bool(autotune)
+        self.objective = objective
+        self.tune_budget = int(tune_budget)
+        self.tune_cache = tune_cache
+        self.pool = pool if pool is not None else SessionPool()
+        self.clock = clock if clock is not None else time.perf_counter
+        self.verbose = bool(verbose)
+        self.pending: dict[str, list[Request]] = {}
+        self.results: list[RequestResult] = []
+        self.batches: list[dict] = []
+        self._configs: dict[str, dict] = {}
+        self._next_rid = 0
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, a_csr, b) -> int:
+        """Admit one request; flushes its session's queue when slots fill.
+
+        Returns the request id (results carry it)."""
+        import numpy as np
+
+        sess = self.pool.session(a_csr, self.n_shards)
+        req = Request(
+            rid=self._next_rid, b=np.asarray(b, dtype=np.float64),
+            t_submit=self.clock(),
+        )
+        self._next_rid += 1
+        q = self.pending.setdefault(sess.key, [])
+        q.append(req)
+        if len(q) >= self.slots:
+            self._flush(sess)
+        return req.rid
+
+    def drain(self):
+        """Flush every partially-filled queue (ragged final batches)."""
+        for key in list(self.pending):
+            if self.pending[key]:
+                self._flush(self.pool.get(key))
+
+    def serve(self, a_csr, rhs_columns) -> list[RequestResult]:
+        """Submit a request per RHS column, drain, return results by rid."""
+        for b in rhs_columns:
+            self.submit(a_csr, b)
+        self.drain()
+        return sorted(self.results, key=lambda r: r.rid)
+
+    # -- session configuration (once per fingerprint) -----------------------
+
+    def _session_config(self, sess) -> dict:
+        """Resolve (fmt/variant/overlap/cost) for a session, tuning once.
+
+        With ``--autotune`` the first flush for a fingerprint runs the
+        two-stage autotuner at the engine's batch width (``nrhs=slots``) —
+        or hits the persistent tuning cache with zero trials — and every
+        later flush reuses the decision."""
+        cfg = self._configs.get(sess.key)
+        if cfg is not None:
+            return cfg
+        from repro.energy.accounting import CostModel
+
+        cost = CostModel()
+        fmt, block = self.fmt, self.block
+        variant, overlap = self.variant, self.overlap
+        tuned_label = None
+        cached = None
+        if self.autotune:
+            tune = sess.autotune(
+                objective=self.objective, budget=self.tune_budget,
+                cache_path=self.tune_cache, tol=self.tol, nrhs=self.slots,
+            )
+            ch = tune.chosen
+            fmt, block, overlap = ch.fmt, ch.block, ch.overlap
+            # the batched flush path is block-HS; the variant axis only
+            # matters for sequential (slots=1) serving
+            variant = ch.variant if self.slots == 1 else "hs"
+            cost = cost.at_freq(ch.freq)
+            tuned_label = ch.label
+            cached = tune.cached
+        cfg = dict(
+            fmt=fmt, block=block, variant=variant, overlap=overlap,
+            cost=cost, tuned_label=tuned_label, tune_cached=cached,
+        )
+        self._configs[sess.key] = cfg
+        return cfg
+
+    # -- flushing -----------------------------------------------------------
+
+    def _flush(self, sess):
+        import jax
+        import numpy as np
+
+        from repro.core.partition import pad_block, pad_vector, unpad_block, \
+            unpad_vector
+        from repro.core.spmv import shard_vector
+        from repro.energy import trace
+        from repro.energy.attribution import split_block_energy
+
+        reqs = self.pending.pop(sess.key, [])
+        if not reqs:
+            return
+        bi = len(self.batches)
+        t_start = self.clock()
+        p0, t0 = sess.partitions, sess.tune_trials
+        cfg = self._session_config(sess)
+        mat = sess.matrix(cfg["fmt"], cfg["block"])
+        r, k = self.slots, len(reqs)
+        h = sess.solver(
+            mat, nrhs=r, variant=cfg["variant"], tol=self.tol,
+            maxiter=self.maxiter, overlap=cfg["overlap"],
+        )
+        cold = not h.warmed
+        led_kw = dict(
+            n_shards=sess.n_shards, cost=cfg["cost"],
+            overlap=cfg["overlap"], idle_s=0.01,
+        )
+
+        if r == 1:
+            # sequential serving: each request is its own "batch of one"
+            req = reqs[0]
+            bp = shard_vector(sess.mesh, pad_vector(req.b, mat))
+            x0 = shard_vector(sess.mesh, np.zeros_like(pad_vector(req.b, mat)))
+            res = h.warm(bp, x0)
+            if res is None:
+                res = h.fn(bp, x0)
+                jax.block_until_ready(res.x)
+            t_done = self.clock()
+            iters = int(res.iters)
+            led = trace.ledger_from_trace(h.trace, iters=iters, **led_kw)
+            energies = [led["totals"]["de_total"]]
+            iters_out = [iters]
+            rel = [float(res.rel_residual)]
+            X = np.asarray(unpad_vector(np.asarray(res.x), mat))[:, None]
+            batch_energy = energies[0]
+            hbm_bytes = sum(
+                rg["hbm_bytes"] for rg in led["regions"].values()
+            )
+        else:
+            B = np.zeros((sess.n, r), dtype=np.float64)
+            for j, req in enumerate(reqs):
+                B[:, j] = req.b
+            Bp = pad_block(B, mat)
+            bp = shard_vector(sess.mesh, Bp)
+            x0 = shard_vector(sess.mesh, np.zeros_like(Bp))
+            res = h.warm(bp, x0)
+            if res is None:
+                res = h.fn(bp, x0)
+                jax.block_until_ready(res.x)
+            t_done = self.clock()
+            iters = int(res.iters)
+            led = trace.ledger_from_trace(h.trace, iters=iters, **led_kw)
+            led0 = trace.ledger_from_trace(h.trace, iters=0, **led_kw)
+            batch_energy = led["totals"]["de_total"]
+            it_cols = np.asarray(res.iters_cols)
+            real = np.arange(r) < k
+            shares = split_block_energy(
+                batch_energy, led0["totals"]["de_total"], iters, it_cols,
+                real,
+            )
+            energies = [float(shares[j]) for j in range(k)]
+            iters_out = [int(it_cols[j]) for j in range(k)]
+            rel = [float(v) for v in np.asarray(res.rel_residual)[:k]]
+            X = unpad_block(np.asarray(res.x), mat)
+            hbm_bytes = sum(
+                rg["hbm_bytes"] for rg in led["regions"].values()
+            )
+
+        for j, req in enumerate(reqs):
+            self.results.append(
+                RequestResult(
+                    rid=req.rid, batch=bi, iters=iters_out[j], relres=rel[j],
+                    energy_j=energies[j], latency_s=t_done - req.t_submit,
+                    cold=cold, x=X[:, j],
+                )
+            )
+        sess.solves += k
+        self.batches.append(
+            dict(
+                batch=bi, size=k, slots=r, cold=cold, iters=iters,
+                energy_j=batch_energy, hbm_bytes=float(hbm_bytes),
+                new_partitions=sess.partitions - p0,
+                new_tune_trials=sess.tune_trials - t0,
+                wall_s=t_done - t_start,
+            )
+        )
+        if self.verbose:
+            b = self.batches[-1]
+            print(
+                f"batch {bi}: size={k} cold={cold} iters={iters} "
+                f"DE={batch_energy:.4f}J wall={b['wall_s']:.4f}s "
+                f"new_partitions={b['new_partitions']} "
+                f"new_trials={b['new_tune_trials']}"
+            )
+
+    # -- reporting ----------------------------------------------------------
+
+    def ledger(self) -> dict:
+        """JSON-ready engine ledger; field reference in docs/serving.md."""
+        import numpy as np
+
+        results = sorted(self.results, key=lambda r: r.rid)
+        lat = np.array([r.latency_s for r in results], dtype=np.float64)
+        total_e = float(sum(b["energy_j"] for b in self.batches))
+        req_e = float(sum(r.energy_j for r in results))
+        warm_b = [b for b in self.batches if not b["cold"]]
+        cold_b = [b for b in self.batches if b["cold"]]
+
+        def rate(batches):
+            wall = sum(b["wall_s"] for b in batches)
+            n = sum(b["size"] for b in batches)
+            return (n / wall) if wall > 0 else 0.0
+
+        wall_total = float(sum(b["wall_s"] for b in self.batches))
+        n_req = len(results)
+        totals = dict(
+            energy_j=total_e,
+            energy_requests_j=req_e,
+            energy_per_solve_j=total_e / n_req if n_req else 0.0,
+            iters=int(sum(b["iters"] for b in self.batches)),
+            hbm_bytes=float(sum(b["hbm_bytes"] for b in self.batches)),
+            wall_s=wall_total,
+            solves_per_wall_sec=(n_req / wall_total) if wall_total else 0.0,
+            warm_solves_per_wall_sec=rate(warm_b),
+            cold_solves_per_wall_sec=rate(cold_b),
+            wall_latency_p50_s=(
+                float(np.percentile(lat, 50)) if n_req else 0.0
+            ),
+            wall_latency_p99_s=(
+                float(np.percentile(lat, 99)) if n_req else 0.0
+            ),
+        )
+        sessions = [
+            dict(index=i, **s.stats())
+            for i, s in enumerate(self.pool.sessions.values())
+        ]
+        return dict(
+            schema=1,
+            engine=dict(
+                slots=self.slots, shards=self.n_shards, format=self.fmt,
+                block=self.block, variant=self.variant,
+                overlap=self.overlap, tol=self.tol, maxiter=self.maxiter,
+                autotune=self.autotune, objective=self.objective,
+                tune_budget=self.tune_budget,
+            ),
+            n_requests=n_req,
+            n_batches=len(self.batches),
+            cold_batches=len(cold_b),
+            warm_batches=len(warm_b),
+            requests=[r.to_ledger() for r in results],
+            batches=list(self.batches),
+            sessions=sessions,
+            tuned=[
+                dict(
+                    index=i, tuned_label=c["tuned_label"],
+                    tune_cached=c["tune_cached"],
+                )
+                for i, c in enumerate(self._configs.values())
+            ],
+            pool=self.pool.stats(),
+            totals=totals,
+        )
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--problem", default="poisson7",
+                    help="poisson7 | poisson27 | <suitesparse name>")
+    ap.add_argument("--side", type=int, default=12)
+    ap.add_argument("--scale", type=float, default=0.01)
+    ap.add_argument("--shards", type=int, default=0, help="0 = all devices")
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=16,
+                    help="solve requests to stream through the engine "
+                         "(deterministic RHS columns: "
+                         "core.cg.default_rhs_block)")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="RHS slots per batch: a full queue flushes as one "
+                         "width-r block solve; 1 = sequential serving")
+    ap.add_argument("--format", dest="fmt", default="ell",
+                    choices=["auto", "ell", "hyb", "bcsr"])
+    ap.add_argument("--block", type=int, default=4)
+    ap.add_argument("--variant", default="hs",
+                    choices=["hs", "fcg", "pipecg", "sstep"],
+                    help="sequential-serving variant (batched flushes are "
+                         "block-HS)")
+    ap.add_argument("--no-overlap", dest="overlap", action="store_false")
+    ap.add_argument("--tol", type=float, default=1e-8)
+    ap.add_argument("--maxiter", type=int, default=200)
+    ap.add_argument("--autotune", action="store_true",
+                    help="first request per fingerprint tunes at the "
+                         "engine's batch width (or hits the tuning cache); "
+                         "later requests are served with zero trials")
+    ap.add_argument("--objective", default="energy",
+                    choices=["energy", "edp", "time"])
+    ap.add_argument("--tune-budget", type=int, default=4)
+    ap.add_argument("--tune-cache", default=None)
+    ap.add_argument("--ledger", default=None,
+                    help="write the engine ledger JSON here")
+    return ap.parse_args(argv)
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}"
+        )
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.api import ProblemSpec, write_ledger_json
+    from repro.core.cg import default_rhs_block
+
+    spec = ProblemSpec(
+        problem=args.problem, side=args.side, scale=args.scale,
+        shards=args.shards,
+    )
+    a, name = spec.load()
+    n = a.shape[0]
+    n_shards = args.shards or len(jax.devices())
+    print(
+        f"serve: problem={name} n={n} nnz={a.nnz} shards={n_shards} "
+        f"slots={args.slots} requests={args.requests}"
+    )
+    engine = ServeEngine(
+        n_shards, slots=args.slots, fmt=args.fmt, block=args.block,
+        variant=args.variant, overlap=args.overlap, tol=args.tol,
+        maxiter=args.maxiter, autotune=args.autotune,
+        objective=args.objective, tune_budget=args.tune_budget,
+        tune_cache=args.tune_cache, verbose=True,
+    )
+    B = default_rhs_block(n, max(int(args.requests), 1))
+    engine.serve(a, (B[:, j] for j in range(B.shape[1])))
+    led = engine.ledger()
+    tot = led["totals"]
+    print(
+        f"served {led['n_requests']} requests in {tot['wall_s']:.4f}s: "
+        f"{tot['solves_per_wall_sec']:.2f} solves/s "
+        f"(warm {tot['warm_solves_per_wall_sec']:.2f}, "
+        f"cold {tot['cold_solves_per_wall_sec']:.2f}) "
+        f"p50={tot['wall_latency_p50_s']:.4f}s "
+        f"p99={tot['wall_latency_p99_s']:.4f}s"
+    )
+    print(
+        f"energy: total={tot['energy_j']:.4f}J "
+        f"per-solve={tot['energy_per_solve_j']:.4f}J "
+        f"requests-sum={tot['energy_requests_j']:.4f}J"
+    )
+    write_ledger_json(args.ledger, led)
+
+
+if __name__ == "__main__":
+    main()

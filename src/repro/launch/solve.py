@@ -23,12 +23,22 @@ variant, overlap schedule, BCSR block, DVFS frequency) to the two-stage
 autotuner (``repro.autotune``, docs/autotune.md), minimizing
 ``--objective``; the decision lands in the ledger's ``autotune`` section
 and repeat solves are served from ``runs/autotune/cache.json``.
+
+This module is the *CLI adapter* over :mod:`repro.api`: ``parse_args``
+keeps every historical flag spelling (the deprecation shim — benchmarks
+and docs drive it unchanged), builds :class:`repro.api.ProblemSpec` +
+:class:`repro.api.SolverConfig`, and ``main`` delegates to
+:func:`repro.api.solve`, converting typed :class:`repro.api.ConfigError`
+back into the historical ``SystemExit`` messages. The driver body —
+partition/tune/compile through a warm ``SolverSession``, run under the
+energy trace, print, write the ledger — lives in ``api.solve``; repeat
+solves in one process (``--repeats``, or any caller holding the session)
+reuse one compiled solver instead of re-partitioning and re-tracing.
 """
 
 from __future__ import annotations
 
 import argparse
-import json
 import os
 
 
@@ -86,28 +96,6 @@ def parse_args(argv=None):
     return ap.parse_args(argv)
 
 
-def _print_regions(label: str, ledger: dict):
-    for name, r in sorted(ledger["regions"].items()):
-        print(
-            f"  [{label}] region {name:12s} t={r['time_s']:.4e}s "
-            f"DE={r['de_j']:.4f}J flops={r['flops']:.3e} "
-            f"hbm={r['hbm_bytes']:.3e}B ici={r['ici_bytes']:.3e}B"
-        )
-
-
-def _write_ledger(path: str | None, payload: dict):
-    if not path:
-        return
-    d = os.path.dirname(os.path.abspath(path))
-    os.makedirs(d, exist_ok=True)
-    # atomic: a reader (or a killed run) never sees a half-written ledger
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(payload, f, indent=1, sort_keys=True)
-    os.replace(tmp, path)
-    print(f"ledger written: {path}")
-
-
 def main(argv=None):
     args = parse_args(argv)
     if args.devices:
@@ -115,261 +103,16 @@ def main(argv=None):
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.devices}"
         )
-    import time
+    # import AFTER the device-count env var is set (api.solve imports jax)
+    from repro import api
 
-    import jax
-
-    jax.config.update("jax_enable_x64", True)
-    import numpy as np
-
-    from repro.core.baselines import make_naive_solver
-    from repro.core.cg import default_rhs_block, make_block_solver, make_solver
-    from repro.core.partition import pad_block, pad_vector, partition_csr
-    from repro.core.spmv import shard_matrix, shard_vector
-    from repro.energy import trace
-    from repro.energy.accounting import CostModel
-    from repro.launch.mesh import make_solver_mesh
-    from repro.matrices import poisson
-    from repro.matrices.suitesparse import load_or_generate
-
-    n_shards = args.shards or len(jax.devices())
-    mesh = make_solver_mesh(n_shards)
-
-    if args.problem.startswith("poisson"):
-        stencil = "7pt" if args.problem == "poisson7" else "27pt"
-        p = poisson.cube(args.side, stencil)
-        a = poisson.poisson_scipy(p)
-        name = f"{stencil}-{args.side}^3"
-    else:
-        a = load_or_generate(args.problem, scale=args.scale)
-        name = args.problem
-    n = a.shape[0]
-    b = np.ones(n)
-    nrhs = max(int(args.nrhs), 1)
-    if nrhs > 1 and (
-        args.op != "cg" or args.amg or args.amgx_analog
-        or args.variant != "hs"
-    ):
-        raise SystemExit(
-            "--nrhs > 1 runs the batched block-HS CG: requires --op cg, "
-            "--variant hs, and no --amg/--amgx-analog"
-        )
-    print(f"problem={name} n={n} nnz={a.nnz} shards={n_shards} nrhs={nrhs}")
-
-    cost = CostModel()
-    tune = None
-    tune_mats: dict = {}
-    if args.autotune:
-        if args.op != "cg" or args.amg or args.amgx_analog:
-            raise SystemExit(
-                "--autotune tunes the unpreconditioned CG path "
-                "(--op cg without --amg/--amgx-analog)"
-            )
-        from repro.autotune import DEFAULT_PATH
-        from repro.autotune import autotune as run_autotune
-
-        tune = run_autotune(
-            a, mesh, n_shards, objective=args.objective,
-            budget=args.tune_budget,
-            cache_path=args.tune_cache or DEFAULT_PATH, tol=args.tol,
-            mats=tune_mats, nrhs=nrhs,
-        )
-        ch = tune.chosen
-        args.fmt, args.block = ch.fmt, ch.block
-        args.variant, args.overlap = ch.variant, ch.overlap
-        cost = cost.at_freq(ch.freq)
-        print(
-            f"autotune: objective={tune.objective} chosen={ch.label} "
-            f"cached={tune.cached} trialed={tune.candidates_trialed} "
-            f"(space {tune.candidates_total})"
-        )
-
-    payload = dict(
-        schema=1, problem=name, n=int(n), nnz=int(a.nnz),
-        shards=int(n_shards), op=args.op, overlap=bool(args.overlap),
-        format=args.fmt, nrhs=nrhs, solvers={},
-    )
-    if tune is not None:
-        payload["autotune"] = tune.ledger_section()
-
-    precond = None
-    amg_info = None
-    setup_time = 0.0
-    if args.amg or args.amgx_analog:
-        from repro.core.amg import make_amg_preconditioner
-
-        t0 = time.perf_counter()
-        precond, amg_info = make_amg_preconditioner(
-            a, n_shards, amgx_analog=args.amgx_analog
-        )
-        setup_time = time.perf_counter() - t0
-        print(
-            f"AMG: {amg_info.n_levels} levels rows={amg_info.level_rows} "
-            f"opcx={amg_info.operator_complexity:.2f} setup={setup_time:.4f}s"
-        )
-        payload["amg"] = dict(
-            n_levels=amg_info.n_levels,
-            level_rows=list(amg_info.level_rows),
-            level_nnz=list(amg_info.level_nnz),
-            operator_complexity=amg_info.operator_complexity,
-        )
-
-    # The autotune trials already partitioned the winner's format — reuse
-    # that sharded DistMat instead of re-packing it.
-    mat = tune_mats.get((args.fmt, args.block))
-    if mat is None:
-        mat = shard_matrix(
-            mesh,
-            partition_csr(
-                a, n_shards, fmt=args.fmt, block=(args.block, args.block)
-            ),
-        )
-    # The Ginkgo-analog baseline keeps the flat ELL layout by definition;
-    # only build its (expensive) padded-global partition when a naive leg
-    # will actually run — the format sweep (--format != ell), the AMG
-    # comparisons, and the tuned path (whose comparison legs are the
-    # autotune trials themselves) never consume it.
-    need_naive = (
-        mat.fmt == "ell"  # resolved format: --format auto may pick ELL
-        if args.op == "spmv"
-        # the naive baseline is single-RHS by definition: the batched
-        # path's comparison legs are sequential nrhs=1 runs of this driver
-        # (benchmarks/multirhs_scaling.py)
-        else not (args.amg or args.amgx_analog or args.autotune or nrhs > 1)
-    )
-    matg = (
-        shard_matrix(mesh, partition_csr(a, n_shards, force_allgather=True))
-        if need_naive
-        else None
-    )
-    print(
-        f"format={mat.fmt} (requested {args.fmt}) "
-        f"interior_bytes={mat.interior_stored_bytes()} "
-        f"stored_bytes={mat.stored_bytes()}"
-    )
-    payload["resolved_format"] = mat.fmt
-    payload["interior_stored_bytes"] = int(mat.interior_stored_bytes())
-    payload["stored_bytes"] = int(mat.stored_bytes())
-
-    if nrhs > 1:
-        Bpad = pad_block(default_rhs_block(n, nrhs), mat)
-        bp = shard_vector(mesh, Bpad)
-        x0 = shard_vector(mesh, np.zeros_like(Bpad))
-    else:
-        bp = shard_vector(mesh, pad_vector(b, mat))
-        x0 = shard_vector(mesh, np.zeros_like(pad_vector(b, mat)))
-
-    if args.op == "spmv":
-        from repro.core.baselines import make_naive_spmv
-        from repro.core.spmv import make_spmv
-
-        legs = [
-            ("BCMGX-analog", mat, make_spmv(mesh, mat, overlap=args.overlap)),
-        ]
-        if need_naive:
-            legs.append(("Ginkgo-analog", matg, make_naive_spmv(mesh, matg)))
-        for label, m, fn in legs:
-            with trace.capture() as tr:
-                y = fn(m, bp)  # compile: executed counts recorded
-            jax.block_until_ready(y)
-            t0 = time.perf_counter()
-            for _ in range(100):
-                # sync every launch: keeps exactly one execution in flight,
-                # so the per-run collective rendezvous can't interleave with
-                # the next launch's (XLA CPU spin-waits; on a starved host
-                # two in-flight ppermute rounds can livelock each other)
-                jax.block_until_ready(fn(m, bp))
-            wall = (time.perf_counter() - t0) / 100
-            overlap = args.overlap and label == "BCMGX-analog"
-            led = trace.ledger_from_trace(
-                tr, iters=0, n_shards=n_shards, cost=cost, overlap=overlap,
-                idle_s=0.01, setup_repeats=100,
-            )
-            e = led["totals"]
-            t_model = sum(r["time_s"] for r in led["regions"].values())
-            print(
-                f"{label:14s} iters=100 relres=0.0e+00 "
-                f"wall={wall:.6f}s modeled={t_model/100:.4e}s "
-                f"DE={e['de_total']:.4f}J peak={e['gpu_power_peak']:.0f}W "
-                f"DEgpu={e['de_gpu']:.4f}J DEcpu={e['de_cpu']:.4f}J"
-            )
-            _print_regions(label, led)
-            payload["solvers"][label] = dict(
-                led, wall_s=wall, modeled_s=t_model / 100
-            )
-        _write_ledger(args.ledger, payload)
-        return
-
-    if nrhs > 1:
-        solver = make_block_solver(
-            mesh, mat, tol=args.tol, maxiter=args.maxiter,
-            overlap=args.overlap,
-        )
-    else:
-        solver = make_solver(
-            mesh, mat, variant=args.variant, precond=precond,
-            tol=args.tol, maxiter=args.maxiter, overlap=args.overlap,
-        )
-    legs = [("BCMGX-analog" if not args.amgx_analog else "AmgX-analog",
-             solver)]
-    if need_naive:  # paper compares PCG against AmgX, not Ginkgo
-        legs.append(
-            ("Ginkgo-analog",
-             make_naive_solver(mesh, matg, tol=args.tol,
-                               maxiter=args.maxiter))
-        )
-    bcmgx_label = legs[0][0]
-    for label, fn in legs:
-        with trace.capture() as tr:
-            res = fn(bp, x0)  # warmup/compile: executed counts recorded
-        jax.block_until_ready(res.x)
-        walls = []
-        for _ in range(args.repeats):
-            t0 = time.perf_counter()
-            res = fn(bp, x0)
-            jax.block_until_ready(res.x)
-            walls.append(time.perf_counter() - t0)
-        wall = sum(walls) / len(walls)
-        iters = int(res.iters)
-        # the batched leg converges each column independently: report the
-        # slowest column's residual (convergence of the whole batch)
-        relres = float(np.max(np.asarray(res.rel_residual)))
-        # energy ledger: executed per-region counts x executed iterations
-        led = trace.ledger_from_trace(
-            tr, iters=iters, n_shards=n_shards, cost=cost,
-            overlap=(args.overlap and label != "Ginkgo-analog"), idle_s=0.01,
-        )
-        e = led["totals"]
-        t_model = sum(r["time_s"] for r in led["regions"].values())
-        matrix_bytes = sum(
-            r.get("hbm_matrix_bytes", 0.0) for r in led["regions"].values()
-        )
-        print(
-            f"{label:14s} iters={iters} relres={relres:.2e} "
-            f"wall={wall:.4f}s modeled={t_model:.4e}s "
-            f"DE={e['de_total']:.4f}J peak={e['gpu_power_peak']:.0f}W "
-            f"DEgpu={e['de_gpu']:.4f}J DEcpu={e['de_cpu']:.4f}J "
-            f"setup={setup_time:.4f}s solve={wall:.4f}s"
-        )
-        _print_regions(label, led)
-        entry = dict(
-            led, wall_s=wall, modeled_s=t_model,
-            relres=relres, setup_s=setup_time,
-            variant=args.variant if label == bcmgx_label else "naive",
-            # per-solve amortization view: a batched run is nrhs solves
-            nrhs=nrhs,
-            per_solve_modeled_s=t_model / nrhs,
-            per_solve_de_j=e["de_total"] / nrhs,
-            per_solve_spmv_matrix_bytes=matrix_bytes / nrhs,
-            wall_repeats_s=walls,
-            per_solve_wall_s=wall / nrhs,
-        )
-        if nrhs > 1:
-            entry["iters_cols"] = [
-                int(v) for v in np.asarray(res.iters_cols)
-            ]
-        payload["solvers"][label] = entry
-    _write_ledger(args.ledger, payload)
+    try:
+        spec = api.ProblemSpec.from_args(args)
+        config = api.SolverConfig.from_args(args)
+    except api.ConfigError as e:
+        # the historical argparse-era behavior: message on stderr, exit 1
+        raise SystemExit(str(e)) from e
+    api.solve(spec, config, ledger=args.ledger)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,188 @@
+"""Typed API surface (repro/api.py): dataclasses, validation, CLI shim.
+
+The deprecation-shim contract: ``launch.solve`` flag spellings and the
+``api`` dataclasses are two views of the same configuration, so
+
+* argv -> ``from_args`` -> ``to_argv`` -> argparse -> ``from_args`` must
+  be the identity (both directions of the round trip);
+* invalid combinations raise typed :class:`ConfigError` from the API and
+  the byte-identical historical ``SystemExit`` message from the CLI;
+* ``api.solve`` against a shared pool serves repeat calls from the warm
+  session (zero new partitions).
+
+NOTE: the main pytest process runs f32 single-device; ``api.solve`` tests
+pass ``x64=False`` and solve tiny Poisson systems.
+"""
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.launch import solve as solve_cli
+
+
+def _roundtrip_spec(spec: api.ProblemSpec) -> api.ProblemSpec:
+    args = solve_cli.parse_args(spec.to_argv())
+    return api.ProblemSpec.from_args(args)
+
+
+def _roundtrip_config(cfg: api.SolverConfig) -> api.SolverConfig:
+    # CLI argv needs a full command line; ride along on default problem args
+    args = solve_cli.parse_args(api.ProblemSpec().to_argv() + cfg.to_argv())
+    return api.SolverConfig.from_args(args)
+
+
+# ---------------------------------------------------------------------------
+# round trips
+# ---------------------------------------------------------------------------
+
+
+def test_problem_spec_roundtrip_defaults():
+    spec = api.ProblemSpec()
+    assert _roundtrip_spec(spec) == spec
+
+
+def test_problem_spec_roundtrip_custom():
+    spec = api.ProblemSpec(problem="powerlaw", side=10, scale=0.05, shards=4)
+    assert _roundtrip_spec(spec) == spec
+
+
+def test_solver_config_roundtrip_defaults():
+    cfg = api.SolverConfig()
+    assert _roundtrip_config(cfg) == cfg
+
+
+@pytest.mark.parametrize(
+    "cfg",
+    [
+        api.SolverConfig(op="spmv", fmt="hyb", overlap=False),
+        api.SolverConfig(variant="pipecg", tol=1e-6, maxiter=50, repeats=3),
+        api.SolverConfig(nrhs=8, fmt="bcsr", block=8),
+        api.SolverConfig(amg=True),
+        api.SolverConfig(amgx_analog=True),
+        api.SolverConfig(autotune=True, objective="time", tune_budget=3,
+                         tune_cache="/tmp/tc.json"),
+    ],
+)
+def test_solver_config_roundtrip_custom(cfg):
+    assert _roundtrip_config(cfg) == cfg
+
+
+def test_cli_defaults_match_dataclass_defaults():
+    # the argparse defaults ARE the dataclass defaults (one source of truth
+    # would be nicer, but the shim contract is that they never diverge)
+    args = solve_cli.parse_args([])
+    assert api.ProblemSpec.from_args(args) == api.ProblemSpec()
+    assert api.SolverConfig.from_args(args) == api.SolverConfig()
+
+
+# ---------------------------------------------------------------------------
+# validation: typed ConfigError from the API, SystemExit from the CLI
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "kwargs",
+    [
+        dict(variant="cgs"),
+        dict(op="gemm"),
+        dict(fmt="csc"),
+        dict(objective="power"),
+        dict(nrhs=4, variant="fcg"),
+        dict(nrhs=4, op="spmv"),
+        dict(nrhs=4, amg=True),
+        dict(autotune=True, amg=True),
+        dict(autotune=True, amgx_analog=True),
+        dict(autotune=True, op="spmv"),
+    ],
+)
+def test_invalid_configs_raise_config_error(kwargs):
+    with pytest.raises(api.ConfigError):
+        api.SolverConfig(**kwargs)
+
+
+def test_config_error_is_value_error():
+    with pytest.raises(ValueError):
+        api.SolverConfig(variant="nope")
+
+
+@pytest.mark.parametrize(
+    "argv, message",
+    [
+        (["--nrhs", "4", "--variant", "fcg"], api._NRHS_MSG),
+        (["--nrhs", "4", "--amg"], api._NRHS_MSG),
+        (["--autotune", "--amg"], api._AUTOTUNE_MSG),
+        (["--autotune", "--op", "spmv"], api._AUTOTUNE_MSG),
+    ],
+)
+def test_cli_shim_preserves_historical_exits(argv, message):
+    # the CLI adapter converts ConfigError to the historical SystemExit
+    # text byte-for-byte (scripts match on these strings)
+    with pytest.raises(SystemExit) as exc:
+        solve_cli.main(argv)
+    assert str(exc.value) == message
+
+
+# ---------------------------------------------------------------------------
+# api.solve end to end (f32, single device, warm pool)
+# ---------------------------------------------------------------------------
+
+
+def test_solve_returns_report(tmp_path):
+    from repro.autotune.pool import SessionPool
+
+    spec = api.ProblemSpec(problem="poisson7", side=6, shards=1)
+    cfg = api.SolverConfig(tol=1e-5, maxiter=80)
+    ledger = str(tmp_path / "led.json")
+    report = api.solve(spec, cfg, ledger=ledger, pool=SessionPool(),
+                       x64=False, verbose=False)
+    assert report.n == 6**3
+    assert report.shards == 1
+    assert report.config == cfg
+    assert "BCMGX-analog" in report.solvers
+    entry = report.solvers["BCMGX-analog"]
+    assert entry["iters"] > 0
+    assert entry["relres"] <= 1e-5
+    assert report.summary["BCMGX-analog"]["iters"] == entry["iters"]
+    import json
+
+    with open(ledger) as f:
+        on_disk = json.load(f)
+    assert on_disk["solvers"].keys() == report.solvers.keys()
+
+
+def test_solve_repeat_reuses_warm_session():
+    from repro.autotune.pool import SessionPool
+
+    pool = SessionPool()
+    spec = api.ProblemSpec(problem="poisson7", side=6, shards=1)
+    cfg = api.SolverConfig(tol=1e-5, maxiter=80)
+    r1 = api.solve(spec, cfg, pool=pool, x64=False, verbose=False)
+    assert len(pool) == 1
+    sess = next(iter(pool.sessions.values()))
+    parts = sess.partitions
+    assert parts >= 1
+    r2 = api.solve(spec, cfg, pool=pool, x64=False, verbose=False)
+    # the second call hit the warm session: no new partitions, same mats
+    assert len(pool) == 1
+    assert pool.hits == 1
+    assert sess.partitions == parts
+    assert r2.solvers["BCMGX-analog"]["iters"] == \
+        r1.solvers["BCMGX-analog"]["iters"]
+
+
+def test_solve_validates_config():
+    cfg = api.SolverConfig()
+    bad = api.SolverConfig.__new__(api.SolverConfig)  # bypass __post_init__
+    object.__setattr__(bad, "__dict__", dict(cfg.__dict__, variant="bogus"))
+    with pytest.raises(api.ConfigError):
+        api.solve(api.ProblemSpec(side=4), bad, x64=False, verbose=False)
+
+
+def test_default_rhs_block_deterministic():
+    from repro.core.cg import default_rhs_block
+
+    b1 = default_rhs_block(50, 4)
+    b2 = default_rhs_block(50, 4)
+    np.testing.assert_array_equal(b1, b2)
+    assert b1.shape == (50, 4)

@@ -1,0 +1,163 @@
+"""Serving engine (launch/serve_solver.py): sessions, admission, energy.
+
+In-process single-device tests (f32 — the main pytest process runs
+without x64, so tolerances are loose); each test gets its own
+:class:`SessionPool` so warm state never leaks between tests. The engine's
+``clock`` is injectable: a deterministic counter makes the latency
+percentiles exactly reproducible.
+
+Covers the serving acceptance invariants at unit scale:
+
+* session reuse — the second batch against the same matrix fingerprint
+  does zero partitions and zero tuning trials;
+* ragged admission — r-1 requests into r slots flush as one padded batch
+  whose solutions still match the direct solve (the deflation mask
+  retires the zero padding column at iteration 0);
+* per-request energy — ``split_block_energy`` shares sum back to the
+  engine-total energy (exactly, by the residue correction);
+* determinism — two engines under the same scripted clock report
+  identical p50/p99 latency;
+* the autotune warm path — a second engine over the same tuning cache
+  serves with zero trials and the same decision.
+"""
+
+import numpy as np
+import pytest
+import scipy.sparse.linalg as spla
+
+from repro.autotune.pool import SessionPool
+from repro.launch.serve_solver import ServeEngine
+
+
+def _poisson(side):
+    from repro.matrices.poisson import cube, poisson_scipy
+
+    p = cube(side, "7pt")
+    return poisson_scipy(p, dtype=np.float64)
+
+
+def _rhs(n, r, seed=0):
+    return np.random.default_rng(seed).standard_normal((n, r))
+
+
+def _counter_clock():
+    it = iter(range(10**9))
+    return lambda: float(next(it))
+
+
+def _engine(**kw):
+    kw.setdefault("slots", 4)
+    kw.setdefault("tol", 1e-5)  # f32 in-process
+    kw.setdefault("maxiter", 200)
+    kw.setdefault("pool", SessionPool())
+    return ServeEngine(1, **kw)
+
+
+def test_warm_batches_do_zero_setup():
+    a = _poisson(6)
+    eng = _engine(slots=4)
+    results = eng.serve(a, _rhs(a.shape[0], 8).T)
+    led = eng.ledger()
+    assert led["n_batches"] == 2 and led["n_requests"] == 8
+    b0, b1 = led["batches"]
+    assert b0["cold"] and b0["new_partitions"] >= 1
+    assert not b1["cold"]
+    assert b1["new_partitions"] == 0 and b1["new_tune_trials"] == 0
+    # one session, partitioned exactly once, all 8 solves through it
+    (sess,) = led["sessions"]
+    assert sess["partitions"] == b0["new_partitions"]
+    assert sess["tune_trials"] == 0
+    assert sess["solves"] == 8
+    assert [r.rid for r in results] == list(range(8))
+    assert all(not r.cold for r in results[4:])
+
+
+def test_ragged_admission_pads_and_solves():
+    a = _poisson(6)
+    n = a.shape[0]
+    B = _rhs(n, 3)
+    eng = _engine(slots=4)
+    results = eng.serve(a, B.T)  # 3 requests into 4 slots
+    led = eng.ledger()
+    assert led["n_batches"] == 1
+    (batch,) = led["batches"]
+    assert batch["size"] == 3 and batch["slots"] == 4
+    x_ref = spla.spsolve(a.tocsc(), B)
+    for j, r in enumerate(results):
+        assert r.iters > 0 and r.relres <= 1e-4
+        np.testing.assert_allclose(r.x, x_ref[:, j], rtol=2e-3, atol=2e-3)
+
+
+def test_sequential_slots_one():
+    a = _poisson(5)
+    eng = _engine(slots=1)
+    results = eng.serve(a, _rhs(a.shape[0], 3).T)
+    led = eng.ledger()
+    assert led["n_batches"] == 3 and led["warm_batches"] == 2
+    x_ref = spla.spsolve(a.tocsc(), _rhs(a.shape[0], 3))
+    for j, r in enumerate(results):
+        np.testing.assert_allclose(r.x, x_ref[:, j], rtol=2e-3, atol=2e-3)
+
+
+def test_per_request_energy_sums_to_engine_total():
+    a = _poisson(6)
+    eng = _engine(slots=4)
+    results = eng.serve(a, _rhs(a.shape[0], 7).T)  # full + ragged batch
+    led = eng.ledger()
+    total = led["totals"]["energy_j"]
+    req_sum = sum(r.energy_j for r in results)
+    assert total > 0
+    # exact by the attribution's residue correction (up to the float
+    # summation-order difference between per-batch and per-request sums)
+    assert abs(req_sum - total) <= 1e-9 * total
+    assert led["totals"]["energy_requests_j"] == pytest.approx(req_sum)
+    # every request pays something: setup share + >= 0 iterations
+    assert all(r.energy_j > 0 for r in results)
+
+
+def test_latency_percentiles_deterministic_under_scripted_clock():
+    a = _poisson(5)
+    stats = []
+    for _ in range(2):
+        eng = _engine(slots=2, pool=SessionPool(), clock=_counter_clock())
+        eng.serve(a, _rhs(a.shape[0], 6).T)
+        tot = eng.ledger()["totals"]
+        stats.append((tot["wall_latency_p50_s"], tot["wall_latency_p99_s"]))
+    assert stats[0] == stats[1]
+    assert stats[0][1] >= stats[0][0] > 0
+
+
+def test_autotune_warm_path_across_engines(tmp_path):
+    a = _poisson(6)
+    cache = str(tmp_path / "cache.json")
+    kw = dict(slots=2, autotune=True, tune_budget=2, tune_cache=cache)
+    eng1 = _engine(pool=SessionPool(), **kw)
+    eng1.serve(a, _rhs(a.shape[0], 4).T)
+    led1 = eng1.ledger()
+    assert led1["sessions"][0]["tune_trials"] > 0
+    assert not led1["tuned"][0]["tune_cached"]
+    # a fresh engine + pool over the same persistent cache: zero trials
+    eng2 = _engine(pool=SessionPool(), **kw)
+    eng2.serve(a, _rhs(a.shape[0], 4).T)
+    led2 = eng2.ledger()
+    assert led2["sessions"][0]["tune_trials"] == 0
+    assert led2["tuned"][0]["tune_cached"]
+    assert led2["tuned"][0]["tuned_label"] == led1["tuned"][0]["tuned_label"]
+
+
+def test_split_block_energy_properties():
+    from repro.energy.attribution import split_block_energy
+
+    iters_cols = np.array([3, 10, 7, 0])  # col 3 is padding
+    real = np.array([True, True, True, False])
+    shares = split_block_energy(10.0, 1.0, 10, iters_cols, real)
+    assert shares.shape == (4,)
+    assert shares[3] == 0.0  # padding pays nothing
+    assert float(shares.sum()) == 10.0  # exact
+    # the column that iterated longest pays the most
+    assert shares[1] == shares.max()
+    # zero iterations: the whole budget is setup, split evenly
+    flat = split_block_energy(6.0, 6.0, 0, np.zeros(3, int),
+                              np.ones(3, bool))
+    np.testing.assert_allclose(flat, 2.0)
+    assert float(flat.sum()) == 6.0
