@@ -151,6 +151,16 @@ class SolverConfig:
             raise ConfigError(f"block must be >= 1: {self.block}")
         if self.nrhs < 1:
             raise ConfigError(f"nrhs must be >= 1: {self.nrhs}")
+        if self.repeats < 1:
+            raise ConfigError(f"repeats must be >= 1: {self.repeats}")
+        if self.maxiter < 1:
+            raise ConfigError(f"maxiter must be >= 1: {self.maxiter}")
+        if not self.tol > 0.0:
+            raise ConfigError(f"tol must be > 0: {self.tol}")
+        if self.tune_budget < 1:
+            raise ConfigError(
+                f"tune-budget must be >= 1: {self.tune_budget}"
+            )
         if self.nrhs > 1 and (
             self.op != "cg" or self.amg or self.amgx_analog
             or self.variant != "hs"
@@ -252,6 +262,10 @@ class SolverSession:
         )
         self.key = key
         self.mats: dict[tuple, Any] = {}
+        # session-owned solver handles (core.cg.solver_handle cache=):
+        # dropping the session frees its compiled executables with it,
+        # instead of pinning them in the process-global handle LRU
+        self.handles: dict[tuple, Any] = {}
         self.tune = None  # last TuneResult routed through this session
         self.partitions = 0
         self.tune_trials = 0
@@ -318,13 +332,27 @@ class SolverSession:
     def solver(self, mat, *, op: str = "cg", nrhs: int = 1,
                variant: str = "hs", precond=None, tol: float = 1e-8,
                maxiter: int = 100, overlap: bool = True):
-        """Cached :class:`~repro.core.cg.SolverHandle` for (mat, config)."""
+        """Cached :class:`~repro.core.cg.SolverHandle` for (mat, config).
+
+        Handles live in the session's own cache (``self.handles``), so
+        their compiled executables are released with the session (e.g. on
+        :class:`~repro.autotune.pool.SessionPool` LRU eviction)."""
         from repro.core.cg import solver_handle
 
         return solver_handle(
             self.mesh, mat, op=op, nrhs=nrhs, variant=variant,
             precond=precond, tol=tol, maxiter=maxiter, overlap=overlap,
+            cache=self.handles,
         )
+
+    def close(self):
+        """Release everything expensive: partitions + compiled handles.
+
+        Called on pool eviction; the session object stays usable but the
+        next solve through it pays the cold path again."""
+        self.mats.clear()
+        self.handles.clear()
+        self.tune = None
 
     def stats(self) -> dict:
         """JSON-ready counters (the serving ledger's ``sessions`` rows)."""

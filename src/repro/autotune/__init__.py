@@ -29,7 +29,7 @@ import dataclasses
 
 from repro.autotune.cache import DEFAULT_PATH, TuneCache, fingerprint, model_hash
 from repro.autotune.objective import OBJECTIVES, score, total_energy_j
-from repro.autotune.pool import SessionPool, session_key
+from repro.autotune.pool import SessionPool, matrix_hash, session_key
 from repro.autotune.prune import Prediction, interior_stats, prune
 from repro.autotune.space import DEFAULT, Candidate, enumerate_space, sort_key
 from repro.autotune.trial import Trial, extrapolate_iters, run_trials
@@ -39,8 +39,8 @@ __all__ = [
     "OBJECTIVES", "DEFAULT", "DEFAULT_PATH", "Candidate", "Prediction",
     "SessionPool", "Trial", "TuneCache", "TuneResult", "autotune",
     "enumerate_space", "extrapolate_iters", "fingerprint", "interior_stats",
-    "model_hash", "prune", "run_trials", "score", "session_key", "sort_key",
-    "total_energy_j",
+    "matrix_hash", "model_hash", "prune", "run_trials", "score",
+    "session_key", "sort_key", "total_energy_j",
 ]
 
 

@@ -1,59 +1,104 @@
 """Fingerprint-keyed pool of warm solver sessions.
 
-The tuning cache (``cache.py``) already identifies a problem by cheap
-host-side statistics (n, nnz, row-nnz quantiles, bandwidth) plus the shard
-count. The session pool reuses exactly that identity — minus the
-objective/nrhs axes, which select a *decision*, not a *matrix* — to map an
-incoming matrix to its warm :class:`repro.api.SolverSession`: the object
-holding the partitions, the tuning decision and the compiled solvers.
+The tuning cache (``cache.py``) identifies a problem by cheap host-side
+statistics (n, nnz, row-nnz quantiles, bandwidth) — good enough for a
+tuning *decision*, where a collision only costs optimality. A session is
+different: it pins the matrix itself (``session.a``), so its key is
+correctness-critical — two matrices with the same pattern statistics but
+different values (the same mesh with updated coefficients, a routine
+serving pattern) must NOT share a session, or later requests would be
+solved against the wrong system. :func:`session_key` therefore extends
+the statistical fingerprint with :func:`matrix_hash`, a sha1 over the
+exact CSR structure and values; only byte-identical matrices collide.
 
 Serving flow (``launch/serve_solver.py``): every request carries a host
 CSR matrix; :meth:`SessionPool.session` fingerprints it, and a hit means
 zero partitions and zero tuning trials for that request — the pool *is*
 the in-process warm path, the same way ``runs/autotune/cache.json`` is the
 cross-process one.
+
+The pool is LRU-bounded (``capacity``): a long-running engine that sees a
+stream of distinct matrices evicts the least-recently-used session instead
+of pinning every host CSR, partition, and compiled solver forever. An
+evicted session is closed (its partition and handle caches are dropped) —
+resubmitting its matrix simply pays the cold path again.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
+from collections import OrderedDict
+
+import numpy as np
 
 from repro.autotune.cache import fingerprint
 
+#: Default LRU bound on concurrently-warm sessions. Each session pins its
+#: host CSR, every partition built through it, and every compiled solver —
+#: unbounded growth is the failure mode, not a feature.
+DEFAULT_CAPACITY = 8
+
+
+def matrix_hash(a_csr) -> str:
+    """sha1 over the exact CSR bytes (indptr, indices, data) + shape.
+
+    This is the value-level identity the statistical fingerprint lacks:
+    same-pattern matrices with different coefficients hash differently."""
+    a = a_csr.tocsr()
+    h = hashlib.sha1()
+    h.update(repr((a.shape, a.indptr.dtype.str, a.indices.dtype.str,
+                   a.data.dtype.str)).encode())
+    h.update(np.ascontiguousarray(a.indptr).tobytes())
+    h.update(np.ascontiguousarray(a.indices).tobytes())
+    h.update(np.ascontiguousarray(a.data).tobytes())
+    return h.hexdigest()
+
 
 def session_key(a_csr, n_shards: int) -> str:
-    """Stable string identity of (matrix statistics, shard count)."""
+    """Stable string identity of (matrix statistics, exact content, shards).
+
+    The statistical fields keep the key debuggable (they name the problem);
+    ``sha1`` makes it correct (it names the matrix)."""
     fp = dict(fingerprint(a_csr, n_shards, "-"))
     # decision axes, not matrix identity: one session serves every
     # objective and batch width of the same partitioned matrix
     fp.pop("objective", None)
     fp.pop("nrhs", None)
+    fp["sha1"] = matrix_hash(a_csr)
     return json.dumps(fp, sort_keys=True)
 
 
 class SessionPool:
-    """``session_key -> session`` with hit/miss accounting.
+    """LRU ``session_key -> session`` with hit/miss/eviction accounting.
 
     ``factory(a_csr, n_shards, key=...)`` builds a session on a miss; the
     default is :class:`repro.api.SolverSession` (injected lazily to keep
     this module import-light — it must not pull jax in at import time).
+    ``capacity`` bounds the number of warm sessions (``None`` = unbounded);
+    inserting past it closes and drops the least-recently-used session.
     """
 
-    def __init__(self, factory=None):
+    def __init__(self, factory=None, capacity: int | None = DEFAULT_CAPACITY):
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"capacity must be >= 1 or None: {capacity}")
         self._factory = factory
-        self.sessions: dict[str, object] = {}
+        self.capacity = capacity
+        self.sessions: OrderedDict[str, object] = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def __len__(self) -> int:
         return len(self.sessions)
 
     def session(self, a_csr, n_shards: int, **kw):
-        """The warm session for this matrix fingerprint (create on miss)."""
+        """The warm session for this matrix identity (create on miss)."""
         key = session_key(a_csr, n_shards)
         s = self.sessions.get(key)
         if s is not None:
             self.hits += 1
+            self.sessions.move_to_end(key)
             return s
         self.misses += 1
         factory = self._factory
@@ -63,7 +108,17 @@ class SessionPool:
             factory = SolverSession
         s = factory(a_csr, n_shards, key=key, **kw)
         self.sessions[key] = s
+        while self.capacity is not None and len(self.sessions) > self.capacity:
+            _, evicted = self.sessions.popitem(last=False)
+            self._close(evicted)
+            self.evictions += 1
         return s
+
+    @staticmethod
+    def _close(session):
+        close = getattr(session, "close", None)
+        if callable(close):
+            close()
 
     def get(self, key: str):
         return self.sessions.get(key)
@@ -71,10 +126,15 @@ class SessionPool:
     def stats(self) -> dict:
         """JSON-ready pool counters (the serving ledger's ``pool`` block)."""
         return dict(
-            sessions=len(self.sessions), hits=self.hits, misses=self.misses
+            sessions=len(self.sessions), hits=self.hits, misses=self.misses,
+            evictions=self.evictions,
+            capacity=self.capacity if self.capacity is not None else 0,
         )
 
     def clear(self):
+        for s in self.sessions.values():
+            self._close(s)
         self.sessions.clear()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0

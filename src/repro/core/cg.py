@@ -34,6 +34,7 @@ the lowered HLO* — which is what the roofline collective term measures.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from functools import partial
 from typing import Any, Callable, NamedTuple
@@ -889,7 +890,27 @@ class SolverHandle:
         return self.fn(*args)
 
 
-_HANDLES: dict[tuple, SolverHandle] = {}
+#: Process-global handle cache for callers without a session. LRU-bounded:
+#: each handle deliberately pins its mesh/mat/precond (see SolverHandle),
+#: so an unbounded cache grows without limit in a long-running process.
+#: Session-owned solves pass their own ``cache=`` dict instead — those
+#: handles live exactly as long as the session (dropping the session frees
+#: its compiled executables and partitions together).
+_HANDLES: "collections.OrderedDict[tuple, SolverHandle]" = (
+    collections.OrderedDict()
+)
+_HANDLE_LIMIT = 32
+
+
+def set_solver_handle_limit(limit: int) -> int:
+    """Set the global handle cache's LRU bound; returns the previous one."""
+    global _HANDLE_LIMIT
+    if limit < 1:
+        raise ValueError(f"handle limit must be >= 1: {limit}")
+    prev, _HANDLE_LIMIT = _HANDLE_LIMIT, int(limit)
+    while len(_HANDLES) > _HANDLE_LIMIT:
+        _HANDLES.popitem(last=False)
+    return prev
 
 
 def clear_solver_handles():
@@ -911,6 +932,7 @@ def solver_handle(
     axis: str = "shards",
     kernels: str | None = None,
     overlap: bool = True,
+    cache: dict | None = None,
 ) -> SolverHandle:
     """Cached solver keyed by (partition, config): build once, solve many.
 
@@ -921,19 +943,26 @@ def solver_handle(
     Ginkgo-analog baseline for ``variant="naive"``, the distributed SpMV
     for ``op="spmv"`` (``variant="naive"`` selects the all-gather SpMV),
     and :func:`make_solver` otherwise.
+
+    ``cache`` scopes handle lifetime: pass an owner's dict (e.g. a
+    ``SolverSession``'s) so its handles die with it; the default is the
+    process-global LRU (:data:`_HANDLE_LIMIT` entries).
     """
     key = (
         id(mesh), id(mat), str(op), int(max(nrhs, 1)), str(variant),
         None if precond is None else id(precond),
         float(tol), int(maxiter), int(s), axis, kernels, bool(overlap),
     )
-    h = _HANDLES.get(key)
+    store = _HANDLES if cache is None else cache
+    h = store.get(key)
     if (
         h is not None
         and h.mesh is mesh
         and h.mat is mat
         and (precond is None or h.precond is precond)
     ):
+        if store is _HANDLES:
+            _HANDLES.move_to_end(key)
         return h
     if op == "spmv":
         from repro.core.baselines import make_naive_spmv
@@ -960,5 +989,8 @@ def solver_handle(
             maxiter=maxiter, s=s, axis=axis, kernels=kernels, overlap=overlap,
         )
     h = SolverHandle(fn=fn, key=key, mesh=mesh, mat=mat, precond=precond)
-    _HANDLES[key] = h
+    store[key] = h
+    if store is _HANDLES:
+        while len(_HANDLES) > _HANDLE_LIMIT:
+            _HANDLES.popitem(last=False)
     return h

@@ -17,6 +17,11 @@ Attribution model (:func:`split_block_energy`):
   equally among the real columns still *unconverged* at that iteration —
   a deflated column stops paying the moment it converges, exactly
   mirroring the deflation mask freezing its updates;
+* an iteration in which *no* real column is still unconverged (the block
+  solver normally stops at the last real column's convergence, so this
+  only happens if a caller reports extra trailing iterations) has no
+  causal owner: its share is batch overhead, divided equally among the
+  real requests — never silently dumped on one of them;
 * padding columns (slots the admission queue filled with zero RHS; they
   deflate at iteration 0) are charged nothing;
 * the float rounding residue is assigned to the last real request, so the
@@ -74,10 +79,16 @@ def split_block_energy(
         active = np.zeros(iters, dtype=np.float64)
         for j in idx:
             active[: cols[j]] += 1.0
-        active = np.maximum(active, 1.0)
         e_iter = (total_j - float(setup_j)) / iters
-        cum = np.concatenate([[0.0], np.cumsum(e_iter / active)])
-        shares[idx] = float(setup_j) / idx.size + cum[cols[idx]]
+        # iterations with zero active real columns have no causal owner
+        # (the solver ran past the last real convergence): their energy is
+        # batch overhead, split equally, so the residue correction below
+        # only ever absorbs float rounding — never whole iterations
+        idle = active == 0.0
+        overhead = e_iter * float(idle.sum()) / idx.size
+        per_iter = np.where(idle, 0.0, e_iter / np.maximum(active, 1.0))
+        cum = np.concatenate([[0.0], np.cumsum(per_iter)])
+        shares[idx] = float(setup_j) / idx.size + overhead + cum[cols[idx]]
     # exact-sum correction: assign the float rounding residue to the last
     # real column (a few ulps), iterating in case the re-sum rounds again
     for _ in range(4):

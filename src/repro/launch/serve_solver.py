@@ -117,6 +117,10 @@ class ServeEngine:
         self.clock = clock if clock is not None else time.perf_counter
         self.verbose = bool(verbose)
         self.pending: dict[str, list[Request]] = {}
+        # session ref per pending queue: queued requests must survive a
+        # pool LRU eviction of their session, so the engine (not the pool)
+        # owns the session until its queue flushes
+        self._queued_sessions: dict[str, Any] = {}
         self.results: list[RequestResult] = []
         self.batches: list[dict] = []
         self._configs: dict[str, dict] = {}
@@ -127,15 +131,23 @@ class ServeEngine:
     def submit(self, a_csr, b) -> int:
         """Admit one request; flushes its session's queue when slots fill.
 
-        Returns the request id (results carry it)."""
+        Raises ``ValueError`` before admission when the RHS length does
+        not match the session matrix. Returns the request id (results
+        carry it)."""
         import numpy as np
 
         sess = self.pool.session(a_csr, self.n_shards)
+        b = np.asarray(b, dtype=np.float64)
+        if b.shape != (sess.n,):
+            raise ValueError(
+                f"RHS shape {b.shape} does not match the session matrix: "
+                f"expected ({sess.n},)"
+            )
         req = Request(
-            rid=self._next_rid, b=np.asarray(b, dtype=np.float64),
-            t_submit=self.clock(),
+            rid=self._next_rid, b=b, t_submit=self.clock(),
         )
         self._next_rid += 1
+        self._queued_sessions[sess.key] = sess
         q = self.pending.setdefault(sess.key, [])
         q.append(req)
         if len(q) >= self.slots:
@@ -146,7 +158,7 @@ class ServeEngine:
         """Flush every partially-filled queue (ragged final batches)."""
         for key in list(self.pending):
             if self.pending[key]:
-                self._flush(self.pool.get(key))
+                self._flush(self._queued_sessions[key])
 
     def serve(self, a_csr, rhs_columns) -> list[RequestResult]:
         """Submit a request per RHS column, drain, return results by rid."""
@@ -207,6 +219,7 @@ class ServeEngine:
         from repro.energy.attribution import split_block_energy
 
         reqs = self.pending.pop(sess.key, [])
+        self._queued_sessions.pop(sess.key, None)
         if not reqs:
             return
         bi = len(self.batches)

@@ -94,6 +94,13 @@ def test_cli_defaults_match_dataclass_defaults():
         dict(autotune=True, amg=True),
         dict(autotune=True, amgx_analog=True),
         dict(autotune=True, op="spmv"),
+        dict(repeats=0),
+        dict(maxiter=0),
+        dict(tol=0.0),
+        dict(tol=-1e-8),
+        dict(tune_budget=0),
+        dict(nrhs=0),
+        dict(block=0),
     ],
 )
 def test_invalid_configs_raise_config_error(kwargs):

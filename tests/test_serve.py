@@ -161,3 +161,118 @@ def test_split_block_energy_properties():
                               np.ones(3, bool))
     np.testing.assert_allclose(flat, 2.0)
     assert float(flat.sum()) == 6.0
+
+
+def test_split_block_energy_idle_iterations_are_overhead():
+    from repro.energy.attribution import split_block_energy
+
+    # the caller reports 4 trailing iterations past the last real
+    # convergence (cols converge at 2 and 4, iters=8): their energy has no
+    # causal owner and must split evenly — not be dumped, via the residue
+    # correction, on whichever request converged last
+    shares = split_block_energy(10.0, 1.0, 8, np.array([2, 4]),
+                                np.ones(2, bool))
+    assert float(shares.sum()) == 10.0
+    e_iter = (10.0 - 1.0) / 8
+    # the columns differ only by the 2 iterations col 1 was alone in;
+    # the 4 idle iterations' energy (4 * e_iter) is shared equally
+    assert shares[1] - shares[0] == pytest.approx(2 * e_iter)
+
+
+def test_same_pattern_different_values_are_distinct_sessions():
+    from repro.autotune.pool import session_key
+
+    a = _poisson(5)
+    a2 = a.copy()
+    a2.data = a2.data * 1.5  # same pattern + statistics, new coefficients
+    assert session_key(a, 1) != session_key(a2, 1)
+    n = a.shape[0]
+    B = _rhs(n, 2)
+    eng = _engine(slots=1)
+    r1 = eng.submit(a, B[:, 0])
+    r2 = eng.submit(a2, B[:, 1])
+    # two sessions, not one: the pool must not serve a2's request from
+    # a's warm session (same-stats collision == wrong linear system)
+    assert eng.pool.misses == 2 and len(eng.pool) == 2
+    by_rid = {r.rid: r for r in eng.results}
+    np.testing.assert_allclose(
+        by_rid[r1].x, spla.spsolve(a.tocsc(), B[:, 0]),
+        rtol=2e-3, atol=2e-3,
+    )
+    np.testing.assert_allclose(
+        by_rid[r2].x, spla.spsolve(a2.tocsc(), B[:, 1]),
+        rtol=2e-3, atol=2e-3,
+    )
+
+
+def test_pool_lru_eviction_closes_sessions():
+    class FakeSession:
+        def __init__(self, a_csr, n_shards, key=None):
+            self.key = key
+            self.closed = False
+
+        def close(self):
+            self.closed = True
+
+    a1, a2, a3 = _poisson(3), _poisson(4), _poisson(5)
+    pool = SessionPool(factory=FakeSession, capacity=2)
+    s1 = pool.session(a1, 1)
+    s2 = pool.session(a2, 1)
+    assert pool.session(a1, 1) is s1  # hit refreshes s1's recency
+    s3 = pool.session(a3, 1)  # past capacity: evicts s2, the LRU
+    assert len(pool) == 2 and pool.evictions == 1
+    assert s2.closed and not s1.closed and not s3.closed
+    assert pool.session(a1, 1) is s1  # survivors still warm
+    assert pool.session(a2, 1) is not s2  # evicted: rebuilt on next use
+    assert pool.stats()["evictions"] == 2
+    assert pool.stats()["capacity"] == 2
+
+
+def test_submit_rejects_mismatched_rhs():
+    a = _poisson(4)
+    eng = _engine(slots=2)
+    with pytest.raises(ValueError, match="does not match the session"):
+        eng.submit(a, np.ones(a.shape[0] + 1))
+    # nothing was admitted or counted
+    led = eng.ledger()
+    assert led["n_requests"] == 0 and led["n_batches"] == 0
+
+
+def test_session_close_drops_warm_state_but_stays_usable():
+    a = _poisson(4)
+    n = a.shape[0]
+    eng = _engine(slots=2)
+    eng.serve(a, _rhs(n, 2).T)
+    (sess,) = eng.pool.sessions.values()
+    assert sess.mats and sess.handles
+    sess.close()
+    assert not sess.mats and not sess.handles
+    # the next solve through the closed session pays the cold path again
+    B = _rhs(n, 2, seed=1)
+    results = eng.serve(a, B.T)[-2:]
+    x_ref = spla.spsolve(a.tocsc(), B)
+    for j, r in enumerate(results):
+        np.testing.assert_allclose(r.x, x_ref[:, j], rtol=2e-3, atol=2e-3)
+
+
+def test_global_handle_cache_is_lru_bounded(monkeypatch):
+    from repro.core import cg
+
+    cg.clear_solver_handles()
+    monkeypatch.setattr(cg, "make_solver", lambda *a, **k: (lambda *x: None))
+    prev = cg.set_solver_handle_limit(2)
+    try:
+        mesh = object()
+        mats = [object() for _ in range(3)]
+        handles = [cg.solver_handle(mesh, m) for m in mats]
+        assert len(cg._HANDLES) == 2
+        # the oldest handle was evicted; re-requesting rebuilds it
+        assert cg.solver_handle(mesh, mats[0]) is not handles[0]
+        # a session-owned cache is scoped by its owner, not the global cap
+        own = {}
+        for m in mats:
+            cg.solver_handle(mesh, m, cache=own)
+        assert len(own) == 3 and len(cg._HANDLES) == 2
+    finally:
+        cg.set_solver_handle_limit(prev)
+        cg.clear_solver_handles()
