@@ -80,34 +80,43 @@ def _leg_row(leg: str, led: dict) -> dict:
 
 
 def run(shards: int = 2, side: int = 12, requests: int = 16, slots: int = 8,
-        maxiter: int = 300, budget: int = 4) -> list[dict]:
+        maxiter: int = 300, budget: int = 4,
+        grid: str | None = None) -> list[dict]:
     rows, legs = [], {}
+    grid_extra = ["--grid", grid] if grid else []
 
     # untuned legs: batched width-`slots` admission vs sequential serving
     for leg, slot_count in (("batched", slots), ("sequential", 1)):
         _, led = run_serve_with_ledger(
-            _serve_args(side, shards, requests, slot_count, maxiter),
+            _serve_args(side, shards, requests, slot_count, maxiter,
+                        extra=grid_extra),
             n_devices=shards,
         )
         legs[leg] = led
-        rows.append(_leg_row(leg, led))
+        row = _leg_row(leg, led)
+        if grid:
+            row["grid"] = grid
+        rows.append(row)
 
     # tuned leg, twice against one cache: invocation 1 pays the trials,
-    # invocation 2 must be served entirely from the persistent cache
-    cache_dir = tempfile.mkdtemp(prefix="serve_bench_")
-    try:
-        cache = os.path.join(cache_dir, "cache.json")
-        tuned_args = _serve_args(
-            side, shards, requests, slots, maxiter,
-            extra=["--autotune", "--objective", "energy",
-                   "--tune-budget", str(budget), "--tune-cache", cache],
-        )
-        for invocation in (1, 2):
-            _, led = run_serve_with_ledger(tuned_args, n_devices=shards)
-            legs[f"tuned{invocation}"] = led
-            rows.append(_leg_row(f"tuned{invocation}", led))
-    finally:
-        shutil.rmtree(cache_dir, ignore_errors=True)
+    # invocation 2 must be served entirely from the persistent cache.
+    # --grid pins the layout by hand, which excludes the tuner (it owns
+    # the layout axis) — grid reruns exercise the untuned legs only.
+    if not grid:
+        cache_dir = tempfile.mkdtemp(prefix="serve_bench_")
+        try:
+            cache = os.path.join(cache_dir, "cache.json")
+            tuned_args = _serve_args(
+                side, shards, requests, slots, maxiter,
+                extra=["--autotune", "--objective", "energy",
+                       "--tune-budget", str(budget), "--tune-cache", cache],
+            )
+            for invocation in (1, 2):
+                _, led = run_serve_with_ledger(tuned_args, n_devices=shards)
+                legs[f"tuned{invocation}"] = led
+                rows.append(_leg_row(f"tuned{invocation}", led))
+        finally:
+            shutil.rmtree(cache_dir, ignore_errors=True)
 
     # invariant (a): warm requests do zero partitions and zero trials
     for leg, led in legs.items():
@@ -127,28 +136,32 @@ def run(shards: int = 2, side: int = 12, requests: int = 16, slots: int = 8,
                     f"{leg} batch {b['batch']}: warm batch ran "
                     f"{b['new_tune_trials']} tuning trials"
                 )
-    t1, t2 = legs["tuned1"], legs["tuned2"]
-    assert t1["sessions"][0]["tune_trials"] > 0, (
-        "first tuned invocation ran no trials against a fresh cache"
-    )
-    assert t1["batches"][0]["new_tune_trials"] > 0, (
-        "tuned leg did not pay its trials in the cold batch"
-    )
-    assert not t1["tuned"][0]["tune_cached"], (
-        "first tuned invocation claims a cache hit on a fresh cache"
-    )
-    assert t2["sessions"][0]["tune_trials"] == 0, (
-        f"second tuned invocation still ran "
-        f"{t2['sessions'][0]['tune_trials']} trials: the tuning cache "
-        f"did not serve it"
-    )
-    assert t2["tuned"][0]["tune_cached"], (
-        "second tuned invocation missed the tuning cache"
-    )
-    assert t2["tuned"][0]["tuned_label"] == t1["tuned"][0]["tuned_label"], (
-        f"cache returned a different config: "
-        f"{t2['tuned'][0]['tuned_label']} vs {t1['tuned'][0]['tuned_label']}"
-    )
+    if not grid:
+        t1, t2 = legs["tuned1"], legs["tuned2"]
+        assert t1["sessions"][0]["tune_trials"] > 0, (
+            "first tuned invocation ran no trials against a fresh cache"
+        )
+        assert t1["batches"][0]["new_tune_trials"] > 0, (
+            "tuned leg did not pay its trials in the cold batch"
+        )
+        assert not t1["tuned"][0]["tune_cached"], (
+            "first tuned invocation claims a cache hit on a fresh cache"
+        )
+        assert t2["sessions"][0]["tune_trials"] == 0, (
+            f"second tuned invocation still ran "
+            f"{t2['sessions'][0]['tune_trials']} trials: the tuning cache "
+            f"did not serve it"
+        )
+        assert t2["tuned"][0]["tune_cached"], (
+            "second tuned invocation missed the tuning cache"
+        )
+        assert (
+            t2["tuned"][0]["tuned_label"] == t1["tuned"][0]["tuned_label"]
+        ), (
+            f"cache returned a different config: "
+            f"{t2['tuned'][0]['tuned_label']} vs "
+            f"{t1['tuned'][0]['tuned_label']}"
+        )
 
     # invariant (b): batched warm throughput >= 2x sequential, and >= 2x
     # the batched leg's own cold throughput
@@ -180,7 +193,7 @@ def run(shards: int = 2, side: int = 12, requests: int = 16, slots: int = 8,
     return rows
 
 
-def main(smoke: bool = False):
+def main(smoke: bool = False, grid: str | None = None):
     from benchmarks.common import set_smoke
 
     set_smoke(smoke)
@@ -191,6 +204,7 @@ def main(smoke: bool = False):
         side=10 if smoke else 12,
         requests=16 if smoke else 24,
         maxiter=200 if smoke else 300,
+        grid=grid,
     )
     print(fmt_table(
         rows,
@@ -201,8 +215,20 @@ def main(smoke: bool = False):
          ("wall_latency_p99_s", "p99 (s)")],
         "Serving engine: warm-session throughput and per-request energy",
     ))
-    write_results("serve_bench", rows)
+    # grid reruns land in their own ledger: the canonical 1-D serve_bench
+    # baseline stays byte-identical (and gated) regardless
+    write_results("serve_bench" if not grid else "serve_bench_grid", rows)
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--grid", default=None,
+                    help="RxC process-grid passthrough (R*C must equal the "
+                         "benchmark's shard count): reruns the untuned "
+                         "serving legs on the 2-D layout; results go to "
+                         "the ungated serve_bench_grid ledger")
+    a = ap.parse_args()
+    main(smoke=a.smoke, grid=a.grid)

@@ -1,0 +1,419 @@
+"""Strong scaling at 4-32 emulated shards: 1-D slabs vs the 2-D grid
+(§ScaleOut, docs/scaling.md).
+
+The paper's headline claims live at shard counts where halo
+surface-to-volume and all-reduce depth — not per-GPU throughput — decide
+time and energy. This benchmark stresses exactly that regime on emulated
+devices (``--xla_force_host_platform_device_count=N``) and gates the
+crossover methodology of docs/scaling.md:
+
+* **modeled** — the smoke-size Poisson cube is partitioned host-side both
+  ways at every shard count (real ``partition_csr`` plans, not abstract
+  shapes), and the per-iteration *exposed* communication of the hs body is
+  priced through the CostModel: the 1-D leg with the flat ``ceil(log2 S)``
+  tree, the grid leg with ``coll_hops = reduce_hops(S, grid)`` plus the
+  extra hierarchical-stage launches the executed trace records
+  (core/vectors.HIER_STAGE_OP).
+* **executed** — real ``--no-overlap`` solves through ``api.solve`` (all
+  communication exposed by construction), 1-D via ``--grid 1xS`` (the
+  identity layout — also byte-compared against a plain no-grid run) and
+  2-D via ``--grid RxC``. Exposed comm per iteration comes from the
+  executed ledger's ``totals.comm_exposed_s``.
+
+HARD-ASSERTS (the ISSUE 8 acceptance gate):
+
+1. at >= 16 shards the 2-D layout's interior + halo bytes per shard are
+   strictly below 1-D (the slab halo is the full side^2 cross-section; the
+   pencil halo is its surface);
+2. the modeled and executed exposed-comm crossover shard counts — where
+   the 2-D leg's per-iteration exposed comm first drops below 1-D,
+   log2-interpolated between sweep points — agree within 5%;
+3. ``--grid 1xS`` reproduces the plain 1-D run exactly (identical region
+   counts, totals, and iterations).
+
+Why the crossover sits where it does: the grid pays twice the collective
+launches (4 halo faces vs 2, 2-stage hierarchical reductions) at shallower
+depth ``ceil(log2 max(R, C))``. At square grids (16 = 4x4) the latency
+terms tie exactly and the halved halo payload decides; at rectangular
+grids (8 = 2x4) the extra launches cost more than the payload saves at
+smoke sizes. The paper-scale modeled rows show the crossover migrating
+toward smaller shard counts as the cube grows and payload, not latency,
+dominates — the surface-to-volume story the 2-D layout exists for.
+
+The smoke cube side is 40: at 16 shards a 40^3 cube keeps 2.5 z-planes
+per 1-D slab, so rows with both z-neighbors in-shard exist and the ELL
+interior pads to k=7 in BOTH layouts — the interior-bytes comparison is
+then decided by the halo structure, not by a padding artifact of
+one-plane slabs. Past that point (32 shards on the smoke cube) the 1-D
+slab thins below 2.5 planes, its interior degenerates to k=6 padding,
+and the interior comparison stops being layout-vs-layout — so the
+interior+halo gate applies only while ``n_shards <= side / 2.5``; the
+halo-undercut gate holds at every shard count >= 16 regardless.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from benchmarks.common import run_api_solve, write_results
+from repro.api import ProblemSpec, SolverConfig
+
+SIDE = 40  # divisible by every grid dimension used (2, 4, 8)
+MODELED_SHARDS = (4, 8, 16, 32)
+SMOKE_EXECUTED_SHARDS = (8, 16)
+FULL_EXECUTED_SHARDS = (4, 8, 16, 32)
+PAPER_SIDES = (320, 1024)
+PAPER_SHARDS = (4, 8, 16, 32, 64)
+
+# Per-iteration extras of the hierarchical reduction path beyond what
+# cg_iteration_counts already carries: the hs body launches one pdot (1
+# scalar) and one fused pair (2 scalars) per iteration; on a 2-axis mesh
+# each runs one extra psum stage (core/vectors.all_reduce records
+# HIER_STAGE_OP with the same payload).
+_HS_STAGE_ICI = 24.0  # (1 + 2) scalars * 8 B
+_HS_STAGE_LAUNCHES = 2.0
+_HS_REDUCE_ICI = 24.0
+_HS_REDUCE_LAUNCHES = 2.0
+
+
+def _grid_for(s: int):
+    from repro.core.partition import default_grid
+
+    r, c = default_grid(s)
+    return (r, c), f"{r}x{c}"
+
+
+def _grid_cost(cost, s: int, grid):
+    from repro.roofline.analysis import reduce_hops
+
+    return dataclasses.replace(
+        cost, coll_hops=float(reduce_hops(s, grid))
+    )
+
+
+def _exposed_iter_s(cost, counts, s: int) -> float:
+    _, (_, _, t_coll) = cost.times(counts, s, overlap=False)
+    return t_coll
+
+
+def crossover_shards(points) -> float | None:
+    """First shard count where D = exposed_1d - exposed_2d crosses zero
+    from below, log2-interpolated between sweep points.
+
+    ``points``: [(n_shards, D)] sorted by shard count. None if the 2-D
+    leg never wins inside the sweep.
+    """
+    for (s0, d0), (s1, d1) in zip(points, points[1:]):
+        if d0 < 0.0 <= d1:
+            x0, x1 = math.log2(s0), math.log2(s1)
+            x = x0 + (0.0 - d0) / (d1 - d0) * (x1 - x0)
+            return float(2.0**x)
+    return None
+
+
+def modeled(shard_counts=MODELED_SHARDS, side: int = SIDE):
+    """Real host-side partitions of the smoke cube, priced per iteration.
+
+    Returns (rows, {n_shards: exposed_1d - exposed_2d}).
+    """
+    from repro.core.partition import partition_csr, pencil_partition
+    from repro.energy.accounting import (
+        CostModel,
+        OpCounts,
+        cg_iteration_counts,
+    )
+    from repro.matrices import poisson
+
+    p = poisson.cube(side, "7pt")
+    a = poisson.poisson_scipy(p)
+    cost = CostModel()
+    rows, deltas = [], {}
+    for s in shard_counts:
+        grid, grid_str = _grid_for(s)
+        mat1 = partition_csr(a, s)
+        perm, part = pencil_partition(p, grid)
+        ag = a[perm][:, perm].tocsr()
+        matg = partition_csr(ag, s, grid=grid, partition=part)
+        assert matg.plan.mode == "grid", (s, grid, matg.plan.mode)
+
+        c1 = cg_iteration_counts(mat1, "hs")
+        cg = cg_iteration_counts(matg, "hs") + OpCounts(
+            ici_bytes=_HS_STAGE_ICI, n_collectives=_HS_STAGE_LAUNCHES
+        )
+        t1 = _exposed_iter_s(cost, c1, s)
+        tg = _exposed_iter_s(_grid_cost(cost, s, grid), cg, s)
+        deltas[s] = t1 - tg
+
+        for layout, grid_lbl, mat, t in (
+            ("1d", f"1x{s}", mat1, t1),
+            ("2d", grid_str, matg, tg),
+        ):
+            interior = mat.interior_stored_bytes() / s
+            halo = mat.plan.collective_bytes_per_shard(8)
+            rows.append(
+                dict(
+                    figure="strong_modeled",
+                    layout=layout,
+                    grid=grid_lbl,
+                    n_shards=s,
+                    side=side,
+                    dofs=side**3,
+                    interior_bytes_shard=interior,
+                    halo_bytes_shard=halo,
+                    bytes_shard=interior + halo,
+                    n_launches=(
+                        mat.plan.n_launches
+                        if mat.plan.mode == "grid"
+                        else len(mat.plan.shifts)
+                    ),
+                    comm_exposed_iter_s=t,
+                )
+            )
+        if s >= 16:
+            # tentpole gate: pencil surface beats slab cross-section
+            m1 = next(
+                r for r in rows
+                if r["n_shards"] == s and r["layout"] == "1d"
+            )
+            m2 = next(
+                r for r in rows
+                if r["n_shards"] == s and r["layout"] == "2d"
+            )
+            assert m2["halo_bytes_shard"] < m1["halo_bytes_shard"], (
+                f"2-D halo did not undercut 1-D at {s} shards: "
+                f"{m2['halo_bytes_shard']} !< {m1['halo_bytes_shard']}"
+            )
+            if s <= side / 2.5:  # both interiors pad to k=7 (docstring)
+                assert m2["bytes_shard"] < m1["bytes_shard"], (
+                    f"2-D interior+halo bytes not below 1-D at {s} "
+                    f"shards: {m2['bytes_shard']} !< {m1['bytes_shard']}"
+                )
+    return rows, deltas
+
+
+def paper_modeled(sides=PAPER_SIDES, shard_counts=PAPER_SHARDS):
+    """Analytic paper-scale rows (no materialization): per-iteration
+    exposed comm of the hs body with 1-D slab vs pencil halos. Shows the
+    crossover migrating to smaller shard counts as payload outgrows
+    launch latency."""
+    from repro.energy.accounting import CostModel, OpCounts
+    from repro.matrices.poisson import PoissonProblem
+    from repro.roofline.analysis import pencil_halo_widths
+
+    cost = CostModel()
+    rows = []
+    for side in sides:
+        points = []
+        for s in shard_counts:
+            grid, grid_str = _grid_for(s)
+            # 1-D: two full-cross-section faces, two launches
+            c1 = OpCounts(
+                ici_bytes=2.0 * side * side * 8.0 + _HS_REDUCE_ICI,
+                n_collectives=2.0 + _HS_REDUCE_LAUNCHES,
+            )
+            t1 = _exposed_iter_s(cost, c1, s)
+            # 2-D: per-face pencil surfaces, hop-weighted like GridPlan
+            w = pencil_halo_widths(
+                PoissonProblem(side, side, side, "7pt"), grid
+            )
+            halo = sum(
+                width * 8.0 * ((di != 0) + (dj != 0))
+                for (di, dj), width in w.items()
+            )
+            launches = float(
+                sum((di != 0) + (dj != 0) for di, dj in w)
+            )
+            cg = OpCounts(
+                ici_bytes=halo + _HS_REDUCE_ICI + _HS_STAGE_ICI,
+                n_collectives=(
+                    launches + _HS_REDUCE_LAUNCHES + _HS_STAGE_LAUNCHES
+                ),
+            )
+            tg = _exposed_iter_s(_grid_cost(cost, s, grid), cg, s)
+            points.append((s, t1 - tg))
+            for layout, grid_lbl, t, hb in (
+                ("1d", f"1x{s}", t1, 2.0 * side * side * 8.0),
+                ("2d", grid_str, tg, halo),
+            ):
+                rows.append(
+                    dict(
+                        figure="strong_modeled_paper",
+                        layout=layout,
+                        grid=grid_lbl,
+                        n_shards=s,
+                        side=side,
+                        halo_bytes_shard=hb,
+                        comm_exposed_iter_s=t,
+                    )
+                )
+        x = crossover_shards(points)
+        rows.append(
+            dict(
+                figure="strong_crossover_paper",
+                side=side,
+                crossover_shards=0.0 if x is None else x,
+            )
+        )
+    return rows
+
+
+def executed(
+    shards=SMOKE_EXECUTED_SHARDS,
+    side: int = SIDE,
+    maxiter: int = 300,
+    tol: float = 1e-8,
+):
+    """Real --no-overlap solves, 1-D (--grid 1xS) vs 2-D (--grid RxC).
+
+    Returns (rows, {n_shards: exposed_1d - exposed_2d} per iteration).
+    Asserts the byte gate at >= 16 shards and the 1xS identity.
+    """
+    rows, deltas = [], {}
+    for s in shards:
+        spec = ProblemSpec(problem="poisson7", side=side, shards=s)
+        grid, grid_str = _grid_for(s)
+        got = {}
+        for layout, g in (("1d", f"1x{s}"), ("2d", grid_str)):
+            cfg = SolverConfig(
+                overlap=False, tol=tol, maxiter=maxiter, grid=g
+            )
+            _, led = run_api_solve(spec, cfg)
+            sol = led["solvers"]["BCMGX-analog"]
+            tot = sol["totals"]
+            iters = int(sol["iters"])
+            assert iters < maxiter, (
+                f"{layout} leg did not converge at {s} shards"
+            )
+            halo = led["halo_bytes_rows"] + led["halo_bytes_cols"]
+            got[layout] = dict(
+                sol=sol,
+                bytes_shard=led["interior_stored_bytes"] / s + halo,
+                exposed_iter=tot["comm_exposed_s"] / iters,
+            )
+            rows.append(
+                dict(
+                    figure="strong_executed",
+                    layout=layout,
+                    grid=g,
+                    n_shards=s,
+                    side=side,
+                    iters=iters,
+                    relres=sol["relres"],
+                    interior_bytes_shard=led["interior_stored_bytes"] / s,
+                    halo_bytes_rows=led["halo_bytes_rows"],
+                    halo_bytes_cols=led["halo_bytes_cols"],
+                    bytes_shard=got[layout]["bytes_shard"],
+                    comm_exposed_s=tot["comm_exposed_s"],
+                    comm_exposed_iter_s=got[layout]["exposed_iter"],
+                    de_total=tot["de_total"],
+                    wall_s=sol["wall_s"],
+                )
+            )
+        deltas[s] = got["1d"]["exposed_iter"] - got["2d"]["exposed_iter"]
+        # CG on the symmetrically permuted system converges identically
+        assert got["1d"]["sol"]["iters"] == got["2d"]["sol"]["iters"], (
+            f"pencil permutation changed convergence at {s} shards: "
+            f"{got['1d']['sol']['iters']} vs {got['2d']['sol']['iters']}"
+        )
+        if s >= 16 and s <= side / 2.5:
+            assert got["2d"]["bytes_shard"] < got["1d"]["bytes_shard"], (
+                f"executed 2-D interior+halo bytes not below 1-D at {s} "
+                f"shards: {got['2d']['bytes_shard']} !< "
+                f"{got['1d']['bytes_shard']}"
+            )
+
+    # --grid 1xS is the identity layout: a plain run must match it in
+    # every deterministic ledger field (region counts, totals, iters)
+    s0 = shards[0]
+    spec = ProblemSpec(problem="poisson7", side=side, shards=s0)
+    cfg_plain = SolverConfig(overlap=False, tol=tol, maxiter=maxiter)
+    _, led_plain = run_api_solve(spec, cfg_plain)
+    cfg_1x = SolverConfig(
+        overlap=False, tol=tol, maxiter=maxiter, grid=f"1x{s0}"
+    )
+    _, led_1x = run_api_solve(spec, cfg_1x)
+    assert led_1x["grid"] == [1, s0], led_1x["grid"]
+    assert led_1x["halo_bytes_rows"] == 0.0
+    a = led_plain["solvers"]["BCMGX-analog"]
+    b = led_1x["solvers"]["BCMGX-analog"]
+    for key in ("iters", "regions", "totals"):
+        assert a[key] == b[key], (
+            f"--grid 1x{s0} diverged from the plain 1-D run in {key}"
+        )
+    rows.append(
+        dict(
+            figure="strong_identity",
+            n_shards=s0,
+            side=side,
+            grid=f"1x{s0}",
+            identity_fields="iters,regions,totals",
+            identity_ok=True,
+        )
+    )
+    return rows, deltas
+
+
+def main(smoke: bool = False):
+    from benchmarks.common import set_smoke
+
+    set_smoke(smoke)
+    from repro.energy.report import fmt_table
+
+    mo, d_model = modeled()
+    pa = paper_modeled()
+    ex, d_exec = executed(
+        shards=SMOKE_EXECUTED_SHARDS if smoke else FULL_EXECUTED_SHARDS
+    )
+
+    # crossover agreement: restrict the modeled curve to the executed
+    # sweep so both interpolate between the same shard counts
+    ex_shards = sorted(d_exec)
+    x_model = crossover_shards([(s, d_model[s]) for s in ex_shards])
+    x_exec = crossover_shards([(s, d_exec[s]) for s in ex_shards])
+    assert x_model is not None, (
+        f"no modeled exposed-comm crossover in {ex_shards}: {d_model}"
+    )
+    assert x_exec is not None, (
+        f"no executed exposed-comm crossover in {ex_shards}: {d_exec}"
+    )
+    rel = abs(x_model - x_exec) / x_exec
+    assert rel <= 0.05, (
+        f"modeled vs executed crossover disagree: {x_model:.2f} vs "
+        f"{x_exec:.2f} shards ({rel:.1%} > 5%)"
+    )
+    rows = mo + pa + ex + [
+        dict(
+            figure="strong_crossover",
+            side=SIDE,
+            crossover_modeled_shards=x_model,
+            crossover_executed_shards=x_exec,
+            crossover_rel_err=rel,
+        )
+    ]
+
+    print(fmt_table(
+        mo,
+        [("n_shards", "#GPUs"), ("layout", "layout"), ("grid", "grid"),
+         ("interior_bytes_shard", "interior B/shard"),
+         ("halo_bytes_shard", "halo B/shard"),
+         ("comm_exposed_iter_s", "exposed/iter (s)")],
+        f"Modeled strong scaling ({SIDE}^3, 7pt, hs, no overlap)",
+    ))
+    print(fmt_table(
+        [r for r in ex if r["figure"] == "strong_executed"],
+        [("n_shards", "#GPUs"), ("layout", "layout"), ("grid", "grid"),
+         ("iters", "iters"), ("bytes_shard", "int+halo B/shard"),
+         ("comm_exposed_iter_s", "exposed/iter (s)"),
+         ("wall_s", "wall (s)")],
+        "Executed strong scaling (--no-overlap)",
+    ))
+    print(
+        f"exposed-comm crossover: modeled {x_model:.2f} shards, "
+        f"executed {x_exec:.2f} shards ({rel:.2%} apart)"
+    )
+    write_results("strong_scaling", rows)
+
+
+if __name__ == "__main__":
+    main()

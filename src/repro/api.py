@@ -102,6 +102,24 @@ _AUTOTUNE_MSG = (
     "--autotune tunes the unpreconditioned CG path "
     "(--op cg without --amg/--amgx-analog)"
 )
+_GRID_MSG = (
+    "--grid RxC runs the 2-D partitioned CG path: requires --op cg and "
+    "no --amg/--amgx-analog/--autotune"
+)
+
+
+def parse_grid(text: str) -> tuple[int, int]:
+    """``"RxC"`` -> ``(R, C)`` with positive integers (ConfigError on junk)."""
+    parts = str(text).lower().split("x")
+    try:
+        r, c = (int(p) for p in parts)
+    except ValueError:
+        raise ConfigError(
+            f"grid must look like RxC (e.g. 4x4): {text!r}"
+        ) from None
+    if r < 1 or c < 1:
+        raise ConfigError(f"grid dimensions must be >= 1: {text!r}")
+    return r, c
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,9 +146,15 @@ class SolverConfig:
     tune_budget: int = 6
     tune_cache: str | None = None
     repeats: int = 1
+    grid: str | None = None  # "RxC" process grid; None = 1-D row layout
 
     def __post_init__(self):
         self.validate()
+
+    @property
+    def grid_shape(self) -> tuple[int, int] | None:
+        """``(rows, cols)`` of the requested process grid, or ``None``."""
+        return parse_grid(self.grid) if self.grid else None
 
     def validate(self):
         if self.op not in OPS:
@@ -170,6 +194,13 @@ class SolverConfig:
             self.op != "cg" or self.amg or self.amgx_analog
         ):
             raise ConfigError(_AUTOTUNE_MSG)
+        if self.grid:
+            parse_grid(self.grid)  # shape errors surface at construction
+            if (
+                self.op != "cg" or self.amg or self.amgx_analog
+                or self.autotune
+            ):
+                raise ConfigError(_GRID_MSG)
 
     @classmethod
     def from_args(cls, args) -> "SolverConfig":
@@ -185,6 +216,7 @@ class SolverConfig:
             autotune=bool(args.autotune), objective=str(args.objective),
             tune_budget=int(args.tune_budget), tune_cache=args.tune_cache,
             repeats=int(args.repeats),
+            grid=getattr(args, "grid", None),
         )
 
     def to_argv(self) -> list[str]:
@@ -208,6 +240,8 @@ class SolverConfig:
             argv.append("--autotune")
         if self.tune_cache:
             argv += ["--tune-cache", self.tune_cache]
+        if self.grid:
+            argv += ["--grid", self.grid]
         return argv
 
 
@@ -262,6 +296,8 @@ class SolverSession:
         )
         self.key = key
         self.mats: dict[tuple, Any] = {}
+        # (rows, cols) -> 2-D jax Mesh over the same devices, built lazily
+        self.grid_meshes: dict[tuple, Any] = {}
         # session-owned solver handles (core.cg.solver_handle cache=):
         # dropping the session frees its compiled executables with it,
         # instead of pinning them in the process-global handle LRU
@@ -273,19 +309,44 @@ class SolverSession:
 
     # -- partitions ---------------------------------------------------------
 
-    def matrix(self, fmt: str = "ell", block: int = 4):
-        """The sharded DistMat for (fmt, block); partitions on first use."""
+    def grid_mesh(self, grid):
+        """The 2-D ``(rows, cols)`` mesh over this session's devices."""
+        from repro.launch.mesh import make_grid_mesh
+
+        g = (int(grid[0]), int(grid[1]))
+        if g not in self.grid_meshes:
+            self.grid_meshes[g] = make_grid_mesh(*g)
+        return self.grid_meshes[g]
+
+    def mesh_for(self, mat):
+        """The mesh ``mat`` runs on: its grid mesh for a GridPlan matrix,
+        else the session's 1-D ``shards`` mesh."""
+        if getattr(mat.plan, "mode", None) == "grid":
+            return self.grid_mesh(mat.plan.grid)
+        return self.mesh
+
+    def matrix(self, fmt: str = "ell", block: int = 4, *, grid=None,
+               partition=None):
+        """The sharded DistMat for (fmt, block[, grid]); partitions on
+        first use. ``grid=(R, C)`` plans per-dimension halos and shards
+        onto the matching 2-D mesh (1-D keys stay 2-tuples, so pre-grid
+        callers and the autotune trial cache share unchanged keys);
+        ``partition`` optionally fixes the row blocks (e.g. the
+        ``pencil_partition`` layout of a permuted Poisson system)."""
         from repro.core.partition import partition_csr
         from repro.core.spmv import shard_matrix
 
-        k = (fmt, int(block))
+        if grid is not None:
+            grid = (int(grid[0]), int(grid[1]))
+            k = (fmt, int(block), grid)
+        else:
+            k = (fmt, int(block))
         if k not in self.mats:
-            self.mats[k] = shard_matrix(
-                self.mesh,
-                partition_csr(
-                    self.a, self.n_shards, fmt=fmt, block=(block, block)
-                ),
+            mat = partition_csr(
+                self.a, self.n_shards, fmt=fmt, block=(block, block),
+                grid=grid, partition=partition,
             )
+            self.mats[k] = shard_matrix(self.mesh_for(mat), mat)
             self.partitions += 1
         return self.mats[k]
 
@@ -336,13 +397,17 @@ class SolverSession:
 
         Handles live in the session's own cache (``self.handles``), so
         their compiled executables are released with the session (e.g. on
-        :class:`~repro.autotune.pool.SessionPool` LRU eviction)."""
+        :class:`~repro.autotune.pool.SessionPool` LRU eviction). A
+        GridPlan matrix is routed onto its 2-D mesh with the
+        ``("rows", "cols")`` collective axes automatically."""
         from repro.core.cg import solver_handle
+        from repro.core.spmv import matrix_axis
 
+        axis = matrix_axis(mat)
         return solver_handle(
-            self.mesh, mat, op=op, nrhs=nrhs, variant=variant,
+            self.mesh_for(mat), mat, op=op, nrhs=nrhs, variant=variant,
             precond=precond, tol=tol, maxiter=maxiter, overlap=overlap,
-            cache=self.handles,
+            axis=axis, cache=self.handles,
         )
 
     def close(self):
@@ -389,6 +454,19 @@ def _print_regions(label: str, ledger: dict):
             f"DE={r['de_j']:.4f}J flops={r['flops']:.3e} "
             f"hbm={r['hbm_bytes']:.3e}B ici={r['ici_bytes']:.3e}B"
         )
+
+
+def _plan_dim_bytes(plan) -> tuple[float, float]:
+    """Per-shard halo bytes per exchange, split by grid dimension.
+
+    GridPlan: the per-dimension widths (a corner buffer crosses both links,
+    so it counts in both entries and the two sum to the hop-weighted
+    collective total). 1-D plans: all traffic rides the single flat axis —
+    the ``cols`` axis of the equivalent ``1 x N`` grid."""
+    if getattr(plan, "mode", None) == "grid":
+        rows_b, cols_b = plan.dim_bytes_per_shard(8)
+        return float(rows_b), float(cols_b)
+    return 0.0, float(plan.collective_bytes_per_shard(8))
 
 
 def write_ledger_json(path: str | None, payload: dict):
@@ -449,12 +527,38 @@ def solve(
     a, name = spec.load()
     n = a.shape[0]
     n_shards = spec.shards or len(jax.devices())
+    b = np.ones(n)
+    grid_cfg = config.grid_shape
+    grid = None
+    grid_part = None
+    if grid_cfg is not None:
+        if grid_cfg[0] * grid_cfg[1] != n_shards:
+            raise ConfigError(
+                f"--grid {config.grid} covers "
+                f"{grid_cfg[0] * grid_cfg[1]} shards; running with "
+                f"{n_shards}"
+            )
+        if grid_cfg[0] > 1:  # 1 x N *is* the 1-D layout; build it identically
+            grid = grid_cfg
+    if grid is not None and spec.problem.startswith("poisson"):
+        # Pencil reordering: solve the symmetrically permuted system (same
+        # spectrum, CG iterates identical up to the permutation) so each
+        # shard owns a z x y pencil and the halo scales with its surface,
+        # not the full slab cross-section.
+        from repro.core.partition import pencil_partition
+        from repro.matrices import poisson as _poisson
+
+        stencil = "7pt" if spec.problem == "poisson7" else "27pt"
+        perm, grid_part = pencil_partition(
+            _poisson.cube(spec.side, stencil), grid
+        )
+        a = a[perm][:, perm].tocsr()
+        b = b[perm]
     if session is None:
         if pool is None:
             pool = default_pool()
         session = pool.session(a, n_shards)
     mesh = session.mesh
-    b = np.ones(n)
     nrhs = config.nrhs
     log(f"problem={name} n={n} nnz={a.nnz} shards={n_shards} nrhs={nrhs}")
 
@@ -470,11 +574,21 @@ def solve(
         ch = tune.chosen
         fmt, block = ch.fmt, ch.block
         variant, overlap = ch.variant, ch.overlap
+        grid = ch.grid  # --grid and --autotune are mutually exclusive
         cost = cost.at_freq(ch.freq)
         log(
             f"autotune: objective={tune.objective} chosen={ch.label} "
             f"cached={tune.cached} trialed={tune.candidates_trialed} "
             f"(space {tune.candidates_total})"
+        )
+
+    if grid is not None:
+        from repro.roofline.analysis import reduce_hops
+
+        # grid collectives stage over the sub-axes: no launch is deeper
+        # than the longer one (the extra stage launches are in the trace)
+        cost = dataclasses.replace(
+            cost, coll_hops=float(reduce_hops(n_shards, grid))
         )
 
     payload = dict(
@@ -509,11 +623,12 @@ def solve(
 
     # the session's partition cache already holds the autotune trials'
     # formats — the winner (and any repeat solve) reuses them
-    mat = session.matrix(fmt, block)
+    mat = session.matrix(fmt, block, grid=grid, partition=grid_part)
     # The Ginkgo-analog baseline keeps the flat ELL layout by definition;
     # only build its (expensive) padded-global partition when a naive leg
     # will actually run — the format sweep (--format != ell), the AMG
-    # comparisons, and the tuned path (whose comparison legs are the
+    # comparisons, the 2-D grid path (its comparison leg is the 1-D run of
+    # the same problem), and the tuned path (whose comparison legs are the
     # autotune trials themselves) never consume it.
     need_naive = (
         mat.fmt == "ell"  # resolved format: --format auto may pick ELL
@@ -523,6 +638,7 @@ def solve(
         # (benchmarks/multirhs_scaling.py)
         else not (
             config.amg or config.amgx_analog or config.autotune or nrhs > 1
+            or grid is not None
         )
     )
     matg = session.naive_matrix() if need_naive else None
@@ -534,16 +650,28 @@ def solve(
     payload["resolved_format"] = mat.fmt
     payload["interior_stored_bytes"] = int(mat.interior_stored_bytes())
     payload["stored_bytes"] = int(mat.stored_bytes())
+    if grid is not None or grid_cfg is not None:
+        from repro.core.spmv import matrix_axis
+
+        g = grid or grid_cfg
+        rows_b, cols_b = _plan_dim_bytes(mat.plan)
+        payload["grid"] = [int(g[0]), int(g[1])]
+        payload["halo_bytes_rows"] = float(rows_b)
+        payload["halo_bytes_cols"] = float(cols_b)
+        mesh = session.mesh_for(mat)
+        vec_axis = matrix_axis(mat)
+    else:
+        vec_axis = "shards"
 
     if nrhs > 1:
         from repro.core.cg import default_rhs_block
 
         Bpad = pad_block(default_rhs_block(n, nrhs), mat)
-        bp = shard_vector(mesh, Bpad)
-        x0 = shard_vector(mesh, np.zeros_like(Bpad))
+        bp = shard_vector(mesh, Bpad, vec_axis)
+        x0 = shard_vector(mesh, np.zeros_like(Bpad), vec_axis)
     else:
-        bp = shard_vector(mesh, pad_vector(b, mat))
-        x0 = shard_vector(mesh, np.zeros_like(pad_vector(b, mat)))
+        bp = shard_vector(mesh, pad_vector(b, mat), vec_axis)
+        x0 = shard_vector(mesh, np.zeros_like(pad_vector(b, mat)), vec_axis)
 
     if config.op == "spmv":
         legs = [

@@ -135,7 +135,7 @@ def autotune(
                 candidates_trialed=0, trials=(),
             )
 
-    from repro.core.partition import partition_csr
+    from repro.core.partition import default_grid, partition_csr
     from repro.core.spmv import shard_matrix
 
     mats = mats if mats is not None else {}
@@ -144,12 +144,22 @@ def autotune(
         mats[ell_key] = shard_matrix(mesh, partition_csr(a_csr, n_shards))
     mat_ell = mats[ell_key]
 
+    # The 2-D layout axis opens only where it can pay: below 8 shards the
+    # default grid is 1xS or 2x2 — same or more halo surface than 1-D — so
+    # small searches (and their cached decisions) are untouched.
+    grids: tuple = (None,)
+    if n_shards >= 8:
+        g = default_grid(n_shards)
+        if g[0] > 1:
+            grids = (None, g)
     if nrhs > 1:
         # the block body is block-HS; the fcg/pipecg recurrences have no
         # block counterpart here, so the variant axis collapses
-        candidates = enumerate_space(cost.power.chip, variants=("hs",))
+        candidates = enumerate_space(
+            cost.power.chip, variants=("hs",), grids=grids
+        )
     else:
-        candidates = enumerate_space(cost.power.chip)
+        candidates = enumerate_space(cost.power.chip, grids=grids)
     survivors, _ = prune(
         candidates, a_csr, mat_ell, cost=cost, objective=objective,
         keep=budget, nrhs=nrhs,

@@ -40,6 +40,7 @@ class Candidate:
     overlap: bool
     block: int = 4  # BCSR tile side; meaningful only when fmt == "bcsr"
     freq: float = 1.0  # relative DVFS point (ChipSpec.at_freq)
+    grid: tuple | None = None  # (rows, cols) process grid; None = 1-D
 
     @property
     def exec_key(self) -> tuple:
@@ -51,27 +52,38 @@ class Candidate:
             self.block if self.fmt == "bcsr" else 0,
             self.variant,
             self.overlap,
+            self.grid,
         )
 
     @property
     def label(self) -> str:
-        """Stable human/ledger label, e.g. ``hyb/pipecg/ov/f0.6``."""
+        """Stable human/ledger label, e.g. ``hyb/pipecg/ov/f0.6`` (a 2-D
+        candidate appends ``/gRxC``)."""
         fmt = f"bcsr{self.block}" if self.fmt == "bcsr" else self.fmt
         ov = "ov" if self.overlap else "ser"
-        return f"{fmt}/{self.variant}/{ov}/f{self.freq:g}"
+        base = f"{fmt}/{self.variant}/{ov}/f{self.freq:g}"
+        if self.grid is not None:
+            base += f"/g{self.grid[0]}x{self.grid[1]}"
+        return base
 
     def to_dict(self) -> dict:
-        return dict(
+        d = dict(
             fmt=self.fmt, variant=self.variant, overlap=self.overlap,
             block=self.block, freq=self.freq,
         )
+        # omitted when 1-D so pre-grid ledgers/caches stay byte-identical
+        if self.grid is not None:
+            d["grid"] = list(self.grid)
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "Candidate":
+        g = d.get("grid")
         return cls(
             fmt=str(d["fmt"]), variant=str(d["variant"]),
             overlap=bool(d["overlap"]), block=int(d["block"]),
             freq=float(d["freq"]),
+            grid=tuple(int(v) for v in g) if g else None,
         )
 
 
@@ -84,13 +96,14 @@ DEFAULT = Candidate(fmt="ell", variant="hs", overlap=True, block=4, freq=1.0)
 def sort_key(c: Candidate) -> tuple:
     """Deterministic preference order for score ties: nominal frequency
     first (never downclock without a measured win), then the simplest
-    format/variant/schedule."""
+    format/variant/schedule, 1-D layout before a process grid."""
     return (
         -c.freq,
         FORMATS.index(c.fmt),
         c.block,
         VARIANTS.index(c.variant),
         not c.overlap,
+        c.grid or (),
     )
 
 
@@ -102,12 +115,15 @@ def enumerate_space(
     overlaps: Iterable[bool] = (True, False),
     blocks: Iterable[int] = BCSR_BLOCKS,
     freqs: Iterable[float] | None = None,
+    grids: Iterable[tuple | None] = (None,),
 ) -> list[Candidate]:
     """All candidates, deterministically ordered (``sort_key``).
 
     ``freqs`` defaults to the chip's DVFS grid (``ChipSpec.freq_points``).
     ``bcsr`` fans out over ``blocks``; the other formats carry the default
-    tile side (it is dead weight for them).
+    tile side (it is dead weight for them). ``grids`` defaults to the 1-D
+    layout only; :func:`autotune.autotune` opens the grid axis at shard
+    counts where a 2-D layout can pay (>= 8).
     """
     freqs = tuple(freqs) if freqs is not None else chip.freq_points
     out = []
@@ -117,5 +133,9 @@ def enumerate_space(
             for variant in variants:
                 for overlap in overlaps:
                     for freq in freqs:
-                        out.append(Candidate(fmt, variant, overlap, block, freq))
+                        for grid in grids:
+                            out.append(
+                                Candidate(fmt, variant, overlap, block,
+                                          freq, grid)
+                            )
     return sorted(out, key=sort_key)

@@ -114,6 +114,8 @@ def run_trials(
     from repro.core.cg import default_rhs_block, make_block_solver, make_solver
     from repro.core.partition import pad_block, pad_vector, partition_csr
     from repro.core.spmv import shard_matrix, shard_vector
+    from repro.launch.mesh import make_grid_mesh
+    from repro.roofline.analysis import reduce_hops
 
     mats = mats if mats is not None else {}
     executions: dict[tuple, tuple] = {}  # exec_key -> (trace, iters, relres)
@@ -122,35 +124,43 @@ def run_trials(
         c = pred.candidate
         first = c.exec_key not in executions
         if first:
-            fmt_key = (c.fmt, c.block)
+            if c.grid is not None:
+                tmesh, axis = make_grid_mesh(*c.grid), ("rows", "cols")
+                fmt_key = (c.fmt, c.block, c.grid)
+            else:
+                tmesh, axis = mesh, "shards"
+                fmt_key = (c.fmt, c.block)
             if fmt_key not in mats:
                 mats[fmt_key] = shard_matrix(
-                    mesh,
+                    tmesh,
                     partition_csr(
-                        a_csr, n_shards, fmt=c.fmt, block=(c.block, c.block)
+                        a_csr, n_shards, fmt=c.fmt, block=(c.block, c.block),
+                        grid=c.grid,
                     ),
                 )
             mat = mats[fmt_key]
             if nrhs > 1:
                 solver = make_block_solver(
-                    mesh, mat, overlap=c.overlap, tol=tol,
-                    maxiter=trial_iters,
+                    tmesh, mat, overlap=c.overlap, tol=tol,
+                    maxiter=trial_iters, axis=axis,
                 )
                 Bp = pad_block(default_rhs_block(a_csr.shape[0], nrhs), mat)
-                bp = shard_vector(mesh, Bp)
-                x0 = shard_vector(mesh, np.zeros_like(Bp))
+                bp = shard_vector(tmesh, Bp, axis)
+                x0 = shard_vector(tmesh, np.zeros_like(Bp), axis)
                 with trace.capture() as tr:
                     res = solver(bp, x0)
                 jax.block_until_ready(res.x)
                 relres = float(np.max(np.asarray(res.rel_residual)))
             else:
                 solver = make_solver(
-                    mesh, mat, variant=c.variant, overlap=c.overlap,
-                    tol=tol, maxiter=trial_iters,
+                    tmesh, mat, variant=c.variant, overlap=c.overlap,
+                    tol=tol, maxiter=trial_iters, axis=axis,
                 )
                 b = np.ones(a_csr.shape[0])
-                bp = shard_vector(mesh, pad_vector(b, mat))
-                x0 = shard_vector(mesh, np.zeros_like(pad_vector(b, mat)))
+                bp = shard_vector(tmesh, pad_vector(b, mat), axis)
+                x0 = shard_vector(
+                    tmesh, np.zeros_like(pad_vector(b, mat)), axis
+                )
                 with trace.capture() as tr:
                     res = solver(bp, x0)
                 jax.block_until_ready(res.x)
@@ -158,9 +168,14 @@ def run_trials(
             executions[c.exec_key] = (tr, int(res.iters), relres)
         tr, iters, relres = executions[c.exec_key]
         iters_est = extrapolate_iters(iters, relres, tol, cap=maxiter_cap)
+        ccost = cost
+        if c.grid is not None:
+            ccost = dataclasses.replace(
+                cost, coll_hops=float(reduce_hops(n_shards, c.grid))
+            )
         led = trace.ledger_from_trace(
             tr, iters=iters_est, n_shards=n_shards,
-            cost=cost.at_freq(c.freq), overlap=c.overlap,
+            cost=ccost.at_freq(c.freq), overlap=c.overlap,
         )
         tot = led["totals"]
         trials.append(

@@ -46,7 +46,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.partition import DistMat
 from repro.core.spmv import dist_specs, local_block, overlap_default, spmv_shard
-from repro.core.vectors import fused_blocks, fused_dots, pdot
+from repro.core.vectors import all_reduce, fused_blocks, fused_dots, pdot
 from repro.energy import trace
 from repro.kernels import dispatch as kd
 
@@ -166,7 +166,7 @@ def _hs_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis, ops):
             with trace.region("spmv"):
                 w = A(p)
             with trace.region("reductions"):
-                pw = lax.psum(ops.fused_dots_n([(p, w)])[0], axis)  # all-reduce 1
+                pw = all_reduce(ops.fused_dots_n([(p, w)])[0], axis)  # all-reduce 1
                 trace.record_collective(1, w.dtype.itemsize)
                 alpha = rz / pw
                 # x += alpha p ; r -= alpha w ; local r'.r' — ONE pass
@@ -174,7 +174,7 @@ def _hs_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis, ops):
             if pre.is_identity:
                 z = r
                 with trace.region("reductions"):
-                    rr = lax.psum(rr_loc[0], axis)  # all-reduce 2
+                    rr = all_reduce(rr_loc[0], axis)  # all-reduce 2
                     trace.record_collective(1, w.dtype.itemsize)
                 rz_new = rr
             else:
@@ -182,7 +182,7 @@ def _hs_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis, ops):
                     z = pre.apply(pdata, r, axis)
                 with trace.region("reductions"):
                     rz_loc = ops.fused_dots_n([(r, z)])[0]
-                    d = lax.psum(jnp.stack([rz_loc, rr_loc[0]]), axis)  # AR 2 (fused)
+                    d = all_reduce(jnp.stack([rz_loc, rr_loc[0]]), axis)  # AR 2 (fused)
                     trace.record_collective(2, w.dtype.itemsize)
                 rz_new, rr = d[0], d[1]
             beta = rz_new / rz
@@ -238,7 +238,7 @@ def _fcg_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis, ops):
             with trace.region("spmv"):
                 w = A(u)
             with trace.region("reductions"):
-                d = lax.psum(  # the ONE all-reduce
+                d = all_reduce(  # the ONE all-reduce
                     ops.fused_dots_n([(r, u), (w, u), (r, r)]), axis
                 )
                 trace.record_collective(3, w.dtype.itemsize)
@@ -308,7 +308,7 @@ def _pipecg_body(
         pairs = (
             [(w, r), (r, r)] if pre.is_identity else [(r, u), (w, u), (r, r)]
         )
-        d = lax.psum(ops.fused_dots_n(pairs), axis)
+        d = all_reduce(ops.fused_dots_n(pairs), axis)
         trace.record_collective(len(pairs), w.dtype.itemsize)
         return d
 
@@ -431,10 +431,11 @@ def _sstep_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, s, axis):
 
     i0 = jnp.asarray(0, jnp.int32)
     # mark the zero-init blocks as shard-varying for the while_loop carry
+    ax_names = (axis,) if isinstance(axis, str) else tuple(axis)
     _pvary = (
-        (lambda v: lax.pcast(v, (axis,), to="varying"))
+        (lambda v: lax.pcast(v, ax_names, to="varying"))
         if hasattr(lax, "pcast")
-        else (lambda v: lax.pvary(v, (axis,)))
+        else (lambda v: lax.pvary(v, ax_names))
         if hasattr(lax, "pvary")
         else (lambda v: v)  # check_rep=False: no replication tracking needed
     )
@@ -538,7 +539,7 @@ def make_solver(
     tol: float = 1e-8,
     maxiter: int = 100,
     s: int = 2,
-    axis: str = "shards",
+    axis="shards",  # mesh axis name, or a (rows, cols) tuple for 2-D grids
     kernels: str | None = None,
     overlap: bool = True,
 ):
@@ -591,7 +592,7 @@ def make_solver(
     if variant == "pipecg":
         kw["overlap"] = overlap
 
-    mat_specs = dist_specs(mat)
+    mat_specs = dist_specs(mat, axis)
 
     localize = pre.localize or _default_localize
 
@@ -608,8 +609,8 @@ def make_solver(
     mapped = shard_map(
         fn,
         mesh=mesh,
-        in_specs=(mat_specs, pre.specs, P("shards", None), P("shards", None)),
-        out_specs=(P("shards", None), P(), P(), P()),
+        in_specs=(mat_specs, pre.specs, P(axis, None), P(axis, None)),
+        out_specs=(P(axis, None), P(), P(), P()),
         check_rep=False,  # jax 0.4.37: no replication rule for while_loop
     )
 
@@ -630,7 +631,7 @@ def make_solver_fn(
     tol: float = 1e-8,
     maxiter: int = 100,
     s: int = 2,
-    axis: str = "shards",
+    axis="shards",  # mesh axis name, or a (rows, cols) tuple for 2-D grids
     kernels: str | None = None,
     overlap: bool = True,
 ):
@@ -658,7 +659,7 @@ def make_solver_fn(
         kw["ops"] = kd.ops_for(kernels)
     if variant == "pipecg":
         kw["overlap"] = overlap
-    mat_specs = dist_specs(mat_like)
+    mat_specs = dist_specs(mat_like, axis)
     localize = pre.localize or _default_localize
 
     def fn(m, pdata, b, x0):
@@ -672,8 +673,8 @@ def make_solver_fn(
     mapped = shard_map(
         fn,
         mesh=mesh,
-        in_specs=(mat_specs, pre.specs, P("shards", None), P("shards", None)),
-        out_specs=(P("shards", None), P(), P(), P()),
+        in_specs=(mat_specs, pre.specs, P(axis, None), P(axis, None)),
+        out_specs=(P(axis, None), P(), P(), P()),
         check_rep=False,  # jax 0.4.37: no replication rule for while_loop
     )
 
@@ -751,7 +752,7 @@ def make_block_solver(
     precond: Preconditioner | None = None,
     tol: float = 1e-8,
     maxiter: int = 100,
-    axis: str = "shards",
+    axis="shards",  # mesh axis name, or a (rows, cols) tuple for 2-D grids
     kernels: str | None = None,
     overlap: bool = True,
 ):
@@ -775,7 +776,7 @@ def make_block_solver(
         )
     ops = kd.ops_for(kernels)
     kw = dict(tol=tol, maxiter=maxiter, axis=axis, ops=ops)
-    mat_specs = dist_specs(mat)
+    mat_specs = dist_specs(mat, axis)
 
     def fn(m, Bv, X0):
         mb = local_block(m)
@@ -789,10 +790,10 @@ def make_block_solver(
         mesh=mesh,
         in_specs=(
             mat_specs,
-            P("shards", None, None),
-            P("shards", None, None),
+            P(axis, None, None),
+            P(axis, None, None),
         ),
-        out_specs=(P("shards", None, None), P(), P(), P(), P()),
+        out_specs=(P(axis, None, None), P(), P(), P(), P()),
         check_rep=False,  # jax 0.4.37: no replication rule for while_loop
     )
 
@@ -929,7 +930,7 @@ def solver_handle(
     tol: float = 1e-8,
     maxiter: int = 100,
     s: int = 2,
-    axis: str = "shards",
+    axis="shards",  # mesh axis name, or a (rows, cols) tuple for 2-D grids
     kernels: str | None = None,
     overlap: bool = True,
     cache: dict | None = None,

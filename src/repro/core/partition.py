@@ -82,6 +82,54 @@ def plane_partition(n_global: int, plane: int, n_shards: int) -> RowPartition:
     return RowPartition(n_global, tuple(int(z) * plane for z in zs))
 
 
+def default_grid(n_shards: int) -> tuple[int, int]:
+    """Most-square ``(rows, cols)`` factorization with ``rows <= cols``.
+
+    4 -> (2, 2), 8 -> (2, 4), 16 -> (4, 4), 32 -> (4, 8). Primes (and
+    shard counts below 4) have no nontrivial factorization and map to
+    ``(1, n_shards)`` — the 1-D layout.
+    """
+    n_shards = int(n_shards)
+    r = max(int(np.sqrt(n_shards)), 1)
+    while r > 1 and n_shards % r:
+        r -= 1
+    return (r, n_shards // r)
+
+
+def pencil_partition(p, grid: tuple[int, int]) -> tuple[np.ndarray, RowPartition]:
+    """Pencil (z-block x y-block) row ordering for an ``R x C`` process grid.
+
+    Returns ``(perm, part)``: ``perm[new] = old`` is the symmetric row
+    permutation that makes the flat shard ``s = i*C + j`` own the pencil
+    ``z_blocks[i] x y_blocks[j] x [0, nx)`` as one contiguous row block, and
+    ``part`` is the matching :class:`RowPartition`. Solving the permuted
+    system ``A[perm][:, perm] x' = b[perm]`` with ``partition_csr(...,
+    grid=grid, partition=part)`` gives per-dimension halos that scale with
+    the pencil *surface* (``O(N^2 / sqrt(S))`` per shard), not the slab
+    cross-section (``O(N^2)``) — the 2-D decomposition's whole point.
+
+    ``p`` is duck-typed: it only needs ``nx``/``ny``/``nz`` (``PoissonProblem``
+    qualifies). Empty z-blocks / y-blocks (grid larger than the axis) yield
+    empty shards, which the partitioner handles.
+    """
+    gr, gc = int(grid[0]), int(grid[1])
+    z_blocks = np.array_split(np.arange(p.nz, dtype=np.int64), gr)
+    y_blocks = np.array_split(np.arange(p.ny, dtype=np.int64), gc)
+    xs = np.arange(p.nx, dtype=np.int64)
+    parts, starts, tot = [], [0], 0
+    for zb in z_blocks:
+        for yb in y_blocks:
+            zz, yy, xx = np.meshgrid(zb, yb, xs, indexing="ij")
+            ids = (xx + p.nx * (yy + p.ny * zz)).ravel()
+            parts.append(ids)
+            tot += ids.size
+            starts.append(tot)
+    perm = (
+        np.concatenate(parts) if parts else np.zeros(0, np.int64)
+    ).astype(np.int64)
+    return perm, RowPartition(p.nx * p.ny * p.nz, tuple(starts))
+
+
 # ---------------------------------------------------------------------------
 # Halo plan
 # ---------------------------------------------------------------------------
@@ -129,6 +177,90 @@ class HaloPlan:
         if self.mode == "allgather":
             return self.n_own_pad * (self.n_shards - 1) * itemsize
         return sum(self.widths) * itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class GridPlan:
+    """Static halo-exchange description for a 2-D ``R x C`` process grid.
+
+    Shards are laid out flat-row-major over the grid: flat shard
+    ``s = i * C + j`` sits at grid position ``(i, j)``. Rows stay
+    block-contiguous over the *flat* shard order (so the padded vector
+    layout is identical to the 1-D one); what changes is the neighbor
+    structure: ``shifts[k] = (di, dj)`` means shard ``(i, j)`` *receives* a
+    buffer of width ``widths[k]`` from shard ``(i + di, j + dj)`` (edge
+    shards receive zeros). Receive buffers concatenate after ``x_own`` in
+    shift order, exactly like :class:`HaloPlan` ring mode.
+
+    Each shift moves per dimension: a pure-column shift ``(0, dj)`` is one
+    ``ppermute`` over the mesh's ``cols`` axis, a pure-row shift ``(di, 0)``
+    one over ``rows``, and a corner shift ``(di, dj)`` chains the two (the
+    column hop first, then the row hop forwards the received buffer), i.e.
+    ``hops(k)`` ppermute launches and that many traversals of the buffer
+    over the interconnect.
+    """
+
+    mode: str  # always "grid"
+    grid: tuple[int, int]  # (rows, cols) of the process grid
+    shifts: tuple[tuple[int, int], ...]  # (di, dj) receive-from deltas
+    widths: tuple[int, ...]
+    n_own_pad: int  # uniform padded rows per shard
+    n_shards: int
+
+    #: Mesh axis names the exchange runs over, in (rows, cols) order.
+    axes: tuple[str, str] = ("rows", "cols")
+
+    @property
+    def ext_len(self) -> int:
+        return self.n_own_pad + sum(self.widths)
+
+    def buf_offset(self, k: int) -> int:
+        """Offset of receive buffer ``k`` inside x_ext."""
+        return self.n_own_pad + sum(self.widths[:k])
+
+    def hops(self, k: int) -> int:
+        """Interconnect hops of shift ``k`` (1 pure-axis, 2 corner)."""
+        di, dj = self.shifts[k]
+        return int(di != 0) + int(dj != 0)
+
+    def perm_rows(self, k: int) -> tuple[tuple[int, int], ...]:
+        """ppermute (src, dst) pairs over the ``rows`` axis for shift k."""
+        di = self.shifts[k][0]
+        gr = self.grid[0]
+        return tuple((i, i - di) for i in range(gr) if 0 <= i - di < gr)
+
+    def perm_cols(self, k: int) -> tuple[tuple[int, int], ...]:
+        """ppermute (src, dst) pairs over the ``cols`` axis for shift k."""
+        dj = self.shifts[k][1]
+        gc = self.grid[1]
+        return tuple((j, j - dj) for j in range(gc) if 0 <= j - dj < gc)
+
+    @property
+    def n_launches(self) -> int:
+        """Total ppermute launches per exchange (corners count twice)."""
+        return sum(self.hops(k) for k in range(len(self.shifts)))
+
+    def dim_bytes_per_shard(self, itemsize: int = 8) -> tuple[int, int]:
+        """(rows_bytes, cols_bytes) each shard moves per exchange.
+
+        A corner shift traverses both dimensions, so its width counts in
+        both entries; the sum of the two equals
+        :meth:`collective_bytes_per_shard`.
+        """
+        rows_b = sum(
+            w * itemsize for (di, _), w in zip(self.shifts, self.widths) if di
+        )
+        cols_b = sum(
+            w * itemsize for (_, dj), w in zip(self.shifts, self.widths) if dj
+        )
+        return rows_b, cols_b
+
+    def collective_bytes_per_shard(self, itemsize: int = 8) -> int:
+        """Bytes each shard moves per exchange (hop-weighted: a corner
+        buffer crosses two links)."""
+        return sum(
+            self.hops(k) * w * itemsize for k, w in enumerate(self.widths)
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -303,7 +435,7 @@ class DistMat:
     col_ext: jax.Array
     bnd_rows: jax.Array
     send_sel: jax.Array
-    plan: HaloPlan
+    plan: HaloPlan | GridPlan
     n_global: int
     row_starts: tuple[int, ...]
     n_bnd: tuple[int, ...] = ()
@@ -617,6 +749,7 @@ def partition_csr(
     force_allgather: bool = False,
     fmt: str = "ell",
     block: tuple[int, int] = (4, 4),
+    grid: tuple[int, int] | None = None,
 ) -> DistMat:
     """Partition a host scipy CSR matrix into a DistMat.
 
@@ -630,18 +763,35 @@ def partition_csr(
     (``ell``/``hyb``/``bcsr``) or ``"auto"`` (stored-bytes cost model, see
     ``roofline/format_model.py``); ``block`` is the BCSR tile shape. The
     boundary block and halo plan are format-agnostic.
+
+    ``grid=(R, C)`` (with ``R * C == n_shards``) plans the halo exchange
+    for a 2-D process grid instead: neighbor deltas become per-dimension
+    ``(di, dj)`` shifts executed as chained sub-axis ppermutes
+    (:class:`GridPlan`; ring-mode criterion applies per dimension). Rows
+    remain contiguously block-partitioned over the flat shard order, so
+    the vector layout — and, for ``grid=(1, N)``, the entire DistMat — is
+    identical to the 1-D build. Pair with :func:`pencil_partition` to make
+    the per-shard halo scale with the pencil surface.
     """
     a = a_csr.tocsr()
     n = a.shape[0]
     part = partition or balanced_partition(n, n_shards)
     R = part.max_own
 
+    if grid is not None:
+        gr, gc = int(grid[0]), int(grid[1])
+        if gr * gc != n_shards:
+            raise ValueError(
+                f"grid {gr}x{gc} does not cover n_shards={n_shards}"
+            )
+        if gr == 1:
+            grid = None  # 1 x N *is* the 1-D layout; build it identically
+
     indptr, indices, vals = a.indptr, a.indices.astype(np.int64), a.data
 
     # --- pass 1: discover shifts + per-(shard,shift) needed columns --------
     owners_cache = {}
-    needed: dict[int, list[set]] = {}  # shift -> per-shard set of global cols
-    shifts_seen: set[int] = set()
+    shifts_seen: set = set()  # int deltas (1-D) or (di, dj) tuples (grid)
     for s in range(n_shards):
         lo, hi = part.owner_range(s)
         cols = indices[indptr[lo] : indptr[hi]]
@@ -649,13 +799,29 @@ def partition_csr(
         ext_cols = np.unique(cols[~own_mask])
         owners = part.owner_of(ext_cols)
         owners_cache[s] = (ext_cols, owners)
-        for d in np.unique(owners - s):
-            shifts_seen.add(int(d))
+        if grid is not None:
+            di = owners // gc - s // gc
+            dj = owners % gc - s % gc
+            shifts_seen.update(zip(di.tolist(), dj.tolist()))
+        else:
+            for d in np.unique(owners - s):
+                shifts_seen.add(int(d))
 
-    mode = "ring" if all(abs(d) <= max_ring for d in shifts_seen) else "allgather"
+    if grid is not None:
+        near = all(max(abs(di), abs(dj)) <= max_ring for di, dj in shifts_seen)
+        mode = "grid" if near else "allgather"
+    else:
+        mode = (
+            "ring" if all(abs(d) <= max_ring for d in shifts_seen) else "allgather"
+        )
     if force_allgather:
         mode = "allgather"
-    shifts = tuple(sorted(shifts_seen, key=lambda d: (abs(d), d)))
+    if grid is not None:
+        shifts = tuple(
+            sorted(shifts_seen, key=lambda t: (max(abs(t[0]), abs(t[1])), t))
+        )
+    else:
+        shifts = tuple(sorted(shifts_seen, key=lambda d: (abs(d), d)))
 
     if mode == "ring":
         # recv_lists[k][i]: sorted global cols shard i receives from i+shifts[k]
@@ -684,6 +850,38 @@ def partition_csr(
                     g = recv_lists[k][i]
                     send_sel[j, off : off + len(g)] = (g - jlo).astype(np.int32)
                 off += widths[k]
+    elif mode == "grid":
+        # Same recv-list construction, with (di, dj) grid deltas: shard
+        # (i, j) receives recv_lists[k][s] from shard (i+di, j+dj).
+        recv_lists = [[np.zeros(0, np.int64) for _ in range(n_shards)] for _ in shifts]
+        for s in range(n_shards):
+            ext_cols, owners = owners_cache[s]
+            di = owners // gc - s // gc
+            dj = owners % gc - s % gc
+            for k, (ki, kj) in enumerate(shifts):
+                sel = (di == ki) & (dj == kj)
+                recv_lists[k][s] = ext_cols[sel]
+        widths = tuple(
+            max((len(recv_lists[k][i]) for i in range(n_shards)), default=0)
+            for k in range(len(shifts))
+        )
+        plan = GridPlan("grid", (gr, gc), shifts, widths, R, n_shards)
+
+        # Sender (ji, jj) serves the receiver at (ji - di, jj - dj); the
+        # chained per-dimension ppermutes deliver the buffer unchanged, so
+        # the sender packs it in the receiver's recv-list order.
+        W = sum(widths)
+        send_sel = np.zeros((n_shards, max(W, 1)), np.int32)
+        for j in range(n_shards):
+            off = 0
+            jlo, _ = part.owner_range(j)
+            ji, jj = divmod(j, gc)
+            for k, (ki, kj) in enumerate(shifts):
+                ri, rj = ji - ki, jj - kj  # receiver grid position
+                if 0 <= ri < gr and 0 <= rj < gc:
+                    g = recv_lists[k][ri * gc + rj]
+                    send_sel[j, off : off + len(g)] = (g - jlo).astype(np.int32)
+                off += widths[k]
     else:
         plan = HaloPlan("allgather", (), (), R, n_shards)
         send_sel = np.zeros((n_shards, 1), np.int32)
@@ -696,7 +894,7 @@ def partition_csr(
         lo, hi = part.owner_range(s)
         loc_rows, ext_rows = [], []
         # Map global ext col -> x_ext position for this shard.
-        if mode == "ring":
+        if mode != "allgather":
             ext_map = {}
             for k in range(len(shifts)):
                 base = plan.buf_offset(k)
@@ -708,7 +906,7 @@ def partition_csr(
             own = (cs >= lo) & (cs < hi)
             loc_rows.append(((cs[own] - lo).astype(np.int64), vs[own]))
             ec, ev = cs[~own], vs[~own]
-            if mode == "ring":
+            if mode != "allgather":
                 lidx = np.fromiter(
                     (ext_map[int(g)] for g in ec), dtype=np.int64, count=len(ec)
                 )

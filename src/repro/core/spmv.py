@@ -193,19 +193,29 @@ def boundary_matvec(
 
 
 def _halo_exchange(
-    x_own: jax.Array, send_sel: jax.Array, plan: HaloPlan, axis: str
+    x_own: jax.Array, send_sel: jax.Array, plan: HaloPlan, axis
 ) -> jax.Array:
-    """Ring halo exchange body (records counts in the *caller's* region).
+    """Ring/grid halo exchange body (records counts in the *caller's* region).
 
     For an (R, r) column block the exchanged rows are r-wide, so the ICI
     payload scales with the RHS count (same number of ppermute launches).
+
+    With a :class:`~repro.core.partition.GridPlan` (``axis`` is the
+    ``(rows, cols)`` tuple of mesh axis names) each shift runs as
+    per-dimension sub-axis ppermutes: the column hop first, then the row
+    hop forwards the received buffer — a corner shift therefore launches
+    two collectives and its payload crosses two links, which is exactly
+    how ``GridPlan.collective_bytes_per_shard``/``n_launches`` price it.
     """
+    grid = getattr(plan, "mode", None) == "grid"
     row_bytes = x_own.dtype.itemsize * _nrhs(x_own)
     trace.record_op(
         "halo_exchange",
         OpCounts(
             ici_bytes=float(plan.collective_bytes_per_shard(row_bytes)),
-            n_collectives=float(len(plan.shifts)),
+            n_collectives=float(
+                plan.n_launches if grid else len(plan.shifts)
+            ),
         ),
     )
     bufs = []
@@ -213,7 +223,15 @@ def _halo_exchange(
     for k, w in enumerate(plan.widths):
         sel = lax.slice_in_dim(send_sel, off, off + w)
         buf = x_own[sel]
-        bufs.append(lax.ppermute(buf, axis, plan.perm(k)))
+        if grid:
+            di, dj = plan.shifts[k]
+            if dj:
+                buf = lax.ppermute(buf, axis[1], plan.perm_cols(k))
+            if di:
+                buf = lax.ppermute(buf, axis[0], plan.perm_rows(k))
+            bufs.append(buf)
+        else:
+            bufs.append(lax.ppermute(buf, axis, plan.perm(k)))
         off += w
     if not bufs:
         return jnp.zeros((0,) + x_own.shape[1:], x_own.dtype)
@@ -221,9 +239,9 @@ def _halo_exchange(
 
 
 def halo_exchange(
-    x_own: jax.Array, send_sel: jax.Array, plan: HaloPlan, axis: str
+    x_own: jax.Array, send_sel: jax.Array, plan: HaloPlan, axis
 ) -> jax.Array:
-    """Ring halo exchange: returns the concatenated receive buffers.
+    """Ring/grid halo exchange: returns the concatenated receive buffers.
 
     ``send_sel`` is the local (W,) selector row; buffer k is sent to shard
     ``j - shifts[k]`` and received from ``j + shifts[k]`` (zeros at edges).
@@ -235,9 +253,9 @@ def halo_exchange(
         return _halo_exchange(x_own, send_sel, plan, axis)
 
 
-def gather_ext(mat: DistMat, x_own: jax.Array, axis: str) -> jax.Array:
+def gather_ext(mat: DistMat, x_own: jax.Array, axis) -> jax.Array:
     """Produce the external-vector buffer ``x_ext`` for this shard's rows."""
-    if mat.plan.mode == "ring":
+    if mat.plan.mode in ("ring", "grid"):
         halo = halo_exchange(x_own, mat.send_sel, mat.plan, axis)
         return jnp.concatenate([x_own, halo])
     # allgather mode: padded-global layout owner*R + local — exactly the
@@ -308,7 +326,7 @@ def spmv_shard(
     """
     if overlap is None:
         overlap = _OVERLAP_DEFAULT
-    ring = mat.plan.mode == "ring" and len(mat.plan.shifts) > 0
+    ring = mat.plan.mode in ("ring", "grid") and len(mat.plan.shifts) > 0
     if overlap and ring:
         with trace.region(trace.OVERLAP):
             halo = _halo_exchange(x_own, mat.send_sel, mat.plan, axis)
@@ -336,29 +354,43 @@ def local_block(mat: DistMat) -> DistMat:
     return jax.tree.map(lambda a: a[0] if a.ndim > 0 else a, mat)
 
 
-def dist_specs(mat: DistMat):
-    """PartitionSpec pytree for a DistMat sharded over the ``shards`` axis."""
+def dist_specs(mat: DistMat, axis="shards"):
+    """PartitionSpec pytree for a DistMat sharded over the shard axis.
+
+    ``axis`` may be a single mesh axis name or a tuple of names (2-D
+    grid meshes shard the flat leading dimension over both axes,
+    row-major — flat shard ``s = i * C + j``).
+    """
     return jax.tree.map(
-        lambda a: P("shards", *([None] * (a.ndim - 1))), mat
+        lambda a: P(axis, *([None] * (a.ndim - 1))), mat
     )
 
 
-def vec_spec():
-    return P("shards")
+def vec_spec(axis="shards"):
+    return P(axis)
 
 
-def shard_vector(mesh, xp) -> jax.Array:
+def matrix_axis(mat: DistMat):
+    """Mesh axis (name or tuple of names) this DistMat's plan shards over."""
+    if getattr(mat.plan, "mode", None) == "grid":
+        return tuple(mat.plan.axes)
+    return "shards"
+
+
+def shard_vector(mesh, xp, axis="shards") -> jax.Array:
     """(S, R[, r]) padded host vector or RHS block -> device array sharded
-    over the shards axis (all trailing axes replicated)."""
+    over the shard axis (all trailing axes replicated)."""
     xp = jnp.asarray(xp)
     sh = jax.sharding.NamedSharding(
-        mesh, P("shards", *([None] * (xp.ndim - 1)))
+        mesh, P(axis, *([None] * (xp.ndim - 1)))
     )
     return jax.device_put(xp, sh)
 
 
-def shard_matrix(mesh, mat: DistMat) -> DistMat:
-    specs = dist_specs(mat)
+def shard_matrix(mesh, mat: DistMat, axis=None) -> DistMat:
+    if axis is None:
+        axis = matrix_axis(mat)
+    specs = dist_specs(mat, axis)
     return jax.tree.map(
         lambda a, s: jax.device_put(a, jax.sharding.NamedSharding(mesh, s)),
         mat,
@@ -366,15 +398,16 @@ def shard_matrix(mesh, mat: DistMat) -> DistMat:
     )
 
 
-def make_spmv(mesh, mat: DistMat, axis: str = "shards", *, overlap: bool = True):
+def make_spmv(mesh, mat: DistMat, axis="shards", *, overlap: bool = True):
     """Jitted end-to-end distributed SpMV: (S,R) -> (S,R) sharded arrays.
 
     ``overlap`` selects the communication-hiding schedule (see
-    :func:`spmv_shard`).
+    :func:`spmv_shard`). ``axis`` is the mesh axis name — or the
+    ``(rows, cols)`` tuple for 2-D grid meshes.
     """
     from jax.experimental.shard_map import shard_map
 
-    specs = dist_specs(mat)
+    specs = dist_specs(mat, axis)
 
     def fn(m, x):
         mb = local_block(m)
@@ -384,8 +417,8 @@ def make_spmv(mesh, mat: DistMat, axis: str = "shards", *, overlap: bool = True)
     mapped = shard_map(
         fn,
         mesh=mesh,
-        in_specs=(specs, P("shards", None)),
-        out_specs=P("shards", None),
+        in_specs=(specs, P(axis, None)),
+        out_specs=P(axis, None),
         check_rep=False,  # jax 0.4.37: no replication rule for pallas_call
     )
     return jax.jit(mapped)

@@ -5,6 +5,13 @@ setting with GPU-side local work; the communication-reduction discipline
 (C2) shows up here as **fused reductions**: any group of inner products
 needed at the same algorithmic point is packed into a single ``lax.psum``
 of a small vector, producing exactly one collective.
+
+On a 2-D process grid (``axis`` a tuple of mesh axis names, see
+``core/partition.GridPlan``) every reduction routes through
+:func:`all_reduce`, which stages the psum hierarchically: intra-row-group
+(over the fast ``cols`` axis) first, then inter-group (over ``rows``) —
+two shallow trees of depth ``log C`` + ``log R`` instead of one deep tree
+of depth ``log (R*C)``.
 """
 
 from __future__ import annotations
@@ -15,6 +22,35 @@ from jax import lax
 
 from repro.energy import trace
 
+#: Ledger op name of the extra per-stage collectives a hierarchical
+#: (tuple-axis) all-reduce launches beyond the single fused one the
+#: caller already recorded.
+HIER_STAGE_OP = "hier_reduce_stage"
+
+
+def all_reduce(v: jax.Array, axis) -> jax.Array:
+    """Sum ``v`` over the shard axis.
+
+    ``axis`` a string: exactly ``lax.psum(v, axis)`` — the 1-D path, with
+    byte-identical traces to the pre-grid code. ``axis`` a tuple of mesh
+    axis names (ordered coarse-to-fine, e.g. ``("rows", "cols")``): a
+    hierarchical reduction, one psum per sub-axis starting with the
+    innermost. Only the *extra* stages are recorded here; the caller's
+    existing single-collective record covers the first.
+    """
+    if isinstance(axis, str):
+        return lax.psum(v, axis)
+    axes = tuple(axis)
+    out = v
+    for i, a in enumerate(reversed(axes)):
+        out = lax.psum(out, a)
+        if i > 0:
+            trace.record_collective(
+                jnp.asarray(v).size, jnp.asarray(v).dtype.itemsize,
+                op=HIER_STAGE_OP,
+            )
+    return out
+
 
 def _record_dots(pairs, n_out: int | None = None):
     """Executed-counts entry for a fused local-dots + all-reduce op
@@ -22,18 +58,18 @@ def _record_dots(pairs, n_out: int | None = None):
     trace.record_op("fused_dots", trace.fused_dots_counts(pairs, n_out))
 
 
-def pdot(x: jax.Array, y: jax.Array, axis: str) -> jax.Array:
-    """Global <x, y> — ONE all-reduce."""
+def pdot(x: jax.Array, y: jax.Array, axis) -> jax.Array:
+    """Global <x, y> — ONE all-reduce (one per grid dimension)."""
     _record_dots([(x, y)])
-    return lax.psum(jnp.vdot(x, y), axis)
+    return all_reduce(jnp.vdot(x, y), axis)
 
 
-def pnorm2(x: jax.Array, axis: str) -> jax.Array:
+def pnorm2(x: jax.Array, axis) -> jax.Array:
     """Global ||x||^2 — ONE all-reduce."""
     return pdot(x, x, axis)
 
 
-def fused_dots(pairs, axis: str) -> jax.Array:
+def fused_dots(pairs, axis) -> jax.Array:
     """Global inner products for a list of (x, y) pairs — ONE all-reduce.
 
     Returns a (len(pairs),) vector. This is the building block of the
@@ -42,10 +78,10 @@ def fused_dots(pairs, axis: str) -> jax.Array:
     """
     _record_dots(pairs)
     local = jnp.stack([jnp.vdot(x, y) for x, y in pairs])
-    return lax.psum(local, axis)
+    return all_reduce(local, axis)
 
 
-def fused_blocks(parts, axis: str) -> jax.Array:
+def fused_blocks(parts, axis) -> jax.Array:
     """Fuse arbitrary local reduction blocks into ONE all-reduce.
 
     ``parts`` is a list of arrays (any shapes); they are flattened,
@@ -55,7 +91,7 @@ def fused_blocks(parts, axis: str) -> jax.Array:
     """
     flat = jnp.concatenate([p.reshape(-1) for p in parts])
     trace.record_collective(flat.size, flat.dtype.itemsize, op="fused_blocks")
-    return lax.psum(flat, axis)
+    return all_reduce(flat, axis)
 
 
 def axpy(alpha, x: jax.Array, y: jax.Array) -> jax.Array:

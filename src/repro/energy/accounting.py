@@ -94,14 +94,20 @@ def spmv_counts(mat: DistMat, overlap: bool = True, nrhs: int = 1) -> OpCounts:
     r = max(int(nrhs), 1)
     slots = mat.nnz_stored / S
     n = mat.n_own_pad
-    halo = mat.plan.ext_len - n if mat.plan.mode == "ring" else (
-        n * (mat.n_shards - 1)
-    )
+    ringlike = mat.plan.mode in ("ring", "grid")
+    halo = mat.plan.ext_len - n if ringlike else n * (mat.n_shards - 1)
     flops = 2.0 * slots * r
     mat_bytes = mat.stored_bytes(_VB) / S
     hbm = mat_bytes + ((n + halo) + n) * _VB * r
     ici = float(mat.plan.collective_bytes_per_shard(_VB)) * r
-    n_coll = len(mat.plan.shifts) if mat.plan.mode == "ring" else 1.0
+    if mat.plan.mode == "grid":
+        # per-dimension sub-axis ppermutes: corners launch twice (and their
+        # payload crosses two links — priced in collective_bytes already)
+        n_coll = float(mat.plan.n_launches)
+    elif mat.plan.mode == "ring":
+        n_coll = len(mat.plan.shifts)
+    else:
+        n_coll = 1.0
     if mat.n_shards == 1:
         ici, n_coll = 0.0, 0.0
     return OpCounts(flops, hbm, ici, n_coll, hbm_matrix_bytes=mat_bytes)
@@ -194,6 +200,12 @@ class CostModel:
     flops_efficiency: float = 0.85  # achievable fraction of peak (memory-bound
     # sparse kernels rarely hit peak BW either; same knob applies)
     bw_efficiency: float = 0.80
+    # Per-collective tree depth override. None (the default) keeps the flat
+    # 1-D law ceil(log2(S)); grid runs set this to
+    # roofline.analysis.reduce_hops(S, grid) = ceil(log2(max(R, C))) — no
+    # staged sub-axis launch is deeper than its longer sub-axis (the extra
+    # launches are counted by the trace, not here).
+    coll_hops: float | None = None
 
     def at_freq(self, freq: float) -> "CostModel":
         """The same cost model on the chip downclocked to ``freq``
@@ -207,7 +219,10 @@ class CostModel:
         chip = self.power.chip
         t_comp = c.flops / (chip.peak_flops_f32 * self.flops_efficiency)
         t_mem = c.hbm_bytes / (chip.hbm_bw * self.bw_efficiency)
-        hops = max(math.ceil(math.log2(max(n_shards, 2))), 1)
+        if self.coll_hops is not None:
+            hops = self.coll_hops
+        else:
+            hops = max(math.ceil(math.log2(max(n_shards, 2))), 1)
         t_coll = (
             c.n_collectives * self.alpha_latency * hops
             + c.ici_bytes / chip.ici_bw

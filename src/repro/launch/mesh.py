@@ -38,6 +38,25 @@ def make_solver_mesh(n_shards: int | None = None):
     return jax.sharding.Mesh(devs, ("shards",))
 
 
+def make_grid_mesh(rows: int, cols: int):
+    """2-D ``(rows, cols)`` mesh for grid-partitioned solves.
+
+    Flat shard ``s = i * cols + j`` maps to grid position ``(i, j)`` —
+    sharding a leading axis with ``PartitionSpec(("rows", "cols"))`` gives
+    the same flat-row-major placement as the 1-D ``shards`` mesh over the
+    same devices, so the padded vector layout is identical; what the two
+    named sub-axes buy is per-dimension collectives (``GridPlan`` halo
+    ppermutes, hierarchical all-reduce).
+    """
+    devs = np.asarray(jax.devices())[: rows * cols]
+    if devs.size < rows * cols:
+        raise ValueError(
+            f"grid {rows}x{cols} needs {rows * cols} devices; "
+            f"only {devs.size} available"
+        )
+    return jax.sharding.Mesh(devs.reshape(rows, cols), ("rows", "cols"))
+
+
 def flatten_to_solver_mesh(mesh: jax.sharding.Mesh):
     """Reinterpret a production mesh's devices as a 1-D solver mesh."""
     return jax.sharding.Mesh(mesh.devices.reshape(-1), ("shards",))

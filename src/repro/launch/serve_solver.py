@@ -98,12 +98,27 @@ class ServeEngine:
         objective: str = "energy",
         tune_budget: int = 4,
         tune_cache: str | None = None,
+        grid: tuple | None = None,
+        grid_partition=None,
         pool=None,
         clock: Callable[[], float] | None = None,
         verbose: bool = False,
     ):
         from repro.autotune.pool import SessionPool
 
+        if grid is not None and autotune:
+            raise ValueError(
+                "--grid with --autotune is not supported: the tuner owns "
+                "the layout axis (it searches grids itself at >= 8 shards)"
+            )
+        # 1 x N *is* the 1-D layout; normalize so the engine takes the
+        # plain path (same normalization as partition_csr / api.solve)
+        if grid is not None and int(grid[0]) <= 1:
+            grid = None
+        self.grid = (
+            (int(grid[0]), int(grid[1])) if grid is not None else None
+        )
+        self.grid_partition = grid_partition
         self.n_shards = int(n_shards)
         self.slots = max(int(slots), 1)
         self.fmt, self.block = fmt, int(block)
@@ -182,6 +197,15 @@ class ServeEngine:
         from repro.energy.accounting import CostModel
 
         cost = CostModel()
+        if self.grid is not None:
+            from repro.roofline.analysis import reduce_hops
+
+            # grid collectives stage over the sub-axes (same pricing as
+            # api.solve): no launch is deeper than the longer sub-axis
+            cost = dataclasses.replace(
+                cost,
+                coll_hops=float(reduce_hops(self.n_shards, self.grid)),
+            )
         fmt, block = self.fmt, self.block
         variant, overlap = self.variant, self.overlap
         tuned_label = None
@@ -214,7 +238,7 @@ class ServeEngine:
 
         from repro.core.partition import pad_block, pad_vector, unpad_block, \
             unpad_vector
-        from repro.core.spmv import shard_vector
+        from repro.core.spmv import matrix_axis, shard_vector
         from repro.energy import trace
         from repro.energy.attribution import split_block_energy
 
@@ -226,7 +250,12 @@ class ServeEngine:
         t_start = self.clock()
         p0, t0 = sess.partitions, sess.tune_trials
         cfg = self._session_config(sess)
-        mat = sess.matrix(cfg["fmt"], cfg["block"])
+        mat = sess.matrix(
+            cfg["fmt"], cfg["block"], grid=self.grid,
+            partition=self.grid_partition,
+        )
+        mesh = sess.mesh_for(mat)
+        axis = matrix_axis(mat)
         r, k = self.slots, len(reqs)
         h = sess.solver(
             mat, nrhs=r, variant=cfg["variant"], tol=self.tol,
@@ -241,8 +270,10 @@ class ServeEngine:
         if r == 1:
             # sequential serving: each request is its own "batch of one"
             req = reqs[0]
-            bp = shard_vector(sess.mesh, pad_vector(req.b, mat))
-            x0 = shard_vector(sess.mesh, np.zeros_like(pad_vector(req.b, mat)))
+            bp = shard_vector(mesh, pad_vector(req.b, mat), axis)
+            x0 = shard_vector(
+                mesh, np.zeros_like(pad_vector(req.b, mat)), axis
+            )
             res = h.warm(bp, x0)
             if res is None:
                 res = h.fn(bp, x0)
@@ -263,8 +294,8 @@ class ServeEngine:
             for j, req in enumerate(reqs):
                 B[:, j] = req.b
             Bp = pad_block(B, mat)
-            bp = shard_vector(sess.mesh, Bp)
-            x0 = shard_vector(sess.mesh, np.zeros_like(Bp))
+            bp = shard_vector(mesh, Bp, axis)
+            x0 = shard_vector(mesh, np.zeros_like(Bp), axis)
             res = h.warm(bp, x0)
             if res is None:
                 res = h.fn(bp, x0)
@@ -356,15 +387,18 @@ class ServeEngine:
             dict(index=i, **s.stats())
             for i, s in enumerate(self.pool.sessions.values())
         ]
+        engine = dict(
+            slots=self.slots, shards=self.n_shards, format=self.fmt,
+            block=self.block, variant=self.variant,
+            overlap=self.overlap, tol=self.tol, maxiter=self.maxiter,
+            autotune=self.autotune, objective=self.objective,
+            tune_budget=self.tune_budget,
+        )
+        if self.grid is not None:  # absent on the 1-D path: ledgers stay
+            engine["grid"] = [self.grid[0], self.grid[1]]  # byte-identical
         return dict(
             schema=1,
-            engine=dict(
-                slots=self.slots, shards=self.n_shards, format=self.fmt,
-                block=self.block, variant=self.variant,
-                overlap=self.overlap, tol=self.tol, maxiter=self.maxiter,
-                autotune=self.autotune, objective=self.objective,
-                tune_budget=self.tune_budget,
-            ),
+            engine=engine,
             n_requests=n_req,
             n_batches=len(self.batches),
             cold_batches=len(cold_b),
@@ -417,6 +451,12 @@ def parse_args(argv=None):
                     choices=["energy", "edp", "time"])
     ap.add_argument("--tune-budget", type=int, default=4)
     ap.add_argument("--tune-cache", default=None)
+    ap.add_argument("--grid", default=None,
+                    help="RxC process grid for the 2-D partitioned path "
+                         "(R*C must equal the shard count; 1xN is the 1-D "
+                         "identity; incompatible with --autotune). Poisson "
+                         "problems are pencil-reordered as in launch.solve "
+                         "(docs/scaling.md)")
     ap.add_argument("--ledger", default=None,
                     help="write the engine ledger JSON here")
     return ap.parse_args(argv)
@@ -433,7 +473,7 @@ def main(argv=None):
 
     jax.config.update("jax_enable_x64", True)
 
-    from repro.api import ProblemSpec, write_ledger_json
+    from repro.api import ProblemSpec, parse_grid, write_ledger_json
     from repro.core.cg import default_rhs_block
 
     spec = ProblemSpec(
@@ -443,18 +483,43 @@ def main(argv=None):
     a, name = spec.load()
     n = a.shape[0]
     n_shards = args.shards or len(jax.devices())
+    grid = parse_grid(args.grid) if args.grid else None
+    grid_part = None
+    perm = None
+    if grid is not None:
+        if grid[0] * grid[1] != n_shards:
+            raise SystemExit(
+                f"--grid {args.grid} covers {grid[0] * grid[1]} shards; "
+                f"serving with {n_shards}"
+            )
+        if grid[0] > 1 and args.problem.startswith("poisson"):
+            # pencil reordering, exactly as api.solve (docs/scaling.md)
+            from repro.core.partition import pencil_partition
+            from repro.matrices import poisson as _poisson
+
+            stencil = "7pt" if args.problem == "poisson7" else "27pt"
+            perm, grid_part = pencil_partition(
+                _poisson.cube(args.side, stencil), grid
+            )
+            a = a[perm][:, perm].tocsr()
     print(
         f"serve: problem={name} n={n} nnz={a.nnz} shards={n_shards} "
         f"slots={args.slots} requests={args.requests}"
+        + (f" grid={args.grid}" if args.grid else "")
     )
     engine = ServeEngine(
         n_shards, slots=args.slots, fmt=args.fmt, block=args.block,
         variant=args.variant, overlap=args.overlap, tol=args.tol,
         maxiter=args.maxiter, autotune=args.autotune,
         objective=args.objective, tune_budget=args.tune_budget,
-        tune_cache=args.tune_cache, verbose=True,
+        tune_cache=args.tune_cache, grid=grid, grid_partition=grid_part,
+        verbose=True,
     )
     B = default_rhs_block(n, max(int(args.requests), 1))
+    if perm is not None:
+        # permute the RHS rows with the system so each request solves the
+        # same problem as its 1-D counterpart (up to the permutation)
+        B = B[perm]
     engine.serve(a, (B[:, j] for j in range(B.shape[1])))
     led = engine.ledger()
     tot = led["totals"]

@@ -84,6 +84,12 @@ def parse_args(argv=None):
                          "is streamed once per iteration for all RHS "
                          "columns (docs/solvers.md). Requires --op cg, "
                          "--variant hs, no AMG")
+    ap.add_argument("--grid", default=None,
+                    help="RxC process grid for the 2-D partitioned CG path "
+                         "(R*C must equal the shard count; 1xN reproduces "
+                         "the 1-D layout exactly). Poisson problems are "
+                         "pencil-reordered so the halo scales with the "
+                         "pencil surface (docs/scaling.md)")
     ap.add_argument("--amg", action="store_true", help="PCG with AMG")
     ap.add_argument("--amgx-analog", action="store_true",
                     help="PCG with the plain-aggregation (AmgX-analog) AMG")
@@ -109,10 +115,10 @@ def main(argv=None):
     try:
         spec = api.ProblemSpec.from_args(args)
         config = api.SolverConfig.from_args(args)
+        api.solve(spec, config, ledger=args.ledger)
     except api.ConfigError as e:
         # the historical argparse-era behavior: message on stderr, exit 1
         raise SystemExit(str(e)) from e
-    api.solve(spec, config, ledger=args.ledger)
 
 
 if __name__ == "__main__":

@@ -223,14 +223,36 @@ CG_COMM = {
 }
 
 
+def reduce_hops(n_shards: int, grid: tuple[int, int] | None = None) -> int:
+    """Per-collective tree depth the cost model charges.
+
+    1-D (``grid`` is ``None`` or ``(1, N)``): one tree over all ``S``
+    shards — ``ceil(log2(S))``. On a ``(R, C)`` grid with ``R > 1`` the
+    hierarchical all-reduce stages over the sub-axes, so no single launch
+    is deeper than its longer sub-axis: ``ceil(log2(max(R, C)))``.
+    """
+    if grid is not None and grid[0] > 1:
+        n_shards = max(grid)
+    return max(math.ceil(math.log2(max(n_shards, 2))), 1)
+
+
+def reduce_launches(grid: tuple[int, int] | None = None) -> int:
+    """Collective launches per logical all-reduce: 1 on a flat axis, 2 for
+    the staged intra-row-group + inter-group reduction on a true 2-D grid."""
+    return 2 if (grid is not None and grid[0] > 1) else 1
+
+
 def cg_exposed_latency_s(
     variant: str, n_shards: int, *, alpha: float = 5e-6,
     hide_budget_s: float = float("inf"),
+    grid: tuple[int, int] | None = None,
 ) -> float:
     """Exposed all-reduce latency per CG iteration (seconds).
 
-    Each all-reduce costs ``alpha * ceil(log2(S))`` (the CostModel latency
-    term); a variant's ``hidden`` reductions are absorbed into the
+    Each all-reduce costs ``alpha * hops * launches`` with ``hops`` from
+    :func:`reduce_hops` and ``launches`` from :func:`reduce_launches`
+    (flat axis: one ``ceil(log2(S))``-deep tree; 2-D grid: two shallower
+    staged trees); a variant's ``hidden`` reductions are absorbed into the
     concurrent SpMV/preconditioner up to ``hide_budget_s`` (pass that
     phase's compute time; the default — an unbounded budget — models the
     asymptotic large-problem regime where the matvec always covers the
@@ -239,9 +261,41 @@ def cg_exposed_latency_s(
     if n_shards <= 1:
         return 0.0
     c = CG_COMM[variant]
-    lat = alpha * max(math.ceil(math.log2(max(n_shards, 2))), 1)
+    lat = alpha * reduce_hops(n_shards, grid) * reduce_launches(grid)
     exposed = c["allreduces"] * lat - min(c["hidden"] * lat, hide_budget_s)
     return max(exposed, 0.0)
+
+
+def pencil_halo_widths(p, grid: tuple[int, int]) -> dict:
+    """Closed-form per-shift halo widths for a pencil-partitioned Poisson
+    cube — the surface-not-volume law the 2-D layout is built on.
+
+    ``p`` is a ``matrices.poisson.PoissonProblem``; ``grid = (R, C)`` splits
+    z into ``R`` blocks and y into ``C`` slabs (``core.partition.
+    pencil_partition``), every shard keeping full x lines. Returns
+    ``{(di, dj): width}`` where width is the receive-buffer length the
+    worst-placed shard needs from its ``(i+di, j+dj)`` neighbor:
+
+      z-face (±1, 0):  nx * ceil(ny / C)   one z-plane, own y-slab wide
+      y-face (0, ±1):  nx * ceil(nz / R)   one y-plane, own z-block deep
+      corner (±1, ±1): nx                  one x line (27pt stencil only)
+
+    This must match ``GridPlan.widths`` built from the actual sparsity —
+    asserted in the scale-out tests.
+    """
+    gr, gc = grid
+    max_zb = -(-p.nz // gr)
+    max_yb = -(-p.ny // gc)
+    widths: dict[tuple[int, int], int] = {}
+    if gr > 1:
+        widths[(1, 0)] = widths[(-1, 0)] = p.nx * max_yb
+    if gc > 1:
+        widths[(0, 1)] = widths[(0, -1)] = p.nx * max_zb
+    if p.stencil == "27pt" and gr > 1 and gc > 1:
+        for di in (-1, 1):
+            for dj in (-1, 1):
+                widths[(di, dj)] = p.nx
+    return widths
 
 
 def cg_vector_traffic(n: int, *, variant: str = "hs", fused: bool = True,
