@@ -29,6 +29,7 @@ BENCHES = [
     ("hotpath_fusion (§Perf)", "benchmarks.hotpath_fusion"),
     ("overlap_scaling (§Overlap)", "benchmarks.overlap_scaling"),
     ("strong_scaling (§ScaleOut)", "benchmarks.strong_scaling"),
+    ("sstep_scaling (§CommAvoid)", "benchmarks.sstep_scaling"),
     ("multirhs_scaling (§MultiRHS)", "benchmarks.multirhs_scaling"),
     ("autotune_sweep (§Autotune)", "benchmarks.autotune_sweep"),
     ("serve_bench (§Serving)", "benchmarks.serve_bench"),
@@ -67,7 +68,8 @@ def main(argv=None):
         if args.fast and not args.smoke and modname in (
             "benchmarks.pcg_scaling", "benchmarks.suitesparse",
             "benchmarks.hotpath_fusion", "benchmarks.overlap_scaling",
-            "benchmarks.strong_scaling", "benchmarks.multirhs_scaling",
+            "benchmarks.strong_scaling", "benchmarks.sstep_scaling",
+            "benchmarks.multirhs_scaling",
             "benchmarks.autotune_sweep", "benchmarks.serve_bench",
         ):
             print(f"=== {title}: SKIPPED (--fast) ===\n")

@@ -106,6 +106,9 @@ _GRID_MSG = (
     "--grid RxC runs the 2-D partitioned CG path: requires --op cg and "
     "no --amg/--amgx-analog/--autotune"
 )
+_SSTEP_MSG = (
+    "--s sets the s-step block size: requires --variant sstep"
+)
 
 
 def parse_grid(text: str) -> tuple[int, int]:
@@ -147,6 +150,10 @@ class SolverConfig:
     tune_cache: str | None = None
     repeats: int = 1
     grid: str | None = None  # "RxC" process grid; None = 1-D row layout
+    # s-step block size (variant == "sstep" only). None = the solver
+    # default (s=2); setting it partitions with halo_depth=s ghost zones
+    # so the matrix-powers basis pays one widened exchange per block.
+    s: int | None = None
 
     def __post_init__(self):
         self.validate()
@@ -185,6 +192,11 @@ class SolverConfig:
             raise ConfigError(
                 f"tune-budget must be >= 1: {self.tune_budget}"
             )
+        if self.s is not None:
+            if self.s < 1:
+                raise ConfigError(f"s must be >= 1: {self.s}")
+            if self.variant != "sstep":
+                raise ConfigError(_SSTEP_MSG)
         if self.nrhs > 1 and (
             self.op != "cg" or self.amg or self.amgx_analog
             or self.variant != "hs"
@@ -217,6 +229,10 @@ class SolverConfig:
             tune_budget=int(args.tune_budget), tune_cache=args.tune_cache,
             repeats=int(args.repeats),
             grid=getattr(args, "grid", None),
+            s=(
+                int(args.s)
+                if getattr(args, "s", None) is not None else None
+            ),
         )
 
     def to_argv(self) -> list[str]:
@@ -242,6 +258,8 @@ class SolverConfig:
             argv += ["--tune-cache", self.tune_cache]
         if self.grid:
             argv += ["--grid", self.grid]
+        if self.s is not None:
+            argv += ["--s", str(self.s)]
         return argv
 
 
@@ -326,13 +344,16 @@ class SolverSession:
         return self.mesh
 
     def matrix(self, fmt: str = "ell", block: int = 4, *, grid=None,
-               partition=None):
+               partition=None, halo_depth: int = 1):
         """The sharded DistMat for (fmt, block[, grid]); partitions on
         first use. ``grid=(R, C)`` plans per-dimension halos and shards
         onto the matching 2-D mesh (1-D keys stay 2-tuples, so pre-grid
         callers and the autotune trial cache share unchanged keys);
         ``partition`` optionally fixes the row blocks (e.g. the
-        ``pencil_partition`` layout of a permuted Poisson system)."""
+        ``pencil_partition`` layout of a permuted Poisson system);
+        ``halo_depth > 1`` builds the s-step ghost zones under a
+        depth-tagged key — the same key shape the autotune trial stage
+        uses, so a tuned sstep winner's partition is reused here."""
         from repro.core.partition import partition_csr
         from repro.core.spmv import shard_matrix
 
@@ -341,10 +362,13 @@ class SolverSession:
             k = (fmt, int(block), grid)
         else:
             k = (fmt, int(block))
+        depth = max(int(halo_depth), 1)
+        if depth > 1:
+            k = k + (("halo", depth),)
         if k not in self.mats:
             mat = partition_csr(
                 self.a, self.n_shards, fmt=fmt, block=(block, block),
-                grid=grid, partition=partition,
+                grid=grid, partition=partition, halo_depth=depth,
             )
             self.mats[k] = shard_matrix(self.mesh_for(mat), mat)
             self.partitions += 1
@@ -392,7 +416,7 @@ class SolverSession:
 
     def solver(self, mat, *, op: str = "cg", nrhs: int = 1,
                variant: str = "hs", precond=None, tol: float = 1e-8,
-               maxiter: int = 100, overlap: bool = True):
+               maxiter: int = 100, overlap: bool = True, s: int = 2):
         """Cached :class:`~repro.core.cg.SolverHandle` for (mat, config).
 
         Handles live in the session's own cache (``self.handles``), so
@@ -407,7 +431,7 @@ class SolverSession:
         return solver_handle(
             self.mesh_for(mat), mat, op=op, nrhs=nrhs, variant=variant,
             precond=precond, tol=tol, maxiter=maxiter, overlap=overlap,
-            axis=axis, cache=self.handles,
+            axis=axis, s=s, cache=self.handles,
         )
 
     def close(self):
@@ -566,6 +590,7 @@ def solve(
     tune = None
     fmt, block = config.fmt, config.block
     variant, overlap = config.variant, config.overlap
+    sstep_s = config.s or 2  # s-step block size (used iff variant == sstep)
     if config.autotune:
         tune = session.autotune(
             objective=config.objective, budget=config.tune_budget,
@@ -574,6 +599,8 @@ def solve(
         ch = tune.chosen
         fmt, block = ch.fmt, ch.block
         variant, overlap = ch.variant, ch.overlap
+        if ch.variant == "sstep":
+            sstep_s = ch.s
         grid = ch.grid  # --grid and --autotune are mutually exclusive
         cost = cost.at_freq(ch.freq)
         log(
@@ -622,8 +649,13 @@ def solve(
         )
 
     # the session's partition cache already holds the autotune trials'
-    # formats — the winner (and any repeat solve) reuses them
-    mat = session.matrix(fmt, block, grid=grid, partition=grid_part)
+    # formats — the winner (and any repeat solve) reuses them; an s-step
+    # solve partitions with halo_depth=s so the matrix-powers basis pays
+    # one widened exchange per s-iteration block
+    depth = sstep_s if (variant == "sstep" and config.op == "cg") else 1
+    mat = session.matrix(
+        fmt, block, grid=grid, partition=grid_part, halo_depth=depth
+    )
     # The Ginkgo-analog baseline keeps the flat ELL layout by definition;
     # only build its (expensive) padded-global partition when a naive leg
     # will actually run — the format sweep (--format != ell), the AMG
@@ -650,6 +682,11 @@ def solve(
     payload["resolved_format"] = mat.fmt
     payload["interior_stored_bytes"] = int(mat.interior_stored_bytes())
     payload["stored_bytes"] = int(mat.stored_bytes())
+    if depth > 1:
+        # s-step run: record the ghost-zone depth actually built (allgather
+        # fallbacks report 1 — the matrix-powers path did not engage)
+        payload["halo_depth"] = int(mat.halo_depth)
+        payload["s"] = int(sstep_s)
     if grid is not None or grid_cfg is not None:
         from repro.core.spmv import matrix_axis
 
@@ -729,6 +766,7 @@ def solve(
     h = session.solver(
         mat, nrhs=nrhs, variant=variant, precond=precond,
         tol=config.tol, maxiter=config.maxiter, overlap=overlap,
+        s=sstep_s,
     )
     legs = [
         ("BCMGX-analog" if not config.amgx_analog else "AmgX-analog", h)

@@ -31,13 +31,19 @@ from repro.autotune.cache import DEFAULT_PATH, TuneCache, fingerprint, model_has
 from repro.autotune.objective import OBJECTIVES, score, total_energy_j
 from repro.autotune.pool import SessionPool, matrix_hash, session_key
 from repro.autotune.prune import Prediction, interior_stats, prune
-from repro.autotune.space import DEFAULT, Candidate, enumerate_space, sort_key
+from repro.autotune.space import (
+    DEFAULT,
+    SSTEP_S,
+    Candidate,
+    enumerate_space,
+    sort_key,
+)
 from repro.autotune.trial import Trial, extrapolate_iters, run_trials
 from repro.energy.accounting import CostModel
 
 __all__ = [
-    "OBJECTIVES", "DEFAULT", "DEFAULT_PATH", "Candidate", "Prediction",
-    "SessionPool", "Trial", "TuneCache", "TuneResult", "autotune",
+    "OBJECTIVES", "DEFAULT", "DEFAULT_PATH", "SSTEP_S", "Candidate",
+    "Prediction", "SessionPool", "Trial", "TuneCache", "TuneResult", "autotune",
     "enumerate_space", "extrapolate_iters", "fingerprint", "interior_stats",
     "matrix_hash", "model_hash", "prune", "run_trials", "score",
     "session_key", "sort_key", "total_energy_j",
@@ -152,6 +158,11 @@ def autotune(
         g = default_grid(n_shards)
         if g[0] > 1:
             grids = (None, g)
+    # The s-step axis opens at the same threshold: below it the exposed
+    # collective latency sstep amortizes cannot pay for the redundant
+    # ghost compute, and small searches (and their cached decisions)
+    # stay byte-identical to the pre-sstep tuner.
+    sstep_s: tuple = SSTEP_S if n_shards >= 8 else ()
     if nrhs > 1:
         # the block body is block-HS; the fcg/pipecg recurrences have no
         # block counterpart here, so the variant axis collapses
@@ -159,7 +170,9 @@ def autotune(
             cost.power.chip, variants=("hs",), grids=grids
         )
     else:
-        candidates = enumerate_space(cost.power.chip, grids=grids)
+        candidates = enumerate_space(
+            cost.power.chip, grids=grids, sstep_s=sstep_s
+        )
     survivors, _ = prune(
         candidates, a_csr, mat_ell, cost=cost, objective=objective,
         keep=budget, nrhs=nrhs,

@@ -177,11 +177,31 @@ def phase_counts(
     )
     n = mat_ell.n_own_pad
     v = _hotpath_variant(candidate, nrhs)
+    s = max(candidate.s, 1)
+    if v == "sstep" and s > 1 and mat_ell.plan.mode in ("ring", "grid"):
+        # matrix-powers pricing (ranking approximation — the trial stage
+        # re-scores on the depth-s partition's executed counts): the
+        # widened depth-s exchange moves ~the same bytes per iteration in
+        # 1/s the launches; the ghost zone adds ~(s-1) boundary layers of
+        # ~halo rows each, recomputed on all but the last application of
+        # the block ((s-1)/s sweeps per iteration).
+        halo = max(mat_ell.plan.ext_len - n, 0)
+        slots_row = mat_ell.nnz_stored / S / max(n, 1)
+        ghost_rows = halo * (s - 1) * (s - 1) / s
+        sp = dataclasses.replace(
+            sp,
+            flops=sp.flops + 2.0 * slots_row * ghost_rows,
+            hbm_bytes=sp.hbm_bytes + 12.0 * slots_row * ghost_rows,
+            n_collectives=sp.n_collectives / s,
+        )
+    n_red = float(CG_COMM[v]["allreduces"])
+    if v == "sstep":
+        n_red /= s  # CG_COMM counts per s-iteration block
     vec = OpCounts(
-        flops=cg_vector_flops(n, variant=v, nrhs=nrhs),
-        hbm_bytes=cg_vector_traffic(n, variant=v, nrhs=nrhs),
-        ici_bytes=8.0 * cg_reduce_scalars(v, nrhs),
-        n_collectives=float(CG_COMM[v]["allreduces"]),
+        flops=cg_vector_flops(n, variant=v, nrhs=nrhs, s=s),
+        hbm_bytes=cg_vector_traffic(n, variant=v, nrhs=nrhs, s=s),
+        ici_bytes=8.0 * cg_reduce_scalars(v, nrhs, s=s),
+        n_collectives=n_red,
     )
     return sp, vec
 

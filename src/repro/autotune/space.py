@@ -7,9 +7,13 @@ by the earlier layers — every axis maps onto an existing knob:
   ``ell`` / ``hyb`` / ``bcsr``, or ``auto`` = resolve via the stored-bytes
   cost model ``roofline/format_model.choose_format`` at prune time);
 * ``block``   — BCSR tile side (``br == bc``; ignored by the other formats);
-* ``variant`` — CG variant (``core/cg.py``: ``hs`` / ``fcg`` / ``pipecg``;
-  ``sstep`` is excluded — its blocked Gram body rejects the hot-path kernel
-  plumbing the trial stage relies on);
+* ``variant`` — CG variant (``core/cg.py``: ``hs`` / ``fcg`` / ``pipecg``,
+  plus ``sstep`` when the caller opens the ``s`` axis);
+* ``s``       — s-step block size (``sstep`` only): the candidate's trial
+  partition is rebuilt with ``halo_depth=s`` ghost zones so the
+  matrix-powers basis pays ONE widened exchange and 1/s of a reduction
+  per iteration, against (s-1)/s redundant ghost sweeps — the
+  latency/redundancy trade the tuner prices per matrix;
 * ``overlap`` — the communication-hiding schedule (``core/spmv.py``);
 * ``freq``    — relative DVFS point (``roofline/hw.ChipSpec.at_freq``:
   compute + dynamic power scale down, HBM/ICI held flat).
@@ -29,6 +33,13 @@ from repro.roofline.hw import DEFAULT_CHIP, ChipSpec
 FORMATS = ("ell", "hyb", "bcsr", "auto")
 VARIANTS = ("hs", "fcg", "pipecg")
 BCSR_BLOCKS = (2, 4, 8)
+#: Tuned s-step block sizes (the ``sstep_s`` axis of ``enumerate_space``;
+#: :func:`autotune.autotune` opens it at shard counts where exposed
+#: collective latency can pay for redundant ghost compute, >= 8).
+SSTEP_S = (2, 4, 6)
+# deterministic variant order for sort_key; sstep ranks after the
+# single-exchange variants (it is the most intrusive choice)
+_VORDER = VARIANTS + ("sstep",)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,11 +47,12 @@ class Candidate:
     """One operating point of the tuning space."""
 
     fmt: str  # "ell" | "hyb" | "bcsr" | "auto" (resolved at prune time)
-    variant: str  # "hs" | "fcg" | "pipecg"
+    variant: str  # "hs" | "fcg" | "pipecg" | "sstep"
     overlap: bool
     block: int = 4  # BCSR tile side; meaningful only when fmt == "bcsr"
     freq: float = 1.0  # relative DVFS point (ChipSpec.at_freq)
     grid: tuple | None = None  # (rows, cols) process grid; None = 1-D
+    s: int = 1  # s-step block size; meaningful only when variant == "sstep"
 
     @property
     def exec_key(self) -> tuple:
@@ -53,17 +65,20 @@ class Candidate:
             self.variant,
             self.overlap,
             self.grid,
+            self.s if self.variant == "sstep" else 0,
         )
 
     @property
     def label(self) -> str:
         """Stable human/ledger label, e.g. ``hyb/pipecg/ov/f0.6`` (a 2-D
-        candidate appends ``/gRxC``)."""
+        candidate appends ``/gRxC``; an s-step one ``/s4``)."""
         fmt = f"bcsr{self.block}" if self.fmt == "bcsr" else self.fmt
         ov = "ov" if self.overlap else "ser"
         base = f"{fmt}/{self.variant}/{ov}/f{self.freq:g}"
         if self.grid is not None:
             base += f"/g{self.grid[0]}x{self.grid[1]}"
+        if self.variant == "sstep":
+            base += f"/s{self.s}"
         return base
 
     def to_dict(self) -> dict:
@@ -74,6 +89,9 @@ class Candidate:
         # omitted when 1-D so pre-grid ledgers/caches stay byte-identical
         if self.grid is not None:
             d["grid"] = list(self.grid)
+        # omitted when 1 so pre-sstep ledgers/caches stay byte-identical
+        if self.s != 1:
+            d["s"] = self.s
         return d
 
     @classmethod
@@ -84,6 +102,7 @@ class Candidate:
             overlap=bool(d["overlap"]), block=int(d["block"]),
             freq=float(d["freq"]),
             grid=tuple(int(v) for v in g) if g else None,
+            s=int(d.get("s", 1)),
         )
 
 
@@ -101,9 +120,10 @@ def sort_key(c: Candidate) -> tuple:
         -c.freq,
         FORMATS.index(c.fmt),
         c.block,
-        VARIANTS.index(c.variant),
+        _VORDER.index(c.variant),
         not c.overlap,
         c.grid or (),
+        c.s,
     )
 
 
@@ -116,6 +136,7 @@ def enumerate_space(
     blocks: Iterable[int] = BCSR_BLOCKS,
     freqs: Iterable[float] | None = None,
     grids: Iterable[tuple | None] = (None,),
+    sstep_s: Iterable[int] = (),
 ) -> list[Candidate]:
     """All candidates, deterministically ordered (``sort_key``).
 
@@ -123,7 +144,11 @@ def enumerate_space(
     ``bcsr`` fans out over ``blocks``; the other formats carry the default
     tile side (it is dead weight for them). ``grids`` defaults to the 1-D
     layout only; :func:`autotune.autotune` opens the grid axis at shard
-    counts where a 2-D layout can pay (>= 8).
+    counts where a 2-D layout can pay (>= 8). ``sstep_s`` opens the
+    communication-avoiding axis: each value adds ``sstep`` candidates at
+    that block size (default closed — small searches and their cached
+    decisions stay byte-identical; :func:`autotune.autotune` opens it at
+    the same >= 8 shard threshold as the grid axis).
     """
     freqs = tuple(freqs) if freqs is not None else chip.freq_points
     out = []
@@ -137,5 +162,13 @@ def enumerate_space(
                             out.append(
                                 Candidate(fmt, variant, overlap, block,
                                           freq, grid)
+                            )
+            for s in sstep_s:
+                for overlap in overlaps:
+                    for freq in freqs:
+                        for grid in grids:
+                            out.append(
+                                Candidate(fmt, "sstep", overlap, block,
+                                          freq, grid, s=int(s))
                             )
     return sorted(out, key=sort_key)

@@ -124,18 +124,24 @@ def run_trials(
         c = pred.candidate
         first = c.exec_key not in executions
         if first:
+            # an s-step candidate executes on a halo_depth=s partition (its
+            # matrix-powers basis needs s-deep ghost zones); the depth tag
+            # keeps it from colliding with the depth-1 entry in ``mats``
+            depth = c.s if c.variant == "sstep" else 1
             if c.grid is not None:
                 tmesh, axis = make_grid_mesh(*c.grid), ("rows", "cols")
                 fmt_key = (c.fmt, c.block, c.grid)
             else:
                 tmesh, axis = mesh, "shards"
                 fmt_key = (c.fmt, c.block)
+            if depth > 1:
+                fmt_key = fmt_key + (("halo", depth),)
             if fmt_key not in mats:
                 mats[fmt_key] = shard_matrix(
                     tmesh,
                     partition_csr(
                         a_csr, n_shards, fmt=c.fmt, block=(c.block, c.block),
-                        grid=c.grid,
+                        grid=c.grid, halo_depth=depth,
                     ),
                 )
             mat = mats[fmt_key]
@@ -152,9 +158,10 @@ def run_trials(
                 jax.block_until_ready(res.x)
                 relres = float(np.max(np.asarray(res.rel_residual)))
             else:
+                skw = {"s": c.s} if c.variant == "sstep" else {}
                 solver = make_solver(
                     tmesh, mat, variant=c.variant, overlap=c.overlap,
-                    tol=tol, maxiter=trial_iters, axis=axis,
+                    tol=tol, maxiter=trial_iters, axis=axis, **skw,
                 )
                 b = np.ones(a_csr.shape[0])
                 bp = shard_vector(tmesh, pad_vector(b, mat), axis)

@@ -16,7 +16,15 @@ Four variants — three mirroring BootCMatchGX, one beyond-paper:
   P^T A P, the cross-block coupling W_prevᵀP, the moment vector Pᵀr, and
   ||r||² packed together). Monomial basis in (M A); A-conjugation against the
   previous block is reconstructed locally from the reduced Gram blocks, so no
-  second reduction is needed.
+  second reduction is needed. With the identity preconditioner and a matrix
+  partitioned with ``halo_depth >= s``, the basis comes from the
+  matrix-powers SpMV (``core/spmv.matrix_powers``): ONE widened halo
+  exchange per block instead of s round-trips — the communication-avoiding
+  formulation. The basis columns are rescaled by their A-norms
+  (``diag(PᵀAP)``, already in the reduction) before the block solves, so
+  the Gram conditioning stays near the conjugation's intrinsic one instead
+  of growing like κ^s with the raw monomial columns; a non-finite block
+  solve freezes x/r and exits the loop (loud non-convergence, not NaNs).
 * ``pipecg`` — pipelined CG after Ghysels & Vanroose: like ``fcg`` it needs
   only **one** fused all-reduce per iteration, but the reduction is *issued
   before* the iteration's SpMV + preconditioner application, whose results
@@ -45,7 +53,13 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core.partition import DistMat
-from repro.core.spmv import dist_specs, local_block, overlap_default, spmv_shard
+from repro.core.spmv import (
+    dist_specs,
+    local_block,
+    matrix_powers,
+    overlap_default,
+    spmv_shard,
+)
 from repro.core.vectors import all_reduce, fused_blocks, fused_dots, pdot
 from repro.energy import trace
 from repro.kernels import dispatch as kd
@@ -366,12 +380,31 @@ def _pipecg_body(
     return c[1], c[0], c[11], bb
 
 
-def _sstep_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, s, axis):
+def _sstep_body(
+    A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, s, axis, ops,
+    mat=None,
+):
     """s-step CG (Chronopoulos–Gear): one fused all-reduce per s iterations.
 
     Monomial basis P = [u, (MA)u, ..., (MA)^{s-1}u] with u = M r; the block
     is A-conjugated against the previous block using only locally
     reconstructable Gram algebra (see module docstring).
+
+    Basis construction routes through :func:`~repro.core.spmv.matrix_powers`
+    when it can — identity preconditioner and a ``mat`` partitioned with
+    ghost zones at least ``s`` deep — replacing the s sequential halo
+    round-trips of the naive loop with ONE widened exchange per block (the
+    communication-avoiding formulation). Otherwise the sequential scan is
+    the fallback (real preconditioner, shallow halo, or all-gather layout).
+
+    Vector work runs through the kernel dispatch ``ops`` in 3 full-vector
+    HBM sweeps per block outside the SpMVs: the fused Gram reduction
+    (``sstep_gram``), the A-conjugation + column-normalization update
+    (``sstep_basis``), and the x/r update (``sstep_update``).
+
+    Stability: the monomial columns are rescaled by their A-norms (the
+    reduced ``diag(PᵀW)`` — no extra collective payload) before the block
+    solves, and a non-finite step freezes x/r and exits the loop.
     """
     dt = b.dtype
     R = b.shape[0]
@@ -382,7 +415,22 @@ def _sstep_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, s, axis):
     tol2 = tol * tol * bb
     eye = jnp.eye(s, dtype=dt)
 
+    # the matrix-powers path needs ghost zones covering all s applications
+    # (a lone shard has no halo at all — any depth works there)
+    use_mp = (
+        mat is not None
+        and pre.is_identity
+        and mat.plan.mode != "allgather"
+        and (not mat.plan.shifts or mat.halo_depth >= s)
+    )
+
     def build_basis(r):
+        if use_mp:
+            # ONE widened exchange for the whole block: [Ar, ..., A^s r]
+            Ws = matrix_powers(mat, r, s, axis)
+            Ps = jnp.concatenate([r[None], Ws[:-1]], axis=0)
+            return Ps.T, Ws.T  # (s, R) -> (R, s)
+
         def one(carry, _):
             u = carry
             with trace.region("precond"):
@@ -399,37 +447,58 @@ def _sstep_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, s, axis):
         return Ps.T, Ws.T
 
     def body(c):
-        with kd.ledger_section("iteration"):
+        # The while body traces ONCE per s-iteration BLOCK, but the ledger
+        # replays iteration-section counts once per ITERATION — record the
+        # block's counts at their per-iteration average so sstep ledgers
+        # are comparable with hs/fcg (one widened exchange per block shows
+        # up as 1/s collectives per iteration, exactly the amortization).
+        with kd.ledger_section("iteration"), trace.repeated(1.0 / s):
             return _sstep_block(c)
 
     def _sstep_block(c):
-        i, x, r, Qp, Wp, Gqq, rr = c
+        i, ok, x, r, Qp, Wp, Gqq, rr = c
         Pb, Wb = build_basis(r)
         # ONE fused all-reduce: [P^T W (s*s) | W_prev^T P (s*s) | P^T r (s) | rr]
         with trace.region("reductions"):
-            flat = fused_blocks(
-                [Pb.T @ Wb, Wp.T @ Pb, Pb.T @ r, jnp.vdot(r, r)[None]], axis
-            )
+            flat = fused_blocks([ops.sstep_gram(Pb, Wb, Wp, r)], axis)
         Gpp = flat[: s * s].reshape(s, s)
         C = flat[s * s : 2 * s * s].reshape(s, s)
         g = flat[2 * s * s : 2 * s * s + s]
         rr = flat[-1]
+        # Rescale the basis columns by their A-norms (van der Sluis: the
+        # diagonal scaling that near-minimizes the Gram condition number).
+        # Raw monomial columns grow like rho(A)^j, so without this the Gram
+        # conditioning explodes like kappa^s for large s.
+        d = jnp.diagonal(Gpp)
+        dinv = jnp.where(d > 0, lax.rsqrt(jnp.where(d > 0, d, 1.0)), 1.0)
+        Gpp = Gpp * (dinv[:, None] * dinv[None, :])
+        C = C * dinv[None, :]
+        g = g * dinv
         # A-conjugate against previous block: B = Gqq^{-1} C (Gqq from prev).
         B = jnp.linalg.solve(Gqq + 1e-300 * eye, C)
-        Q = Pb - Qp @ B
-        WQ = Wb - Wp @ B
+        with trace.region("reductions"):
+            # Q = Pb D - Qp B ; WQ = Wb D - Wp B — ONE fused pass
+            Q, WQ = ops.sstep_basis(B, dinv, Qp, Pb, Wp, Wb)
         Gq = Gpp - B.T @ C - C.T @ B + B.T @ Gqq @ B
         # Q^T r == g because r ⟂ span(previous block) in exact arithmetic.
         a = jnp.linalg.solve(Gq + 1e-300 * eye, g)
-        x = x + Q @ a
-        r = r - WQ @ a
-        return (i + s, x, r, Q, WQ, Gq, rr)
+        # breakdown guard: a non-finite step means the basis lost numerical
+        # independence despite the scaling (s too large for this spectrum).
+        # Freeze x/r and stop — the caller sees a loud non-converged
+        # residual instead of silent NaNs.
+        fin = jnp.isfinite(a).all() & jnp.isfinite(B).all()
+        a = jnp.where(fin, a, jnp.zeros_like(a))
+        with trace.region("reductions"):
+            # x += Q a ; r -= WQ a — ONE fused pass
+            x, r = ops.sstep_update(a, Q, WQ, x, r)
+        return (i + s, ok & fin, x, r, Q, WQ, Gq, rr)
 
     def cond(c):
-        i, x, r, Qp, Wp, Gqq, rr = c
-        return (i < maxiter) & (rr > tol2)
+        i, ok, x, r, Qp, Wp, Gqq, rr = c
+        return ok & (i < maxiter) & (rr > tol2)
 
     i0 = jnp.asarray(0, jnp.int32)
+    ok0 = jnp.asarray(True)
     # mark the zero-init blocks as shard-varying for the while_loop carry
     ax_names = (axis,) if isinstance(axis, str) else tuple(axis)
     _pvary = (
@@ -440,8 +509,8 @@ def _sstep_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, s, axis):
         else (lambda v: v)  # check_rep=False: no replication tracking needed
     )
     Q0 = _pvary(jnp.zeros((R, s), dt))
-    c = lax.while_loop(cond, body, (i0, x0, r, Q0, Q0, eye, bb))
-    return c[1], c[0], c[6], bb
+    c = lax.while_loop(cond, body, (i0, ok0, x0, r, Q0, Q0, eye, bb))
+    return c[2], c[0], c[7], bb
 
 
 def _block_hs_body(A, B, X0, *, tol, maxiter, axis, ops):
@@ -559,10 +628,11 @@ def make_solver(
         maxiter: iteration cap (an s-step block counts as ``s`` iterations).
         s: block size for ``variant="sstep"`` (ignored otherwise).
         axis: shard_map mesh-axis name the collectives run over.
-        kernels: hot-path backend for the hs/fcg/pipecg bodies — one of
+        kernels: hot-path backend for the solver bodies — one of
             ``kernels.dispatch.BACKENDS`` or None/'auto' (resolve from
-            override/env/backend). The sstep body rejects an explicit
-            choice (its vector work is blocked Gram algebra).
+            override/env/backend). All four variants route through it;
+            the sstep body's blocked Gram algebra uses the fused
+            ``sstep_gram`` / ``sstep_basis`` / ``sstep_update`` ops.
         overlap: communication-hiding schedule (default on): the SpMV uses
             the interior/boundary split with the halo exchange in flight,
             and ``pipecg`` issues its all-reduce before the concurrent
@@ -579,16 +649,9 @@ def make_solver(
 
     pre = precond or identity_precond()
     body = _BODIES[variant]
-    kw = dict(tol=tol, maxiter=maxiter, axis=axis)
+    kw = dict(tol=tol, maxiter=maxiter, axis=axis, ops=kd.ops_for(kernels))
     if variant == "sstep":
-        if kernels not in (None, "auto"):
-            raise ValueError(
-                "kernels= only routes the hs/fcg/pipecg bodies; the sstep "
-                "body does its vector work in blocked Gram algebra"
-            )
         kw["s"] = s
-    else:
-        kw["ops"] = kd.ops_for(kernels)
     if variant == "pipecg":
         kw["overlap"] = overlap
 
@@ -600,10 +663,13 @@ def make_solver(
         mb = local_block(m)
         pl = localize(pdata)
         A = lambda v: spmv_shard(mb, v, axis, overlap=overlap)
+        # the sstep body takes the local matrix block itself: its basis can
+        # route through the matrix-powers SpMV (one widened halo exchange)
+        kwb = dict(kw, mat=mb) if variant == "sstep" else kw
         # scope the default so preconditioner-internal SpMVs (the AMG
         # V-cycle's smoothers) follow the solver's schedule too
         with overlap_default(overlap):
-            x, iters, rr, bb = body(A, pre, pl, b[0], x0[0], **kw)
+            x, iters, rr, bb = body(A, pre, pl, b[0], x0[0], **kwb)
         return x[None], iters, rr, bb
 
     mapped = shard_map(
@@ -647,16 +713,9 @@ def make_solver_fn(
 
     pre = precond or identity_precond()
     body = _BODIES[variant]
-    kw = dict(tol=tol, maxiter=maxiter, axis=axis)
+    kw = dict(tol=tol, maxiter=maxiter, axis=axis, ops=kd.ops_for(kernels))
     if variant == "sstep":
-        if kernels not in (None, "auto"):
-            raise ValueError(
-                "kernels= only routes the hs/fcg/pipecg bodies; the sstep "
-                "body does its vector work in blocked Gram algebra"
-            )
         kw["s"] = s
-    else:
-        kw["ops"] = kd.ops_for(kernels)
     if variant == "pipecg":
         kw["overlap"] = overlap
     mat_specs = dist_specs(mat_like, axis)
@@ -666,8 +725,9 @@ def make_solver_fn(
         mb = local_block(m)
         pl = localize(pdata)
         A = lambda v: spmv_shard(mb, v, axis, overlap=overlap)
+        kwb = dict(kw, mat=mb) if variant == "sstep" else kw
         with overlap_default(overlap):
-            x, iters, rr, bb = body(A, pre, pl, b[0], x0[0], **kw)
+            x, iters, rr, bb = body(A, pre, pl, b[0], x0[0], **kwb)
         return x[None], iters, rr, bb
 
     mapped = shard_map(

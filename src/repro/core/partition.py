@@ -393,8 +393,17 @@ InteriorBlock = ELLBlock | HYBBlock | BCSRBlock
 
 @partial(
     _register,
-    data_fields=("interior", "data_ext", "col_ext", "bnd_rows", "send_sel"),
-    meta_fields=("plan", "n_global", "row_starts", "n_bnd"),
+    data_fields=(
+        "interior",
+        "data_ext",
+        "col_ext",
+        "bnd_rows",
+        "send_sel",
+        "ghost_data",
+        "ghost_col",
+        "ghost_pos",
+    ),
+    meta_fields=("plan", "n_global", "row_starts", "n_bnd", "halo_depth"),
 )
 @dataclasses.dataclass(frozen=True)
 class DistMat:
@@ -426,6 +435,20 @@ class DistMat:
     * ``send_sel``          — (S, sum(widths)) int32: per shift k, the slice
       ``send_sel[:, off_k : off_k + widths[k]]`` lists the local indices each
       shard sends for that shift.
+    * ``ghost_data/ghost_col/ghost_pos`` — the **ghost-row block** carried
+      only by deep-halo partitions (``halo_depth > 1``): the sparse rows of
+      the depth ``< halo_depth`` ghost columns, replicated onto the shard so
+      ``core/spmv.matrix_powers`` can redundantly recompute the halo region
+      between chained SpMV applications instead of re-exchanging.
+      ``ghost_data/ghost_col`` are (S, G, kg) padded-ELL rows whose column
+      ids index ``x_ext``; ``ghost_pos`` (S, G) is each ghost row's own
+      position inside ``x_ext`` (the halo slot its recomputed value scatters
+      back into). Padding rows carry ``ghost_pos == ext_len`` (an
+      out-of-range scatter, dropped on device). Depth-1 matrices carry
+      0-sized ghost arrays.
+    * ``halo_depth``        — ghost-zone depth ``k``: one widened exchange
+      delivers the transitive closure of the boundary coupling to depth k,
+      enough to chain k SpMV applications locally.
     Padding: data == 0, col == 0 everywhere (gathers stay in bounds and
     contribute nothing).
     """
@@ -439,6 +462,10 @@ class DistMat:
     n_global: int
     row_starts: tuple[int, ...]
     n_bnd: tuple[int, ...] = ()
+    ghost_data: jax.Array | None = None
+    ghost_col: jax.Array | None = None
+    ghost_pos: jax.Array | None = None
+    halo_depth: int = 1
 
     @property
     def fmt(self) -> str:
@@ -457,6 +484,16 @@ class DistMat:
     def n_boundary(self) -> int:
         """Padded boundary-block rows per shard (B)."""
         return self.bnd_rows.shape[-1]
+
+    @property
+    def n_ghost_rows(self) -> int:
+        """Padded ghost-row-block rows per shard (G; 0 unless deep halo)."""
+        return 0 if self.ghost_pos is None else self.ghost_pos.shape[-1]
+
+    @property
+    def ghost_slots(self) -> int:
+        """Stored ghost-row value slots (padding included, all shards)."""
+        return 0 if self.ghost_data is None else _size(self.ghost_data)
 
     @property
     def dtype(self):
@@ -500,10 +537,13 @@ class DistMat:
         return self.interior.slots * value_bytes + self.interior.index_bytes
 
     def stored_bytes(self, value_bytes: int = 8) -> int:
-        """Whole-matrix resident bytes: interior + boundary block."""
-        return self.interior_stored_bytes(value_bytes) + _size(
-            self.data_ext
-        ) * (value_bytes + 4)
+        """Whole-matrix resident bytes: interior + boundary block + (deep
+        halos only) the replicated ghost-row block."""
+        return (
+            self.interior_stored_bytes(value_bytes)
+            + _size(self.data_ext) * (value_bytes + 4)
+            + self.ghost_slots * (value_bytes + 4)
+        )
 
     def spmv_flops(self) -> int:
         """2*nnz useful flops (upper bound incl. format padding slots)."""
@@ -739,6 +779,18 @@ def _shard_block_stats(rows, R: int, br: int, bc: int) -> tuple[int, int]:
     return block_stats_from_arrays(rids, cols, R, br, bc)
 
 
+def _csr_rows_cols(indptr, indices, rows: np.ndarray) -> np.ndarray:
+    """All column ids referenced by CSR ``rows`` (flat, duplicates kept)."""
+    rows = np.asarray(rows, np.int64)
+    starts = indptr[rows].astype(np.int64)
+    lens = (indptr[rows + 1] - indptr[rows]).astype(np.int64)
+    tot = int(lens.sum())
+    if not tot:
+        return np.zeros(0, np.int64)
+    idx = np.repeat(starts - (np.cumsum(lens) - lens), lens) + np.arange(tot)
+    return indices[idx]
+
+
 def partition_csr(
     a_csr,
     n_shards: int,
@@ -750,6 +802,7 @@ def partition_csr(
     fmt: str = "ell",
     block: tuple[int, int] = (4, 4),
     grid: tuple[int, int] | None = None,
+    halo_depth: int = 1,
 ) -> DistMat:
     """Partition a host scipy CSR matrix into a DistMat.
 
@@ -772,7 +825,20 @@ def partition_csr(
     the vector layout — and, for ``grid=(1, N)``, the entire DistMat — is
     identical to the 1-D build. Pair with :func:`pencil_partition` to make
     the per-shard halo scale with the pencil surface.
+
+    ``halo_depth=k`` builds k-deep ghost zones: the ghost-column set is the
+    transitive closure of the boundary coupling to depth k (depth-(d+1)
+    ghosts are the off-shard columns referenced by the depth-d ghost
+    *rows*), so ONE widened exchange feeds k chained SpMV applications
+    (``core/spmv.matrix_powers``). The matrix rows of the depth ``< k``
+    ghosts are replicated into the ghost-row block for the redundant
+    recompute. The ring criterion scales with depth (``max_ring * k``
+    reach) — a matrix whose depth-1 coupling is ring-shaped stays ring at
+    any depth. ``halo_depth=1`` is bit-identical to the historical build.
     """
+    halo_depth = int(halo_depth)
+    if halo_depth < 1:
+        raise ValueError(f"halo_depth must be >= 1, got {halo_depth}")
     a = a_csr.tocsr()
     n = a.shape[0]
     part = partition or balanced_partition(n, n_shards)
@@ -790,15 +856,38 @@ def partition_csr(
     indptr, indices, vals = a.indptr, a.indices.astype(np.int64), a.data
 
     # --- pass 1: discover shifts + per-(shard,shift) needed columns --------
+    # halo_depth > 1 widens the per-shard ghost set to the transitive
+    # closure of the boundary coupling: depth-(d+1) ghosts are the
+    # off-shard columns referenced by the depth-d ghost *rows*. All depths
+    # merge into one sorted column set, so the existing recv/send planning
+    # below widens without change (depth 1 reduces to the historical
+    # np.unique of the boundary columns, bit for bit).
     owners_cache = {}
+    depth_cache = {}  # s -> per-ghost-column depth, aligned with ext_cols
     shifts_seen: set = set()  # int deltas (1-D) or (di, dj) tuples (grid)
     for s in range(n_shards):
         lo, hi = part.owner_range(s)
         cols = indices[indptr[lo] : indptr[hi]]
         own_mask = (cols >= lo) & (cols < hi)
-        ext_cols = np.unique(cols[~own_mask])
+        frontier = np.unique(cols[~own_mask])
+        ghost_cols = [frontier]
+        ghost_depths = [np.full(len(frontier), 1, np.int64)]
+        for depth in range(2, halo_depth + 1):
+            if not len(frontier):
+                break
+            ref = np.unique(_csr_rows_cols(indptr, indices, frontier))
+            ref = ref[(ref < lo) | (ref >= hi)]  # off-shard columns only
+            frontier = np.setdiff1d(
+                ref, np.concatenate(ghost_cols), assume_unique=True
+            )
+            ghost_cols.append(frontier)
+            ghost_depths.append(np.full(len(frontier), depth, np.int64))
+        merged = np.concatenate(ghost_cols)
+        order = np.argsort(merged)
+        ext_cols = merged[order]
         owners = part.owner_of(ext_cols)
         owners_cache[s] = (ext_cols, owners)
+        depth_cache[s] = np.concatenate(ghost_depths)[order]
         if grid is not None:
             di = owners // gc - s // gc
             dj = owners % gc - s % gc
@@ -807,12 +896,13 @@ def partition_csr(
             for d in np.unique(owners - s):
                 shifts_seen.add(int(d))
 
+    reach = max_ring * halo_depth
     if grid is not None:
-        near = all(max(abs(di), abs(dj)) <= max_ring for di, dj in shifts_seen)
+        near = all(max(abs(di), abs(dj)) <= reach for di, dj in shifts_seen)
         mode = "grid" if near else "allgather"
     else:
         mode = (
-            "ring" if all(abs(d) <= max_ring for d in shifts_seen) else "allgather"
+            "ring" if all(abs(d) <= reach for d in shifts_seen) else "allgather"
         )
     if force_allgather:
         mode = "allgather"
@@ -890,6 +980,7 @@ def partition_csr(
     # --- pass 2: build the split interior/boundary blocks -------------------
     k_ext_max = 1
     per_shard = []
+    ghost_lists = []  # per shard: (x_ext col ids, vals, own x_ext pos) rows
     for s in range(n_shards):
         lo, hi = part.owner_range(s)
         loc_rows, ext_rows = [], []
@@ -900,6 +991,27 @@ def partition_csr(
                 base = plan.buf_offset(k)
                 for p, g in enumerate(recv_lists[k][s]):
                     ext_map[int(g)] = base + p
+        # Ghost-row block: replicate the rows of the depth < halo_depth
+        # ghosts, with columns remapped into this shard's x_ext space (own
+        # columns land in [0, n_own), closure guarantees every off-shard
+        # column is in ext_map).
+        ghost_rows_s = []
+        if halo_depth > 1 and mode != "allgather":
+            deep = owners_cache[s][0][depth_cache[s] < halo_depth]
+            for g in deep:
+                g = int(g)
+                gcols = indices[indptr[g] : indptr[g + 1]]
+                gvals = vals[indptr[g] : indptr[g + 1]]
+                lidx = np.fromiter(
+                    (
+                        int(c) - lo if lo <= c < hi else ext_map[int(c)]
+                        for c in gcols
+                    ),
+                    dtype=np.int64,
+                    count=len(gcols),
+                )
+                ghost_rows_s.append((lidx, gvals, ext_map[g]))
+        ghost_lists.append(ghost_rows_s)
         for r in range(lo, hi):
             cs = indices[indptr[r] : indptr[r + 1]]
             vs = vals[indptr[r] : indptr[r + 1]]
@@ -941,6 +1053,22 @@ def partition_csr(
         data_ext[s], col_ext[s] = de, ce
         bnd_rows[s, : len(bnd)] = bnd
 
+    # Pack the ghost-row block (0-sized at depth 1 / allgather). Padding
+    # rows scatter to position ext_len — out of range, dropped on device.
+    eff_depth = halo_depth if mode != "allgather" else 1
+    G = max((len(gr) for gr in ghost_lists), default=0)
+    kg = max((len(c) for gr in ghost_lists for c, _, _ in gr), default=0)
+    kg = max(kg, 1) if G else 1
+    ghost_data = np.zeros((S, G, kg), dtype)
+    ghost_col = np.zeros((S, G, kg), np.int32)
+    ghost_pos = np.full((S, G), plan.ext_len, np.int32)
+    for s, gr in enumerate(ghost_lists):
+        for j, (c, v, pos) in enumerate(gr):
+            m = len(c)
+            ghost_data[s, j, :m] = v
+            ghost_col[s, j, :m] = c.astype(np.int32)
+            ghost_pos[s, j] = pos
+
     return DistMat(
         interior=interior,
         data_ext=jnp.asarray(data_ext),
@@ -951,6 +1079,10 @@ def partition_csr(
         n_global=n,
         row_starts=part.row_starts,
         n_bnd=n_bnd,
+        ghost_data=jnp.asarray(ghost_data),
+        ghost_col=jnp.asarray(ghost_col),
+        ghost_pos=jnp.asarray(ghost_pos),
+        halo_depth=eff_depth,
     )
 
 

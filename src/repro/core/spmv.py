@@ -345,6 +345,110 @@ def spmv_shard(
 
 
 # ---------------------------------------------------------------------------
+# Matrix-powers SpMV (communication-avoiding s-step interiors)
+# ---------------------------------------------------------------------------
+
+
+def ghost_matvec(
+    ghost_data: jax.Array, ghost_col: jax.Array, x_ext: jax.Array
+) -> jax.Array:
+    """Redundant ghost-row matvec: ``yg[j] = sum_k data[j,k]*x_ext[col[j,k]]``.
+
+    The deep-halo replicated rows (``DistMat.ghost_data``) recompute the
+    halo region between chained applications instead of re-exchanging —
+    the matrix-powers redundancy. Recorded under its own op name so the
+    executed ledger prices the redundant flops/bytes honestly rather than
+    folding them into the interior matvec.
+    """
+    b = ghost_data.dtype.itemsize
+    G = ghost_data.shape[0]
+    mat_bytes = float(ghost_data.size * (b + ghost_col.dtype.itemsize))
+    trace.record_op(
+        "ghost_matvec",
+        OpCounts(
+            flops=2.0 * ghost_data.size,
+            hbm_bytes=mat_bytes
+            + float(
+                min(x_ext.shape[0], ghost_data.size) * b + G * (b + 4)
+            ),
+            hbm_matrix_bytes=mat_bytes,
+        ),
+    )
+    return jnp.einsum("gk,gk->g", ghost_data, x_ext[ghost_col])
+
+
+def matrix_powers(
+    mat: DistMat, p: jax.Array, s: int, axis, *, overlap: bool | None = None
+) -> jax.Array:
+    """[A p, A² p, …, Aˢ p] (own rows, stacked (s, R)) from ONE exchange.
+
+    The communication-avoiding kernel of the s-step CG body: a single
+    *widened* halo exchange (``halo_depth >= s`` partition) delivers the
+    depth-s transitive closure of the boundary coupling, after which the
+    whole monomial block chains locally — each application multiplies the
+    interior + boundary blocks for the own rows AND redundantly recomputes
+    every replicated ghost row (depth < s), scattering the results back
+    into the halo slots so the next application reads refreshed ghosts.
+    Validity is inductive: application ``j`` is exact on own rows and on
+    ghosts of depth ``<= s - j``; deeper slots decay to garbage that the
+    valid region never reads (they are zero-filled, staying finite).
+
+    One ppermute round and 1/s of the launch latency per SpMV, at the
+    price of the ghost-row redundancy — both sides of the trade recorded
+    honestly (``halo_exchange`` once, ``ghost_matvec`` per application).
+    ``overlap=True`` wraps the whole block in a single ``overlap`` region:
+    the one exchange hides behind s interior matvecs' compute.
+    """
+    if mat.plan.mode not in ("ring", "grid"):
+        raise ValueError(
+            "matrix_powers needs a ring/grid halo plan (allgather layouts "
+            "re-gather the full vector every application)"
+        )
+    has_halo = len(mat.plan.shifts) > 0
+    if has_halo and mat.halo_depth < s:
+        raise ValueError(
+            f"matrix_powers with s={s} needs a halo_depth >= {s} partition "
+            f"(got halo_depth={mat.halo_depth}); rebuild with "
+            f"partition_csr(..., halo_depth=s)"
+        )
+    if overlap is None:
+        overlap = _OVERLAP_DEFAULT
+
+    R = p.shape[0]
+
+    def _chain(x_ext: jax.Array) -> jax.Array:
+        halo_len = x_ext.shape[0] - R
+        outs = []
+        for j in range(s):
+            x_own = x_ext[:R]
+            y = interior_matvec(mat.interior, x_own)
+            yb = boundary_matvec(
+                mat.data_ext, mat.col_ext, x_ext, src_elems=halo_len or None
+            )
+            y_own = y.at[mat.bnd_rows].add(yb)
+            outs.append(y_own)
+            if j + 1 == s:
+                break  # the last application's ghosts are never read
+            if mat.ghost_data is not None and mat.ghost_data.size:
+                yg = ghost_matvec(mat.ghost_data, mat.ghost_col, x_ext)
+                halo_next = (
+                    jnp.zeros((halo_len,), x_ext.dtype)
+                    .at[mat.ghost_pos - R]
+                    .set(yg, mode="drop")
+                )
+            else:
+                halo_next = jnp.zeros((halo_len,), x_ext.dtype)
+            x_ext = jnp.concatenate([y_own, halo_next])
+        return jnp.stack(outs)
+
+    if overlap and has_halo:
+        with trace.region(trace.OVERLAP):
+            halo = _halo_exchange(p, mat.send_sel, mat.plan, axis)
+            return _chain(jnp.concatenate([p, halo]))
+    return _chain(gather_ext(mat, p, axis))
+
+
+# ---------------------------------------------------------------------------
 # shard_map plumbing
 # ---------------------------------------------------------------------------
 

@@ -127,13 +127,20 @@ def axpy_counts(n: int) -> OpCounts:
     return OpCounts(flops=2.0 * n, hbm_bytes=3.0 * n * _VB)
 
 
-def cg_iteration_counts(mat: DistMat, variant: str = "hs") -> OpCounts:
+def cg_iteration_counts(mat: DistMat, variant: str = "hs", *,
+                        s: int = 2) -> OpCounts:
     """Per-iteration counts of the *unpreconditioned* CG variants.
 
     hs   : 1 SpMV + 2 reductions (one fused pair) + 3 axpy-class updates
     fcg  : 1 SpMV + 1 fused reduction (3 terms) + 5 updates
-    sstep: amortized per iteration — 1 SpMV + (1/s) fused Gram reduction +
-           ~4 block updates (uses s=2 for accounting)
+    sstep: amortized per iteration — 1 SpMV + (1/s) fused Gram reduction
+           (the (2s² + s + 1)-scalar payload) + ~4 block updates. When
+           ``mat`` carries ghost zones at least ``s`` deep the basis routes
+           through the matrix-powers SpMV (``core/spmv.matrix_powers``),
+           so the halo exchange is paid once per BLOCK — its ici bytes and
+           launches divide by ``s`` — and the redundant ghost-row recompute
+           ((s-1)/s passes per iteration, priced from the actual packed
+           ghost block) is added honestly.
     naive: 1 SpMV + 3 separate reductions + 3 updates (Ginkgo analog)
     amgx : optimized halo SpMV but 3 separate reductions (AmgX-CG analog:
            tuned kernels, no reduction fusion)
@@ -148,13 +155,34 @@ def cg_iteration_counts(mat: DistMat, variant: str = "hs") -> OpCounts:
     if variant == "fcg":
         return sp + dot_counts(n, 3) + 5 * axpy_counts(n)
     if variant == "sstep":
-        s = 2
+        s = max(int(s), 1)
         gram = OpCounts(
             flops=2.0 * n * (2 * s * s + s) / s,
             hbm_bytes=2.0 * n * _VB * (s + 1) / s,
             ici_bytes=8.0 * (2 * s * s + s + 1) / s,
             n_collectives=1.0 / s,
         )
+        if s > 1 and mat.halo_depth >= s and mat.plan.mode != "allgather":
+            # matrix-powers basis: the (widened) exchange is launched once
+            # per s-iteration block, not per iteration
+            sp = OpCounts(
+                sp.flops, sp.hbm_bytes, sp.ici_bytes / s,
+                sp.n_collectives / s, sp.hbm_matrix_bytes,
+            )
+            S = max(mat.n_shards, 1)
+            gs = mat.ghost_slots / S  # per-shard packed ghost-row slots
+            if gs:
+                # one ghost_matvec per interior application except the
+                # last — (s-1)/s per iteration; formulas mirror
+                # core/spmv.ghost_matvec's recorded counts exactly
+                gmat = gs * (_VB + 4)
+                ghost = OpCounts(
+                    flops=2.0 * gs,
+                    hbm_bytes=gmat + min(mat.plan.ext_len, gs) * _VB
+                    + mat.n_ghost_rows * (_VB + 4),
+                    hbm_matrix_bytes=gmat,
+                )
+                sp = sp + ((s - 1) / s) * ghost
         return sp + gram + 4 * axpy_counts(n)
     if variant == "naive":
         return sp + 3 * dot_counts(n) + 3 * axpy_counts(n)

@@ -197,10 +197,13 @@ def current_section() -> str:
 
 
 @contextlib.contextmanager
-def repeated(k: int):
+def repeated(k: float):
     """Scale ops recorded inside by ``k`` — for bodies that JAX traces once
     but executes ``k`` times (``lax.scan`` / ``lax.fori_loop`` with a static
-    trip count, e.g. the s-step basis build)."""
+    trip count, e.g. the s-step basis build). Fractional ``k`` normalizes a
+    body whose one trace covers several accounting units — the s-step while
+    body wraps its block in ``repeated(1/s)`` so the recorded counts are the
+    per-iteration average the ledger replays."""
     global _scale
     prev = _scale
     _scale = _scale * k

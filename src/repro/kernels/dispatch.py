@@ -48,6 +48,9 @@ from repro.kernels.fused_reductions import (
     fused_axpy2,
     fused_axpy2_dots,
     fused_dots_n,
+    sstep_basis,
+    sstep_gram,
+    sstep_update,
 )
 from repro.kernels.spmv_bcsr import (
     bcsr_finish_y,
@@ -73,6 +76,7 @@ ENV_VAR = "REPRO_KERNELS"
 VECTOR_OPS = (
     "axpy", "fused_axpy2", "fused_axpy2_dots", "fused_dots_n",
     "block_gram", "block_update", "block_update2",
+    "sstep_gram", "sstep_basis", "sstep_update",
 )
 # The SpMV is accounted separately (its traffic is the matrix term);
 # stencil_boundary is the overlap path's two-plane edge fix-up; bcsr_spmv
@@ -348,6 +352,68 @@ class OpSet:
             return ref.block_update2_ref(a1, x1, y1, a2, x2, y2)
         return block_update2(a1, x1, y1, a2, x2, y2, chunk=self.chunk,
                              interpret=(b == "interpret"))
+
+    # -- s-step block ops (1 HBM sweep each) --------------------------------
+
+    def sstep_gram(self, pb, wb, wp, r):
+        """Local s-step reduction ``[PᵀW | WpᵀP | Pᵀr | rᵀr]`` as one flat
+        (2s² + s + 1,) vector, ONE pass over {P, W, Wp, r}.
+
+        Everything the s-step block solve needs from the data — both Gram
+        blocks, the moment vector, and the residual norm — as LOCAL partial
+        sums the caller psums once (`fused_blocks`). The basis column
+        A-norms for the stability scaling are ``diag(PᵀW)``, so the
+        collective payload matches the unscaled algorithm exactly.
+        """
+        n, s = pb.shape
+        ib = pb.dtype.itemsize
+        _record(
+            "sstep_gram",
+            OpCounts(
+                flops=float(4 * n * s * s + 2 * n * s + 2 * n),
+                hbm_bytes=float((3 * s + 1) * n + 2 * s * s + s + 1) * ib,
+            ),
+        )
+        b = _pallas_mode(self.backend, pb.dtype)
+        if b == "jnp":
+            return ref.sstep_gram_ref(pb, wb, wp, r)
+        return sstep_gram(pb, wb, wp, r, interpret=(b == "interpret"))
+
+    def sstep_basis(self, b, dinv, qp, pb, wp, wb):
+        """``(Pb·diag(dinv) − Qp @ b, Wb·diag(dinv) − Wp @ b)`` — the
+        normalized A-conjugated search/image blocks, ONE pass over all four
+        (n, s) blocks (read 4, write 2)."""
+        n, s = pb.shape
+        ib = pb.dtype.itemsize
+        _record(
+            "sstep_basis",
+            OpCounts(
+                flops=float(4 * n * s * s + 4 * n * s),
+                hbm_bytes=6.0 * n * s * ib,
+            ),
+        )
+        bk = _pallas_mode(self.backend, pb.dtype)
+        if bk == "jnp":
+            return ref.sstep_basis_ref(b, dinv, qp, pb, wp, wb)
+        return sstep_basis(b, dinv, qp, pb, wp, wb,
+                           interpret=(bk == "interpret"))
+
+    def sstep_update(self, a, q, wq, x, r):
+        """``(x + Q @ a, r − WQ @ a)`` for an (s,) coefficient vector — the
+        s-step x/r update, ONE pass over both blocks and both vectors."""
+        n, s = q.shape
+        ib = q.dtype.itemsize
+        _record(
+            "sstep_update",
+            OpCounts(
+                flops=float(4 * n * s + 2 * n),
+                hbm_bytes=float(2 * n * s + 4 * n) * ib,
+            ),
+        )
+        b = _pallas_mode(self.backend, q.dtype)
+        if b == "jnp":
+            return ref.sstep_update_ref(a, q, wq, x, r)
+        return sstep_update(a, q, wq, x, r, interpret=(b == "interpret"))
 
     # -- SpMV ---------------------------------------------------------------
 

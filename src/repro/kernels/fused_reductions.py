@@ -391,6 +391,152 @@ def block_update2(a1, x1, y1, a2, x2, y2, *, chunk: int = 1024,
 
 
 # ---------------------------------------------------------------------------
+# s-step CG kernels: the whole block's vector work in three HBM passes
+# ---------------------------------------------------------------------------
+#
+# s-step CG does s iterations' worth of vector algebra per block: one fused
+# Gram reduction over the (n, s) basis blocks, one A-conjugation +
+# column-normalization update forming the search block, and one x/r update
+# contracting with the (s,) step coefficients. Each op below is ONE pass:
+#
+# * ``sstep_gram``   — [PᵀW | WpᵀP | Pᵀr | rᵀr] flattened to
+#   (2s² + s + 1,): every scalar the block solve needs from one read of
+#   {P, W, Wp, r}. The caller psums the flat vector once; the basis
+#   column A-norms that feed the stability scaling are ``diag(PᵀW)``, so
+#   no extra payload rides the collective.
+# * ``sstep_basis``  — (Pb·diag(d) − Qp @ B, Wb·diag(d) − Wp @ B): the
+#   normalized A-conjugated search/image blocks in one pass over all four
+#   (n, s) operands.
+# * ``sstep_update`` — (x + Q @ a, r − WQ @ a) with an (s,) coefficient
+#   vector, one pass over both blocks and both vectors.
+
+
+def sstep_gram(pb, wb, wp, r, *, chunk: int = 1024, interpret: bool = False):
+    """Local s-step reduction ``[PᵀW | WpᵀP | Pᵀr | rᵀr]`` — ONE HBM pass
+    over the (n, s) blocks P, W, Wp and the (n,) residual.
+
+    Returns a flat (2s² + s + 1,) vector of LOCAL partial sums (callers
+    psum once). The (s, s) accumulators live in VMEM output blocks pinned
+    at (0, 0); the s + 1 scalars accumulate in SMEM.
+    """
+    _require_block("sstep_gram", pb, wb, wp)
+    _require_1d("sstep_gram", r)
+    n, s = pb.shape
+    dt = pb.dtype
+    chunk_eff, grid = _chunking(n, chunk)
+    spec = pl.BlockSpec((chunk_eff, s), lambda i: (i, 0))
+    vspec = pl.BlockSpec((chunk_eff,), lambda i: (i,))
+    acc = pl.BlockSpec((s, s), lambda i: (0, 0))
+
+    def kernel(p_ref, w_ref, wp_ref, r_ref, gpp_ref, c_ref, v_ref):
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            gpp_ref[...] = jnp.zeros_like(gpp_ref)
+            c_ref[...] = jnp.zeros_like(c_ref)
+            for j in range(s + 1):
+                v_ref[j] = jnp.zeros((), v_ref.dtype)
+
+        valid = _valid_mask(i, chunk_eff, n)
+        zero = jnp.zeros((), dt)
+        p = jnp.where(valid[:, None], p_ref[...], zero)
+        w = jnp.where(valid[:, None], w_ref[...], zero)
+        wpv = jnp.where(valid[:, None], wp_ref[...], zero)
+        rv = jnp.where(valid, r_ref[...], zero)
+        gpp_ref[...] += jnp.dot(p.T, w, preferred_element_type=dt)
+        c_ref[...] += jnp.dot(wpv.T, p, preferred_element_type=dt)
+        g = jnp.sum(p * rv[:, None], axis=0)
+        for j in range(s):
+            v_ref[j] += g[j]
+        v_ref[s] += jnp.sum(rv * rv)
+
+    gpp, c, v = pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[spec, spec, spec, vspec],
+        out_specs=[acc, acc, pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, s), dt),
+            jax.ShapeDtypeStruct((s, s), dt),
+            jax.ShapeDtypeStruct((s + 1,), dt),
+        ],
+        interpret=interpret,
+    )(pb, wb, wp, r)
+    return jnp.concatenate([gpp.reshape(-1), c.reshape(-1), v])
+
+
+def sstep_basis(b, dinv, qp, pb, wp, wb, *, chunk: int = 1024,
+                interpret: bool = False):
+    """``(Pb·diag(dinv) − Qp @ b, Wb·diag(dinv) − Wp @ b)`` in ONE pass
+    over all four (n, s) blocks — the s-step A-conjugation with the basis
+    column normalization folded into the same sweep."""
+    _require_block("sstep_basis", qp, pb, wp, wb)
+    n, s = pb.shape
+    chunk_eff, grid = _chunking(n, chunk)
+    spec = pl.BlockSpec((chunk_eff, s), lambda i: (i, 0))
+    bm = jnp.asarray(b, pb.dtype).reshape(s, s)
+    kv = jnp.asarray(dinv, pb.dtype).reshape(1, s)
+
+    def kernel(b_ref, k_ref, qp_ref, pb_ref, wp_ref, wb_ref, o1_ref, o2_ref):
+        o1_ref[...] = pb_ref[...] * k_ref[...] - jnp.dot(
+            qp_ref[...], b_ref[...], preferred_element_type=o1_ref.dtype
+        )
+        o2_ref[...] = wb_ref[...] * k_ref[...] - jnp.dot(
+            wp_ref[...], b_ref[...], preferred_element_type=o2_ref.dtype
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((s, s), lambda i: (0, 0)),
+            pl.BlockSpec((1, s), lambda i: (0, 0)),
+            spec, spec, spec, spec,
+        ],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((n, s), pb.dtype)] * 2,
+        interpret=interpret,
+    )(bm, kv, qp, pb, wp, wb)
+
+
+def sstep_update(a, q, wq, x, r, *, chunk: int = 1024,
+                 interpret: bool = False):
+    """``(x + Q @ a, r − WQ @ a)`` with an (s,) coefficient vector — the
+    s-step solution/residual update, ONE pass over both (n, s) blocks and
+    both (n,) vectors. The vectors ride through as (n, 1) column blocks so
+    the contraction stays a single fused dot per output."""
+    _require_block("sstep_update", q, wq)
+    _require_1d("sstep_update", x, r)
+    n, s = q.shape
+    chunk_eff, grid = _chunking(n, chunk)
+    spec = pl.BlockSpec((chunk_eff, s), lambda i: (i, 0))
+    cspec = pl.BlockSpec((chunk_eff, 1), lambda i: (i, 0))
+    av = jnp.asarray(a, q.dtype).reshape(s, 1)
+
+    def kernel(a_ref, q_ref, wq_ref, x_ref, r_ref, ox_ref, or_ref):
+        ox_ref[...] = x_ref[...] + jnp.dot(
+            q_ref[...], a_ref[...], preferred_element_type=ox_ref.dtype
+        )
+        or_ref[...] = r_ref[...] - jnp.dot(
+            wq_ref[...], a_ref[...], preferred_element_type=or_ref.dtype
+        )
+
+    ox, orr = pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((s, 1), lambda i: (0, 0)),
+            spec, spec, cspec, cspec,
+        ],
+        out_specs=[cspec, cspec],
+        out_shape=[jax.ShapeDtypeStruct((n, 1), q.dtype)] * 2,
+        interpret=interpret,
+    )(av, q, wq, x.reshape(n, 1), r.reshape(n, 1))
+    return ox.reshape(n), orr.reshape(n)
+
+
+# ---------------------------------------------------------------------------
 # Legacy fixed-arity wrapper
 # ---------------------------------------------------------------------------
 

@@ -191,3 +191,30 @@ def block_update_ref(m, x: jax.Array, y: jax.Array, mask=None) -> jax.Array:
 
 def block_update2_ref(a1, x1, y1, a2, x2, y2):
     return y1 + x1 @ a1, y2 + x2 @ a2
+
+
+# ---------------------------------------------------------------------------
+# s-step CG kernels
+# ---------------------------------------------------------------------------
+
+
+def sstep_gram_ref(pb, wb, wp, r) -> jax.Array:
+    """Flat local s-step reduction ``[PᵀW | WpᵀP | Pᵀr | rᵀr]`` of length
+    2s² + s + 1 (kernel: one pass over P, W, Wp, r)."""
+    return jnp.concatenate([
+        (pb.T @ wb).reshape(-1),
+        (wp.T @ pb).reshape(-1),
+        pb.T @ r,
+        jnp.vdot(r, r)[None],
+    ])
+
+
+def sstep_basis_ref(b, dinv, qp, pb, wp, wb):
+    """``(Pb·diag(dinv) − Qp @ b, Wb·diag(dinv) − Wp @ b)`` — the s-step
+    A-conjugation with the column normalization folded in."""
+    return pb * dinv[None, :] - qp @ b, wb * dinv[None, :] - wp @ b
+
+
+def sstep_update_ref(a, q, wq, x, r):
+    """``(x + Q @ a, r − WQ @ a)`` for an (s,) coefficient vector."""
+    return x + q @ a, r - wq @ a

@@ -517,7 +517,13 @@ def main():
 
     if args.solver or args.all_solver:
         if args.all_solver:
-            for variant in ("hs", "fcg", "sstep"):
+            from repro.api import VARIANTS
+
+            # the sweep covers every user-selectable CG body — a variant
+            # added to the API without a dry-run cell fails loudly here
+            sweep = ("hs", "fcg", "pipecg", "sstep")
+            assert sweep == VARIANTS, (sweep, VARIANTS)
+            for variant in sweep:
                 run_solver_cell(variant, "7pt", args.dofs, args.out)
             run_solver_cell("fcg", "27pt", 260, args.out)
             # Ginkgo-analog (allgather) at full 405^3/device x 512 exceeds

@@ -92,6 +92,7 @@ class ServeEngine:
         block: int = 4,
         variant: str = "hs",
         overlap: bool = True,
+        s: int | None = None,
         tol: float = 1e-8,
         maxiter: int = 200,
         autotune: bool = False,
@@ -123,6 +124,14 @@ class ServeEngine:
         self.slots = max(int(slots), 1)
         self.fmt, self.block = fmt, int(block)
         self.variant, self.overlap = variant, bool(overlap)
+        if s is not None:
+            from repro.api import _SSTEP_MSG, ConfigError
+
+            if int(s) < 1:
+                raise ConfigError(f"s must be >= 1: {s}")
+            if variant != "sstep":
+                raise ConfigError(_SSTEP_MSG)
+        self.s = int(s) if s is not None else None
         self.tol, self.maxiter = float(tol), int(maxiter)
         self.autotune = bool(autotune)
         self.objective = objective
@@ -208,6 +217,7 @@ class ServeEngine:
             )
         fmt, block = self.fmt, self.block
         variant, overlap = self.variant, self.overlap
+        sstep_s = self.s or 2  # s-step block size (used iff variant == sstep)
         tuned_label = None
         cached = None
         if self.autotune:
@@ -220,12 +230,15 @@ class ServeEngine:
             # the batched flush path is block-HS; the variant axis only
             # matters for sequential (slots=1) serving
             variant = ch.variant if self.slots == 1 else "hs"
+            if variant == "sstep":
+                sstep_s = ch.s
             cost = cost.at_freq(ch.freq)
             tuned_label = ch.label
             cached = tune.cached
         cfg = dict(
             fmt=fmt, block=block, variant=variant, overlap=overlap,
-            cost=cost, tuned_label=tuned_label, tune_cached=cached,
+            s=sstep_s, cost=cost, tuned_label=tuned_label,
+            tune_cached=cached,
         )
         self._configs[sess.key] = cfg
         return cfg
@@ -250,16 +263,20 @@ class ServeEngine:
         t_start = self.clock()
         p0, t0 = sess.partitions, sess.tune_trials
         cfg = self._session_config(sess)
+        # a sequential sstep config solves on a halo_depth=s partition
+        # (matrix-powers ghost zones); batched flushes are block-HS
+        depth = cfg["s"] if (cfg["variant"] == "sstep" and
+                             self.slots == 1) else 1
         mat = sess.matrix(
             cfg["fmt"], cfg["block"], grid=self.grid,
-            partition=self.grid_partition,
+            partition=self.grid_partition, halo_depth=depth,
         )
         mesh = sess.mesh_for(mat)
         axis = matrix_axis(mat)
         r, k = self.slots, len(reqs)
         h = sess.solver(
             mat, nrhs=r, variant=cfg["variant"], tol=self.tol,
-            maxiter=self.maxiter, overlap=cfg["overlap"],
+            maxiter=self.maxiter, overlap=cfg["overlap"], s=cfg["s"],
         )
         cold = not h.warmed
         led_kw = dict(
@@ -396,6 +413,8 @@ class ServeEngine:
         )
         if self.grid is not None:  # absent on the 1-D path: ledgers stay
             engine["grid"] = [self.grid[0], self.grid[1]]  # byte-identical
+        if self.s is not None:  # absent unless --s was given: same contract
+            engine["s"] = self.s
         return dict(
             schema=1,
             engine=engine,
@@ -440,6 +459,10 @@ def parse_args(argv=None):
                     choices=["hs", "fcg", "pipecg", "sstep"],
                     help="sequential-serving variant (batched flushes are "
                          "block-HS)")
+    ap.add_argument("--s", type=int, default=None,
+                    help="s-step block size (requires --variant sstep; "
+                         "default 2): sequential serving solves on a "
+                         "halo_depth=s matrix-powers partition")
     ap.add_argument("--no-overlap", dest="overlap", action="store_false")
     ap.add_argument("--tol", type=float, default=1e-8)
     ap.add_argument("--maxiter", type=int, default=200)
@@ -509,7 +532,7 @@ def main(argv=None):
     )
     engine = ServeEngine(
         n_shards, slots=args.slots, fmt=args.fmt, block=args.block,
-        variant=args.variant, overlap=args.overlap, tol=args.tol,
+        variant=args.variant, overlap=args.overlap, s=args.s, tol=args.tol,
         maxiter=args.maxiter, autotune=args.autotune,
         objective=args.objective, tune_budget=args.tune_budget,
         tune_cache=args.tune_cache, grid=grid, grid_partition=grid_part,

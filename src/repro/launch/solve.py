@@ -84,6 +84,12 @@ def parse_args(argv=None):
                          "is streamed once per iteration for all RHS "
                          "columns (docs/solvers.md). Requires --op cg, "
                          "--variant hs, no AMG")
+    ap.add_argument("--s", type=int, default=None,
+                    help="s-step block size (requires --variant sstep; "
+                         "default 2): partitions with halo_depth=s ghost "
+                         "zones so the matrix-powers basis pays ONE "
+                         "widened halo exchange and one fused Gram "
+                         "reduction per s iterations (docs/solvers.md)")
     ap.add_argument("--grid", default=None,
                     help="RxC process grid for the 2-D partitioned CG path "
                          "(R*C must equal the shard count; 1xN reproduces "

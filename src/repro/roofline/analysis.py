@@ -205,7 +205,25 @@ CG_HOTPATH = {
     # streams / 7 passes (each gram, axpy-like update, and the mask its
     # own pass).
     "block_hs": {"unfused": (15, 7), "fused": (12, 4)},
+    # s-step CG (core/cg.py:_sstep_body), PER-ITERATION amortized values at
+    # the s=2 accounting default — exact s-parameterized values come from
+    # cg_sstep_hotpath(s). Fused path per block: sstep_gram reads the three
+    # (n, s) basis blocks + r (3s+1 streams), sstep_basis reads 4 / writes
+    # 2 blocks (6s), sstep_update reads 2 blocks + x, r and writes both
+    # (2s+4) -> (11s+5)/s streams in 3/s passes per iteration. Unfused
+    # op-by-op Gram algebra: (13s+6)/s streams in 8/s passes.
+    "sstep": {"unfused": (16.0, 4.0), "fused": (13.5, 1.5)},
 }
+
+
+def cg_sstep_hotpath(s: int = 2, *, fused: bool = True) -> tuple[float, float]:
+    """Exact per-iteration (streams, sweeps) of the s-step body for block
+    size ``s`` — the s-parameterized version of ``CG_HOTPATH['sstep']``
+    (which carries the s=2 accounting default)."""
+    s = max(int(s), 1)
+    if fused:
+        return ((11 * s + 5) / s, 3 / s)
+    return ((13 * s + 6) / s, 8 / s)
 
 # All-reduce phases per iteration and how many of them the variant issues
 # concurrently with compute (the hidden-latency term): hs blocks on both of
@@ -220,6 +238,11 @@ CG_COMM = {
     # all-reduces/iter) but each carries r^2 scalars — see
     # cg_reduce_scalars(nrhs=...)
     "block_hs": {"allreduces": 2, "hidden": 0},
+    # s-step CG: ONE blocking all-reduce PER s-ITERATION BLOCK — the
+    # communication-avoiding trade. cg_exposed_latency_s divides the
+    # latency by s for this variant (pass ``s``); same for the widened
+    # halo exchange (1 per block) priced in energy/accounting.py.
+    "sstep": {"allreduces": 1, "hidden": 0},
 }
 
 
@@ -246,6 +269,7 @@ def cg_exposed_latency_s(
     variant: str, n_shards: int, *, alpha: float = 5e-6,
     hide_budget_s: float = float("inf"),
     grid: tuple[int, int] | None = None,
+    s: int = 2,
 ) -> float:
     """Exposed all-reduce latency per CG iteration (seconds).
 
@@ -257,12 +281,18 @@ def cg_exposed_latency_s(
     phase's compute time; the default — an unbounded budget — models the
     asymptotic large-problem regime where the matvec always covers the
     latency).
+
+    ``sstep``'s single blocking all-reduce serves a whole s-iteration block
+    (``CG_COMM``), so its per-iteration latency is divided by ``s`` — the
+    communication-avoiding amortization the variant exists for.
     """
     if n_shards <= 1:
         return 0.0
     c = CG_COMM[variant]
     lat = alpha * reduce_hops(n_shards, grid) * reduce_launches(grid)
     exposed = c["allreduces"] * lat - min(c["hidden"] * lat, hide_budget_s)
+    if variant == "sstep":
+        exposed = exposed / max(int(s), 1)
     return max(exposed, 0.0)
 
 
@@ -299,21 +329,29 @@ def pencil_halo_widths(p, grid: tuple[int, int]) -> dict:
 
 
 def cg_vector_traffic(n: int, *, variant: str = "hs", fused: bool = True,
-                      dtype_bytes: int = 8, nrhs: int = 1) -> float:
+                      dtype_bytes: int = 8, nrhs: int = 1,
+                      s: int | None = None) -> float:
     """Vector-op HBM bytes per CG iteration outside the SpMV. For the
     multi-RHS ``block_hs`` body the streams are in n*r units — pass
-    ``nrhs``."""
-    streams, _ = CG_HOTPATH[variant]["fused" if fused else "unfused"]
+    ``nrhs``. For ``sstep`` pass ``s`` for the exact block size (the table
+    row carries the s=2 accounting default)."""
+    if variant == "sstep" and s is not None:
+        streams, _ = cg_sstep_hotpath(s, fused=fused)
+    else:
+        streams, _ = CG_HOTPATH[variant]["fused" if fused else "unfused"]
     return float(streams) * n * dtype_bytes * max(int(nrhs), 1)
 
 
-def cg_vector_sweeps(variant: str = "hs", *, fused: bool = True) -> int:
+def cg_vector_sweeps(variant: str = "hs", *, fused: bool = True,
+                     s: int | None = None) -> float:
     """Full-vector kernel passes per CG iteration outside the SpMV."""
+    if variant == "sstep" and s is not None:
+        return cg_sstep_hotpath(s, fused=fused)[1]
     return CG_HOTPATH[variant]["fused" if fused else "unfused"][1]
 
 
 def cg_vector_flops(n: int, *, variant: str = "hs", fused: bool = True,
-                    nrhs: int = 1) -> float:
+                    nrhs: int = 1, s: int | None = None) -> float:
     """Vector-op FLOPs per CG iteration outside the SpMV: ~1 flop per
     streamed element (axpy: 2 flops / 3 streams, dot: 2 flops / 2 streams —
     the hot path sits between, and these ops are all memory-bound anyway).
@@ -323,17 +361,24 @@ def cg_vector_flops(n: int, *, variant: str = "hs", fused: bool = True,
     Used by the autotune pruning model (autotune/prune.py) to price a
     variant's compute engine next to :func:`cg_vector_traffic`'s memory
     term."""
-    streams, _ = CG_HOTPATH[variant]["fused" if fused else "unfused"]
+    if variant == "sstep" and s is not None:
+        streams, _ = cg_sstep_hotpath(s, fused=fused)
+    else:
+        streams, _ = CG_HOTPATH[variant]["fused" if fused else "unfused"]
     return float(streams) * n * max(int(nrhs), 1)
 
 
-def cg_reduce_scalars(variant: str = "hs", nrhs: int = 1) -> int:
+def cg_reduce_scalars(variant: str = "hs", nrhs: int = 1, s: int = 2) -> float:
     """Scalars carried by the variant's fused all-reduce(s) per iteration
     (hs: alpha pair + beta; fcg: one 3-term fusion; pipecg: the single
-    Ghysels–Vanroose fusion; block_hs: two r x r Grams)."""
+    Ghysels–Vanroose fusion; block_hs: two r x r Grams; sstep: the whole
+    (2s² + s + 1)-scalar Gram payload amortized over its s iterations)."""
     if variant == "block_hs":
         r = max(int(nrhs), 1)
         return 2 * r * r
+    if variant == "sstep":
+        s = max(int(s), 1)
+        return (2 * s * s + s + 1) / s
     return {"hs": 3, "fcg": 3, "pipecg": 3}[variant]
 
 

@@ -58,6 +58,7 @@ def test_solver_config_roundtrip_defaults():
         api.SolverConfig(op="spmv", fmt="hyb", overlap=False),
         api.SolverConfig(variant="pipecg", tol=1e-6, maxiter=50, repeats=3),
         api.SolverConfig(nrhs=8, fmt="bcsr", block=8),
+        api.SolverConfig(variant="sstep", s=4),
         api.SolverConfig(amg=True),
         api.SolverConfig(amgx_analog=True),
         api.SolverConfig(autotune=True, objective="time", tune_budget=3,
@@ -101,6 +102,10 @@ def test_cli_defaults_match_dataclass_defaults():
         dict(tune_budget=0),
         dict(nrhs=0),
         dict(block=0),
+        dict(s=2),  # the s knob requires the sstep variant
+        dict(s=2, variant="hs"),
+        dict(s=0, variant="sstep"),
+        dict(s=-1, variant="sstep"),
     ],
 )
 def test_invalid_configs_raise_config_error(kwargs):
@@ -120,6 +125,7 @@ def test_config_error_is_value_error():
         (["--nrhs", "4", "--amg"], api._NRHS_MSG),
         (["--autotune", "--amg"], api._AUTOTUNE_MSG),
         (["--autotune", "--op", "spmv"], api._AUTOTUNE_MSG),
+        (["--s", "2"], api._SSTEP_MSG),
     ],
 )
 def test_cli_shim_preserves_historical_exits(argv, message):

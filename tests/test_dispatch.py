@@ -166,6 +166,40 @@ def test_pick_bz():
     assert pick_bz(13) == 1
 
 
+@pytest.mark.parametrize("n", [1000, 513])
+@pytest.mark.parametrize("s", [2, 4])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_sstep_ops_family(n, s, dtype):
+    # the three fused s-step ops (basis A-conjugation, one-pass Gram
+    # reduction operands, blocked x/r update) vs the ref.py oracles,
+    # jnp and interpret backends
+    rng = np.random.default_rng(11)
+    mk = lambda *shape: jnp.asarray(rng.standard_normal(shape), dtype)
+    pb, wb, wp, qp = (mk(n, s) for _ in range(4))
+    r, x = mk(n), mk(n)
+    bmat, dinv, a = mk(s, s), mk(s), mk(s)
+    rtol, atol = _tol(pb.dtype, n)
+    g_ref = np.asarray(ref.sstep_gram_ref(pb, wb, wp, r))
+    p_ref, w_ref = ref.sstep_basis_ref(bmat, dinv, qp, pb, wp, wb)
+    x_ref, r_ref = ref.sstep_update_ref(a, qp, wp, x, r)
+    assert g_ref.shape == (2 * s * s + s + 1,)
+    for b in ("jnp", "interpret"):
+        o = kd.ops_for(b)
+        np.testing.assert_allclose(
+            np.asarray(o.sstep_gram(pb, wb, wp, r)), g_ref,
+            rtol=rtol, atol=atol)
+        p_out, w_out = o.sstep_basis(bmat, dinv, qp, pb, wp, wb)
+        np.testing.assert_allclose(np.asarray(p_out), np.asarray(p_ref),
+                                   rtol=rtol, atol=atol)
+        np.testing.assert_allclose(np.asarray(w_out), np.asarray(w_ref),
+                                   rtol=rtol, atol=atol)
+        x_out, r_out = o.sstep_update(a, qp, wp, x, r)
+        np.testing.assert_allclose(np.asarray(x_out), np.asarray(x_ref),
+                                   rtol=rtol, atol=atol)
+        np.testing.assert_allclose(np.asarray(r_out), np.asarray(r_ref),
+                                   rtol=rtol, atol=atol)
+
+
 # ---------------------------------------------------------------------------
 # OpSet dispatch + sweep ledger
 # ---------------------------------------------------------------------------
