@@ -201,12 +201,14 @@ def write_ledger(name: str, gate: dict, info: dict | None = None) -> str:
     baseline (>5% drift fails the energy-ledger job). ``info``: contextual
     data (wall times, environment) that is recorded but never gated.
     """
+    from repro.obs.provenance import ledger_meta
+
     os.makedirs(LEDGERS, exist_ok=True)
     if _SMOKE and not name.endswith("_smoke"):
         name = f"{name}_smoke"
     path = ledger_path(name)
     payload = dict(schema=1, benchmark=name, smoke=_SMOKE, gate=gate,
-                   info=info or {})
+                   info=info or {}, meta=ledger_meta())
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
     return path

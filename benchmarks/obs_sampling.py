@@ -1,0 +1,106 @@
+"""§Observability: power-sampler fidelity vs the exact energy ledger.
+
+The paper's measurements come from a fixed-rate board-power sampler whose
+readings are integrated over the run; the ledger (energy/monitor.py)
+instead computes exact per-segment integrals. This benchmark closes the
+loop between the two (obs/timeline.py):
+
+* **exactness** — HARD-ASSERTS that replaying the monitor's segments into
+  a wall-clock timeline and integrating at event boundaries reproduces
+  ``energy()`` and ``energy_by_region()`` *bitwise* (same summation order
+  over the same floats — no tolerance).
+* **under-sampling curve** — emulates an NVML-style sampler at a sweep of
+  rates over the same timeline and reports the relative error of
+  sampled-and-integrated dynamic energy vs the exact ledger total: the
+  Magoulès-style picture of how coarse sampling misattributes energy
+  across fast region transitions. HARD-ASSERTS the acceptance bounds:
+  <= 1% relative error at 10 kHz, and a decaying error curve (the
+  finest rate beats the coarsest by >= 10x).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import write_results
+
+RATES_HZ = (10, 100, 1_000, 10_000, 100_000)
+
+
+def reference_timeline(iters: int, n_shards: int = 8):
+    """A deterministic solve-shaped timeline (setup + iterated regions)."""
+    from repro.energy.accounting import OpCounts
+    from repro.energy.trace import EnergyTrace, monitor_from_trace
+    from repro.obs.timeline import build_timeline
+
+    tr = EnergyTrace()
+    tr.enter("setup")
+    tr.enter("iteration")
+    tr.record("setup", "spmv", "spmv",
+              OpCounts(flops=1e11, hbm_bytes=1e11))
+    tr.record("iteration", "overlap", "spmv",
+              OpCounts(flops=5e10, hbm_bytes=6e10, ici_bytes=1e7,
+                       n_collectives=1))
+    tr.record("iteration", "reductions", "dot",
+              OpCounts(flops=1e9, hbm_bytes=4e9, ici_bytes=64,
+                       n_collectives=1))
+    mon = monitor_from_trace(tr, iters=iters, n_shards=n_shards,
+                             idle_s=0.01)
+    return mon, build_timeline(mon)
+
+
+def exactness_rows(mon, tl) -> list[dict]:
+    """Event-boundary integration vs the monitor: bitwise, not approximate."""
+    e_mon, e_tl = mon.energy(), tl.energy()
+    # every field the timeline reports must match the monitor bitwise (the
+    # monitor additionally derives presentation-only pct fields)
+    mismatched = [k for k in e_tl if e_tl[k] != e_mon[k]]
+    assert not mismatched, f"timeline energy() diverged on: {mismatched}"
+    assert tl.energy_by_region() == mon.energy_by_region(), \
+        "timeline energy_by_region() diverged from the monitor"
+    span_s = sum(sp.dt for sp in tl.spans)
+    assert span_s == mon.duration, (span_s, mon.duration)
+    return [dict(check="energy_bitwise", fields=len(e_tl), ok="yes",
+                 de_total_j=e_tl["de_total"]),
+            dict(check="by_region_bitwise",
+                 fields=len(mon.energy_by_region()), ok="yes",
+                 de_total_j=e_tl["de_total"])]
+
+
+def sampling_rows(tl, rates=RATES_HZ) -> list[dict]:
+    """Relative error of the emulated fixed-Hz sampler at each rate."""
+    from repro.obs.timeline import sample_power, sampling_error
+
+    rows = []
+    for hz in rates:
+        err = sampling_error(tl, hz)
+        rows.append(dict(hz=hz, n_samples=len(sample_power(tl, hz).ts),
+                         rel_err=err))
+    # acceptance: 10 kHz within 1% of the exact ledger total, and the
+    # curve actually decays (finest rate >= 10x better than coarsest)
+    by_hz = {r["hz"]: r["rel_err"] for r in rows}
+    assert by_hz[10_000] <= 0.01, f"10 kHz error {by_hz[10_000]:.3e} > 1%"
+    assert by_hz[max(by_hz)] * 10 <= by_hz[min(by_hz)] or \
+        by_hz[min(by_hz)] == 0.0, f"no decay: {by_hz}"
+    return rows
+
+
+def main(smoke: bool = False):
+    from benchmarks.common import set_smoke
+
+    set_smoke(smoke)
+    from repro.energy.report import fmt_table
+
+    iters = 120 if smoke else 500
+    mon, tl = reference_timeline(iters)
+    ex = exactness_rows(mon, tl)
+    print(fmt_table(ex, [("check", "check"), ("fields", "fields"),
+                         ("ok", "bitwise"), ("de_total_j", "DE total (J)")],
+                    "Timeline vs monitor: event-boundary integration"))
+    sw = sampling_rows(tl)
+    print(fmt_table(sw, [("hz", "rate (Hz)"), ("n_samples", "samples"),
+                         ("rel_err", "rel. energy error")],
+                    "Emulated power sampler: under-sampling error"))
+    write_results("obs_sampling", ex + sw)
+
+
+if __name__ == "__main__":
+    main()

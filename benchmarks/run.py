@@ -33,6 +33,7 @@ BENCHES = [
     ("multirhs_scaling (§MultiRHS)", "benchmarks.multirhs_scaling"),
     ("autotune_sweep (§Autotune)", "benchmarks.autotune_sweep"),
     ("serve_bench (§Serving)", "benchmarks.serve_bench"),
+    ("obs_sampling (§Observability)", "benchmarks.obs_sampling"),
     ("roofline_table (§Roofline)", "benchmarks.roofline_table"),
 ]
 

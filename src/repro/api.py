@@ -34,6 +34,10 @@ import json
 import os
 from typing import Any
 
+from repro.obs.log import get_logger
+
+LOG = get_logger("api")
+
 VARIANTS = ("hs", "fcg", "pipecg", "sstep")
 OPS = ("cg", "spmv")
 FORMATS = ("auto", "ell", "hyb", "bcsr")
@@ -154,6 +158,12 @@ class SolverConfig:
     # default (s=2); setting it partitions with halo_depth=s ghost zones
     # so the matrix-powers basis pays one widened exchange per block.
     s: int | None = None
+    # per-iteration convergence telemetry (repro.obs.convergence): bakes a
+    # host callback into the compiled loop body and records the residual
+    # history into the ledger's "telemetry" block. Off by default — the
+    # callback changes the compiled program, so it is part of the
+    # solver-handle cache key.
+    telemetry: bool = False
 
     def __post_init__(self):
         self.validate()
@@ -233,6 +243,7 @@ class SolverConfig:
                 int(args.s)
                 if getattr(args, "s", None) is not None else None
             ),
+            telemetry=bool(getattr(args, "telemetry", False)),
         )
 
     def to_argv(self) -> list[str]:
@@ -260,6 +271,8 @@ class SolverConfig:
             argv += ["--grid", self.grid]
         if self.s is not None:
             argv += ["--s", str(self.s)]
+        if self.telemetry:
+            argv.append("--telemetry")
         return argv
 
 
@@ -416,7 +429,8 @@ class SolverSession:
 
     def solver(self, mat, *, op: str = "cg", nrhs: int = 1,
                variant: str = "hs", precond=None, tol: float = 1e-8,
-               maxiter: int = 100, overlap: bool = True, s: int = 2):
+               maxiter: int = 100, overlap: bool = True, s: int = 2,
+               telemetry: bool = False):
         """Cached :class:`~repro.core.cg.SolverHandle` for (mat, config).
 
         Handles live in the session's own cache (``self.handles``), so
@@ -431,7 +445,7 @@ class SolverSession:
         return solver_handle(
             self.mesh_for(mat), mat, op=op, nrhs=nrhs, variant=variant,
             precond=precond, tol=tol, maxiter=maxiter, overlap=overlap,
-            axis=axis, s=s, cache=self.handles,
+            axis=axis, s=s, telemetry=telemetry, cache=self.handles,
         )
 
     def close(self):
@@ -473,10 +487,11 @@ def default_pool():
 
 def _print_regions(label: str, ledger: dict):
     for name, r in sorted(ledger["regions"].items()):
-        print(
-            f"  [{label}] region {name:12s} t={r['time_s']:.4e}s "
-            f"DE={r['de_j']:.4f}J flops={r['flops']:.3e} "
-            f"hbm={r['hbm_bytes']:.3e}B ici={r['ici_bytes']:.3e}B"
+        LOG.info(
+            "  [%s] region %-12s t=%.4es DE=%.4fJ flops=%.3e hbm=%.3eB "
+            "ici=%.3eB",
+            label, name, r["time_s"], r["de_j"], r["flops"],
+            r["hbm_bytes"], r["ici_bytes"],
         )
 
 
@@ -493,6 +508,22 @@ def _plan_dim_bytes(plan) -> tuple[float, float]:
     return 0.0, float(plan.collective_bytes_per_shard(8))
 
 
+def _write_profile(path: str | None, timelines, payload: dict, log):
+    """Write the Chrome-trace profile of the executed legs (``--profile``)."""
+    if not path or not timelines:
+        return
+    from repro.obs.trace_export import write_chrome_trace
+
+    write_chrome_trace(
+        path, timelines,
+        meta=dict(
+            problem=payload.get("problem"), n=payload.get("n"),
+            shards=payload.get("shards"), op=payload.get("op"),
+        ),
+    )
+    log(f"profile written: {path}")
+
+
 def write_ledger_json(path: str | None, payload: dict):
     """Atomically write a ledger JSON (a reader never sees a half-write)."""
     if not path:
@@ -503,7 +534,7 @@ def write_ledger_json(path: str | None, payload: dict):
     with open(tmp, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
     os.replace(tmp, path)
-    print(f"ledger written: {path}")
+    LOG.info("ledger written: %s", path)
 
 
 def solve(
@@ -511,6 +542,7 @@ def solve(
     config: SolverConfig | None = None,
     *,
     ledger: str | None = None,
+    profile: str | None = None,
     session: SolverSession | None = None,
     pool=None,
     x64: bool = True,
@@ -525,12 +557,19 @@ def solve(
     the energy trace, prints the historical driver report (``verbose``),
     optionally writes the ledger JSON, and returns a :class:`SolveReport`.
 
+    ``profile`` writes a Chrome trace-event JSON of every executed leg's
+    power timeline (repro.obs.trace_export; load in chrome://tracing or
+    Perfetto — docs/observability.md). With ``config.telemetry`` the
+    BCMGX-analog leg additionally records its per-iteration residual
+    history into the ledger's ``telemetry`` block.
+
     ``x64=False`` leaves the caller's JAX precision untouched (in-process
     tests run f32); the CLI always enables x64.
     """
     config = config or SolverConfig()
     config.validate()
 
+    import contextlib
     import time
 
     import jax
@@ -543,10 +582,12 @@ def solve(
     from repro.core.spmv import shard_vector
     from repro.energy import trace
     from repro.energy.accounting import CostModel
+    from repro.obs.provenance import ledger_meta
+    from repro.obs.timeline import build_timeline
 
     def log(msg):
         if verbose:
-            print(msg)
+            LOG.info("%s", msg)
 
     a, name = spec.load()
     n = a.shape[0]
@@ -621,8 +662,9 @@ def solve(
     payload = dict(
         schema=1, problem=name, n=int(n), nnz=int(a.nnz),
         shards=int(n_shards), op=config.op, overlap=bool(overlap),
-        format=fmt, nrhs=nrhs, solvers={},
+        format=fmt, nrhs=nrhs, solvers={}, meta=ledger_meta(),
     )
+    timelines = []  # (label, Timeline) per executed leg when profiling
     if tune is not None:
         payload["autotune"] = tune.ledger_section()
 
@@ -737,6 +779,13 @@ def solve(
                 tr, iters=0, n_shards=n_shards, cost=cost,
                 overlap=leg_overlap, idle_s=0.01, setup_repeats=100,
             )
+            if profile:
+                timelines.append((label, build_timeline(
+                    trace.monitor_from_trace(
+                        tr, iters=0, n_shards=n_shards, cost=cost,
+                        overlap=leg_overlap, idle_s=0.01, setup_repeats=100,
+                    )
+                )))
             e = led["totals"]
             t_model = sum(r["time_s"] for r in led["regions"].values())
             log(
@@ -750,6 +799,7 @@ def solve(
             payload["solvers"][label] = dict(
                 led, wall_s=wall, modeled_s=t_model / 100
             )
+        _write_profile(profile, timelines, payload, log)
         write_ledger_json(ledger, payload)
         summary = {
             label: dict(
@@ -766,7 +816,7 @@ def solve(
     h = session.solver(
         mat, nrhs=nrhs, variant=variant, precond=precond,
         tol=config.tol, maxiter=config.maxiter, overlap=overlap,
-        s=sstep_s,
+        s=sstep_s, telemetry=config.telemetry,
     )
     legs = [
         ("BCMGX-analog" if not config.amgx_analog else "AmgX-analog", h)
@@ -780,15 +830,27 @@ def solve(
     bcmgx_label = legs[0][0]
     summary = {}
     for label, hdl in legs:
-        res = hdl.warm(bp, x0)  # warmup/compile: executed counts recorded
-        tr = hdl.trace
-        fn = hdl.fn
-        walls = []
-        for _ in range(config.repeats):
-            t0 = time.perf_counter()
-            res = fn(bp, x0)
-            jax.block_until_ready(res.x)
-            walls.append(time.perf_counter() - t0)
+        rec = None
+        with contextlib.ExitStack() as stack:
+            if config.telemetry and label == bcmgx_label:
+                from repro.obs import convergence
+
+                # collect the baked-in per-iteration callbacks; the last
+                # recorded run (= the final repeat) becomes the history
+                rec = stack.enter_context(convergence.record())
+            res = hdl.warm(bp, x0)  # warmup/compile: counts recorded
+            tr = hdl.trace
+            fn = hdl.fn
+            walls = []
+            for _ in range(config.repeats):
+                t0 = time.perf_counter()
+                res = fn(bp, x0)
+                jax.block_until_ready(res.x)
+                walls.append(time.perf_counter() - t0)
+            if rec is not None:
+                # debug callbacks run on a side thread; drain them before
+                # the recorder closes
+                jax.effects_barrier()
         wall = sum(walls) / len(walls)
         iters = int(res.iters)
         # the batched leg converges each column independently: report the
@@ -799,6 +861,14 @@ def solve(
             tr, iters=iters, n_shards=n_shards, cost=cost,
             overlap=(overlap and label != "Ginkgo-analog"), idle_s=0.01,
         )
+        if profile:
+            timelines.append((label, build_timeline(
+                trace.monitor_from_trace(
+                    tr, iters=iters, n_shards=n_shards, cost=cost,
+                    overlap=(overlap and label != "Ginkgo-analog"),
+                    idle_s=0.01,
+                )
+            )))
         e = led["totals"]
         t_model = sum(r["time_s"] for r in led["regions"].values())
         matrix_bytes = sum(
@@ -829,6 +899,8 @@ def solve(
             entry["iters_cols"] = [
                 int(v) for v in np.asarray(res.iters_cols)
             ]
+        if rec is not None:
+            entry["telemetry"] = rec.ledger()
         payload["solvers"][label] = entry
         summary[label] = dict(
             iters=iters, relres=relres, wall_s=wall, modeled_s=t_model,
@@ -836,6 +908,7 @@ def solve(
         )
         if label == bcmgx_label:
             session.solves += nrhs * config.repeats
+    _write_profile(profile, timelines, payload, log)
     write_ledger_json(ledger, payload)
     return SolveReport(
         problem=name, n=int(n), nnz=int(a.nnz), shards=int(n_shards),

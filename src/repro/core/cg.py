@@ -148,7 +148,20 @@ class BlockSolveResult:
 # ---------------------------------------------------------------------------
 
 
-def _hs_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis, ops):
+def _telemetry_emit(i, relres, axis):
+    """Bake the per-iteration convergence callback into the loop body.
+
+    Called at trace time only when the solver was built with
+    ``telemetry=True`` (repro.obs.convergence): the compiled program then
+    reports ``(i, relres)`` to the host once per *executed* iteration.
+    """
+    from repro.obs import convergence
+
+    convergence.instrument(i, relres, axis)
+
+
+def _hs_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis, ops,
+             telemetry=False):
     """Hestenes–Stiefel PCG; 2 all-reduces/iter (one fused).
 
     Hot-loop vector work runs through the kernel dispatch ``ops``: with the
@@ -202,6 +215,8 @@ def _hs_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis, ops):
             beta = rz_new / rz
             with trace.region("reductions"):
                 p = ops.axpy(beta, p, z)
+        if telemetry:
+            _telemetry_emit(i + 1, jnp.sqrt(rr / jnp.maximum(bb, 1e-300)), axis)
         return (i + 1, x, r, z, p, rz_new, rr)
 
     i0 = jnp.asarray(0, jnp.int32)
@@ -209,7 +224,8 @@ def _hs_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis, ops):
     return c[1], c[0], c[6], bb
 
 
-def _fcg_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis, ops):
+def _fcg_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis, ops,
+              telemetry=False):
     """Single-synchronization (communication-reduced flexible) CG.
 
     Chronopoulos–Gear two-term recurrence: ONE fused all-reduce per
@@ -261,6 +277,11 @@ def _fcg_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis, ops):
                 alpha_new = gamma_new / (delta - beta * gamma_new / alpha)
                 p, s = ops.fused_axpy2(beta, p, u, beta, s, w)  # p=u+βp ; s=w+βs
                 x, r = ops.fused_axpy2(alpha_new, p, x, -alpha_new, s, r)
+        if telemetry:
+            # rr here is ||r||² *before* this body's update (the fused
+            # reduction reads the incoming residual) — the reported curve
+            # lags the true residual by one iteration
+            _telemetry_emit(i + 1, jnp.sqrt(rr / jnp.maximum(bb, 1e-300)), axis)
         return (i + 1, x, r, p, s, gamma_new, alpha_new, rr)
 
     i0 = jnp.asarray(1, jnp.int32)
@@ -270,7 +291,7 @@ def _fcg_body(A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis, ops):
 
 def _pipecg_body(
     A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, axis, ops,
-    overlap=True,
+    overlap=True, telemetry=False,
 ):
     """Ghysels–Vanroose pipelined PCG: ONE all-reduce/iter, hidden.
 
@@ -367,6 +388,9 @@ def _pipecg_body(
                     s_, p = ops.fused_axpy2(beta, s_, w, beta, p, u)
                     x, r = ops.fused_axpy2(alpha_new, p, x, -alpha_new, s_, r)
                     u, w = ops.fused_axpy2(-alpha_new, q, u, -alpha_new, z, w)
+        if telemetry:
+            # pipelined trade-off: rr lags the updated residual by one iter
+            _telemetry_emit(i + 1, jnp.sqrt(rr / jnp.maximum(bb, 1e-300)), axis)
         return (i + 1, x, r, u, w, p, s_, q, z, gamma_new, alpha_new, rr)
 
     def cond(c):
@@ -382,7 +406,7 @@ def _pipecg_body(
 
 def _sstep_body(
     A, pre: Preconditioner, pdata, b, x0, *, tol, maxiter, s, axis, ops,
-    mat=None,
+    mat=None, telemetry=False,
 ):
     """s-step CG (Chronopoulos–Gear): one fused all-reduce per s iterations.
 
@@ -491,6 +515,10 @@ def _sstep_body(
         with trace.region("reductions"):
             # x += Q a ; r -= WQ a — ONE fused pass
             x, r = ops.sstep_update(a, Q, WQ, x, r)
+        if telemetry:
+            # one report per s-iteration block; rr is the block-entry
+            # residual (the fused Gram reads the incoming r)
+            _telemetry_emit(i + s, jnp.sqrt(rr / jnp.maximum(bb, 1e-300)), axis)
         return (i + s, ok & fin, x, r, Q, WQ, Gq, rr)
 
     def cond(c):
@@ -513,7 +541,7 @@ def _sstep_body(
     return c[2], c[0], c[7], bb
 
 
-def _block_hs_body(A, B, X0, *, tol, maxiter, axis, ops):
+def _block_hs_body(A, B, X0, *, tol, maxiter, axis, ops, telemetry=False):
     """Breakdown-guarded block Hestenes–Stiefel CG for (R, r) RHS blocks.
 
     The scalar recurrences become r×r Gram algebra: alpha/beta are small
@@ -574,6 +602,13 @@ def _block_hs_body(A, B, X0, *, tol, maxiter, axis, ops):
         it_cols = jnp.where(
             jnp.diagonal(RRn) <= tol2, jnp.minimum(it_cols, i + 1), it_cols
         )
+        if telemetry:
+            # per-column relative residuals: the history rows are vectors
+            _telemetry_emit(
+                i + 1,
+                jnp.sqrt(jnp.diagonal(RRn) / jnp.maximum(bb, 1e-300)),
+                axis,
+            )
         return (i + 1, X, R_, Pb, RRn, it_cols)
 
     i0 = jnp.asarray(0, jnp.int32)
@@ -611,6 +646,7 @@ def make_solver(
     axis="shards",  # mesh axis name, or a (rows, cols) tuple for 2-D grids
     kernels: str | None = None,
     overlap: bool = True,
+    telemetry: bool = False,
 ):
     """Build a jitted distributed solver: ``solve(b, x0) -> SolveResult``.
 
@@ -638,6 +674,11 @@ def make_solver(
             and ``pipecg`` issues its all-reduce before the concurrent
             SpMV. ``False`` restores the serialized order (for A/B energy
             comparisons — see ``benchmarks/overlap_scaling.py``).
+        telemetry: bake a per-iteration convergence callback into the loop
+            body (repro.obs.convergence) — the compiled program reports
+            ``(iteration, relres)`` to the host while it runs. Off by
+            default: the callback is part of the compiled program, so this
+            flag is part of the solver-handle cache key.
 
     Returns:
         A jitted ``solve(b, x0) -> SolveResult`` where ``b``/``x0`` are
@@ -649,7 +690,10 @@ def make_solver(
 
     pre = precond or identity_precond()
     body = _BODIES[variant]
-    kw = dict(tol=tol, maxiter=maxiter, axis=axis, ops=kd.ops_for(kernels))
+    kw = dict(
+        tol=tol, maxiter=maxiter, axis=axis, ops=kd.ops_for(kernels),
+        telemetry=telemetry,
+    )
     if variant == "sstep":
         kw["s"] = s
     if variant == "pipecg":
@@ -815,6 +859,7 @@ def make_block_solver(
     axis="shards",  # mesh axis name, or a (rows, cols) tuple for 2-D grids
     kernels: str | None = None,
     overlap: bool = True,
+    telemetry: bool = False,
 ):
     """Build a jitted multi-RHS block solver: ``solve(B, X0) -> BlockSolveResult``.
 
@@ -835,7 +880,8 @@ def make_block_solver(
             "use make_solver(variant=...) per column for preconditioned solves"
         )
     ops = kd.ops_for(kernels)
-    kw = dict(tol=tol, maxiter=maxiter, axis=axis, ops=ops)
+    kw = dict(tol=tol, maxiter=maxiter, axis=axis, ops=ops,
+              telemetry=telemetry)
     mat_specs = dist_specs(mat, axis)
 
     def fn(m, Bv, X0):
@@ -993,6 +1039,7 @@ def solver_handle(
     axis="shards",  # mesh axis name, or a (rows, cols) tuple for 2-D grids
     kernels: str | None = None,
     overlap: bool = True,
+    telemetry: bool = False,
     cache: dict | None = None,
 ) -> SolverHandle:
     """Cached solver keyed by (partition, config): build once, solve many.
@@ -1013,6 +1060,7 @@ def solver_handle(
         id(mesh), id(mat), str(op), int(max(nrhs, 1)), str(variant),
         None if precond is None else id(precond),
         float(tol), int(maxiter), int(s), axis, kernels, bool(overlap),
+        bool(telemetry),  # the callback is part of the compiled program
     )
     store = _HANDLES if cache is None else cache
     h = store.get(key)
@@ -1037,6 +1085,7 @@ def solver_handle(
         fn = make_block_solver(
             mesh, mat, precond=precond, tol=tol, maxiter=maxiter,
             axis=axis, kernels=kernels, overlap=overlap,
+            telemetry=telemetry,
         )
     elif variant == "naive":
         from repro.core.baselines import make_naive_solver
@@ -1048,6 +1097,7 @@ def solver_handle(
         fn = make_solver(
             mesh, mat, variant=variant, precond=precond, tol=tol,
             maxiter=maxiter, s=s, axis=axis, kernels=kernels, overlap=overlap,
+            telemetry=telemetry,
         )
     h = SolverHandle(fn=fn, key=key, mesh=mesh, mat=mat, precond=precond)
     store[key] = h

@@ -37,6 +37,7 @@ class Segment:
     t_mem: float = 0.0
     t_coll: float = 0.0
     overlapped: bool = True  # was the collective co-scheduled with compute?
+    section: str = ""  # accounting section ("setup"/"iteration"/"idle")
 
     @property
     def dt(self) -> float:
@@ -74,7 +75,8 @@ class PowerMonitor:
     # -- recording ----------------------------------------------------------
 
     def idle(self, duration: float, name: str = "idle"):
-        self._push(name, duration, self.model.chip_static_w, 0.0)
+        self._push(name, duration, self.model.chip_static_w, 0.0,
+                   section="idle")
 
     def region(
         self,
@@ -86,6 +88,7 @@ class PowerMonitor:
         hides_comm: bool | None = None,
         repeats: int = 1,
         duration: float | None = None,
+        section: str = "",
     ) -> float:
         """Record a modeled region executing ``counts`` per device.
 
@@ -113,16 +116,17 @@ class PowerMonitor:
             name, t * repeats, p, min(1.0, 4.0 * comm_frac),
             t_comp=tc * repeats, t_mem=tm * repeats, t_coll=tl * repeats,
             overlapped=overlap if hides_comm is None else hides_comm,
+            section=section,
         )
         return t * repeats
 
     def _push(self, name, dt, chip_w, host_active, *, t_comp=0.0, t_mem=0.0,
-              t_coll=0.0, overlapped=True):
+              t_coll=0.0, overlapped=True, section=""):
         if dt <= 0:
             return
         self.segments.append(
             Segment(name, self._t, self._t + dt, chip_w, host_active,
-                    t_comp, t_mem, t_coll, overlapped)
+                    t_comp, t_mem, t_coll, overlapped, section)
         )
         self._t += dt
 

@@ -349,11 +349,13 @@ def monitor_from_trace(
         mon.region(
             name, c, n_shards=n_shards, overlap=overlap or name == OVERLAP,
             hides_comm=name == OVERLAP, repeats=max(int(setup_repeats), 1),
+            section=SETUP,
         )
     for name, c in sorted(tr.regions(ITERATION).items()):
         mon.region(
             name, c, n_shards=n_shards, overlap=overlap or name == OVERLAP,
             hides_comm=name == OVERLAP, repeats=max(int(iters), 1),
+            section=ITERATION,
         )
     if idle_s > 0:
         mon.idle(idle_s)

@@ -33,6 +33,13 @@ The engine ledger (``--ledger``) records per-request rows (iters, energy,
 wall latency), per-batch rows (cold/warm, new partitions, new tuning
 trials), per-session counters, and throughput totals (solves/sec, p50/p99
 latency, J/solve) — see docs/serving.md.
+
+Observability (docs/observability.md): the engine keeps a
+:class:`repro.obs.metrics.MetricsRegistry` — request/batch/eviction
+counters, queue-depth gauge, batch-width / J-per-request / latency
+histograms — snapshotted into the ledger's ``metrics`` block and written
+as Prometheus text via ``--metrics-out``; ``--profile`` exports every
+flushed batch's power timeline as one sequential Chrome trace.
 """
 
 from __future__ import annotations
@@ -42,6 +49,10 @@ import dataclasses
 import os
 import time
 from typing import Any, Callable
+
+from repro.obs.log import get_logger  # stdlib-only: safe before jax
+
+LOG = get_logger("serve")
 
 
 @dataclasses.dataclass
@@ -104,8 +115,10 @@ class ServeEngine:
         pool=None,
         clock: Callable[[], float] | None = None,
         verbose: bool = False,
+        collect_timelines: bool = False,
     ):
         from repro.autotune.pool import SessionPool
+        from repro.obs.metrics import MetricsRegistry
 
         if grid is not None and autotune:
             raise ValueError(
@@ -149,6 +162,44 @@ class ServeEngine:
         self.batches: list[dict] = []
         self._configs: dict[str, dict] = {}
         self._next_rid = 0
+        # per-flush power timelines (obs.timeline), collected only when the
+        # caller asked for a --profile export: building one costs a monitor
+        # replay per batch
+        self.collect_timelines = bool(collect_timelines)
+        self.timelines: list = []
+        self.metrics = MetricsRegistry()
+        self._evictions_seen = 0
+        self._m_requests = self.metrics.counter(
+            "serve_requests_total", "solve requests admitted"
+        )
+        self._m_batches = self.metrics.counter(
+            "serve_batches_total", "batches flushed"
+        )
+        self._m_cold = self.metrics.counter(
+            "serve_cold_batches_total",
+            "flushes that paid a compile/tune (cold) cost",
+        )
+        self._m_warm = self.metrics.counter(
+            "serve_warm_batches_total", "flushes served fully warm"
+        )
+        self._m_iters = self.metrics.counter(
+            "serve_iterations_total", "CG iterations executed across batches"
+        )
+        self._m_evict = self.metrics.counter(
+            "serve_session_evictions_total", "sessions evicted by the pool LRU"
+        )
+        self._m_queue = self.metrics.gauge(
+            "serve_queue_depth", "requests waiting across all session queues"
+        )
+        self._m_width = self.metrics.histogram(
+            "serve_batch_width", "real (non-padding) requests per flush"
+        )
+        self._m_req_e = self.metrics.histogram(
+            "serve_request_energy_j", "attributed dynamic energy per request"
+        )
+        self._m_req_lat = self.metrics.histogram(
+            "serve_request_latency_s", "submit-to-solution wall latency"
+        )
 
     # -- admission ----------------------------------------------------------
 
@@ -174,9 +225,14 @@ class ServeEngine:
         self._queued_sessions[sess.key] = sess
         q = self.pending.setdefault(sess.key, [])
         q.append(req)
+        self._m_requests.inc()
+        self._m_queue.set(self._queue_depth())
         if len(q) >= self.slots:
             self._flush(sess)
         return req.rid
+
+    def _queue_depth(self) -> int:
+        return sum(len(q) for q in self.pending.values())
 
     def drain(self):
         """Flush every partially-filled queue (ragged final batches)."""
@@ -344,7 +400,25 @@ class ServeEngine:
                     cold=cold, x=X[:, j],
                 )
             )
+            self._m_req_e.observe(energies[j])
+            self._m_req_lat.observe(t_done - req.t_submit)
         sess.solves += k
+        self._m_batches.inc()
+        (self._m_cold if cold else self._m_warm).inc()
+        self._m_iters.inc(iters)
+        self._m_width.observe(k)
+        self._m_queue.set(self._queue_depth())
+        if self.collect_timelines:
+            from repro.obs.timeline import build_timeline
+
+            self.timelines.append(
+                (
+                    f"batch {bi}",
+                    build_timeline(
+                        trace.monitor_from_trace(h.trace, iters=iters, **led_kw)
+                    ),
+                )
+            )
         self.batches.append(
             dict(
                 batch=bi, size=k, slots=r, cold=cold, iters=iters,
@@ -356,18 +430,38 @@ class ServeEngine:
         )
         if self.verbose:
             b = self.batches[-1]
-            print(
-                f"batch {bi}: size={k} cold={cold} iters={iters} "
-                f"DE={batch_energy:.4f}J wall={b['wall_s']:.4f}s "
-                f"new_partitions={b['new_partitions']} "
-                f"new_trials={b['new_tune_trials']}"
+            LOG.info(
+                "batch %d: size=%d cold=%s iters=%d DE=%.4fJ wall=%.4fs "
+                "new_partitions=%d new_trials=%d",
+                bi, k, cold, iters, batch_energy, b["wall_s"],
+                b["new_partitions"], b["new_tune_trials"],
             )
 
     # -- reporting ----------------------------------------------------------
 
+    def _sync_pool_metrics(self):
+        # counters are monotonic; the pool owns the eviction count, so fold
+        # in only the delta since the last snapshot
+        ev = int(self.pool.stats().get("evictions", 0))
+        if ev > self._evictions_seen:
+            self._m_evict.inc(ev - self._evictions_seen)
+            self._evictions_seen = ev
+
+    def metrics_snapshot(self) -> dict:
+        """JSON metrics snapshot (counters/gauges/histograms), pool-synced."""
+        self._sync_pool_metrics()
+        return self.metrics.snapshot()
+
+    def metrics_prometheus(self) -> str:
+        """Prometheus text-exposition snapshot (``--metrics-out``)."""
+        self._sync_pool_metrics()
+        return self.metrics.to_prometheus()
+
     def ledger(self) -> dict:
         """JSON-ready engine ledger; field reference in docs/serving.md."""
         import numpy as np
+
+        from repro.obs.provenance import ledger_meta
 
         results = sorted(self.results, key=lambda r: r.rid)
         lat = np.array([r.latency_s for r in results], dtype=np.float64)
@@ -417,7 +511,9 @@ class ServeEngine:
             engine["s"] = self.s
         return dict(
             schema=1,
+            meta=ledger_meta(),
             engine=engine,
+            metrics=self.metrics_snapshot(),
             n_requests=n_req,
             n_batches=len(self.batches),
             cold_batches=len(cold_b),
@@ -482,6 +578,19 @@ def parse_args(argv=None):
                          "(docs/scaling.md)")
     ap.add_argument("--ledger", default=None,
                     help="write the engine ledger JSON here")
+    ap.add_argument("--profile", default=None, metavar="TRACE_JSON",
+                    help="write a Chrome trace-event JSON of every flushed "
+                         "batch's power timeline, laid end-to-end (open in "
+                         "chrome://tracing or ui.perfetto.dev; validate "
+                         "with tools/check_trace.py)")
+    ap.add_argument("--metrics-out", default=None, metavar="PROM_TXT",
+                    help="write the engine metrics snapshot in Prometheus "
+                         "text exposition format (docs/observability.md)")
+    ap.add_argument("--log-level", default=None,
+                    choices=["debug", "info", "warning", "error"],
+                    help="progress-output verbosity (default info, or "
+                         "$REPRO_LOG); 'debug' prefixes each line with its "
+                         "source logger")
     return ap.parse_args(argv)
 
 
@@ -492,6 +601,9 @@ def main(argv=None):
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.devices}"
         )
+    from repro.obs import log as olog
+
+    olog.setup(args.log_level)
     import jax
 
     jax.config.update("jax_enable_x64", True)
@@ -525,10 +637,10 @@ def main(argv=None):
                 _poisson.cube(args.side, stencil), grid
             )
             a = a[perm][:, perm].tocsr()
-    print(
-        f"serve: problem={name} n={n} nnz={a.nnz} shards={n_shards} "
-        f"slots={args.slots} requests={args.requests}"
-        + (f" grid={args.grid}" if args.grid else "")
+    LOG.info(
+        "serve: problem=%s n=%d nnz=%d shards=%d slots=%d requests=%d%s",
+        name, n, a.nnz, n_shards, args.slots, args.requests,
+        f" grid={args.grid}" if args.grid else "",
     )
     engine = ServeEngine(
         n_shards, slots=args.slots, fmt=args.fmt, block=args.block,
@@ -536,7 +648,7 @@ def main(argv=None):
         maxiter=args.maxiter, autotune=args.autotune,
         objective=args.objective, tune_budget=args.tune_budget,
         tune_cache=args.tune_cache, grid=grid, grid_partition=grid_part,
-        verbose=True,
+        verbose=True, collect_timelines=bool(args.profile),
     )
     B = default_rhs_block(n, max(int(args.requests), 1))
     if perm is not None:
@@ -546,19 +658,37 @@ def main(argv=None):
     engine.serve(a, (B[:, j] for j in range(B.shape[1])))
     led = engine.ledger()
     tot = led["totals"]
-    print(
-        f"served {led['n_requests']} requests in {tot['wall_s']:.4f}s: "
-        f"{tot['solves_per_wall_sec']:.2f} solves/s "
-        f"(warm {tot['warm_solves_per_wall_sec']:.2f}, "
-        f"cold {tot['cold_solves_per_wall_sec']:.2f}) "
-        f"p50={tot['wall_latency_p50_s']:.4f}s "
-        f"p99={tot['wall_latency_p99_s']:.4f}s"
+    LOG.info(
+        "served %d requests in %.4fs: %.2f solves/s (warm %.2f, cold %.2f) "
+        "p50=%.4fs p99=%.4fs",
+        led["n_requests"], tot["wall_s"], tot["solves_per_wall_sec"],
+        tot["warm_solves_per_wall_sec"], tot["cold_solves_per_wall_sec"],
+        tot["wall_latency_p50_s"], tot["wall_latency_p99_s"],
     )
-    print(
-        f"energy: total={tot['energy_j']:.4f}J "
-        f"per-solve={tot['energy_per_solve_j']:.4f}J "
-        f"requests-sum={tot['energy_requests_j']:.4f}J"
+    LOG.info(
+        "energy: total=%.4fJ per-solve=%.4fJ requests-sum=%.4fJ",
+        tot["energy_j"], tot["energy_per_solve_j"],
+        tot["energy_requests_j"],
     )
+    if args.profile and engine.timelines:
+        from repro.obs.trace_export import write_chrome_trace
+
+        write_chrome_trace(
+            args.profile, engine.timelines,
+            meta=dict(
+                problem=name, n=n, shards=n_shards, slots=args.slots,
+                requests=args.requests,
+            ),
+            sequential=True,
+        )
+        LOG.info("profile written: %s", args.profile)
+    if args.metrics_out:
+        d = os.path.dirname(args.metrics_out)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.metrics_out, "w") as f:
+            f.write(engine.metrics_prometheus())
+        LOG.info("metrics written: %s", args.metrics_out)
     write_ledger_json(args.ledger, led)
 
 

@@ -105,6 +105,21 @@ def parse_args(argv=None):
     ap.add_argument("--repeats", type=int, default=1)
     ap.add_argument("--ledger", default=None,
                     help="write the executed energy/time ledger JSON here")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="record per-iteration convergence telemetry "
+                         "(residual history via host callback) into the "
+                         "ledger's 'telemetry' block "
+                         "(docs/observability.md)")
+    ap.add_argument("--profile", default=None, metavar="TRACE_JSON",
+                    help="write a Chrome trace-event JSON of the executed "
+                         "legs' power timelines (open in chrome://tracing "
+                         "or ui.perfetto.dev; validate with "
+                         "tools/check_trace.py)")
+    ap.add_argument("--log-level", default=None,
+                    choices=["debug", "info", "warning", "error"],
+                    help="progress-output verbosity (default info, or "
+                         "$REPRO_LOG); 'debug' prefixes each line with its "
+                         "source logger")
     return ap.parse_args(argv)
 
 
@@ -115,13 +130,16 @@ def main(argv=None):
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.devices}"
         )
+    from repro.obs import log as olog
+
+    olog.setup(args.log_level)
     # import AFTER the device-count env var is set (api.solve imports jax)
     from repro import api
 
     try:
         spec = api.ProblemSpec.from_args(args)
         config = api.SolverConfig.from_args(args)
-        api.solve(spec, config, ledger=args.ledger)
+        api.solve(spec, config, ledger=args.ledger, profile=args.profile)
     except api.ConfigError as e:
         # the historical argparse-era behavior: message on stderr, exit 1
         raise SystemExit(str(e)) from e

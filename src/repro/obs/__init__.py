@@ -1,0 +1,31 @@
+"""Time-resolved observability over the energy ledger machinery.
+
+The paper's methodology is *time-resolved*: board power is sampled during
+execution and attributed to instrumented regions (Fig. 1/2). The ledger
+(energy/trace.py + energy/monitor.py) reproduces the attribution as exact
+per-segment integrals; this package restores the time axis on top of it:
+
+* :mod:`repro.obs.timeline` — replay monitor segments into wall-clock
+  spans, emulate a fixed-Hz (NVML-style) power sampler over them, and show
+  how sampled-and-integrated energy converges to the exact ledger total.
+* :mod:`repro.obs.trace_export` — Chrome trace-event / Perfetto JSON
+  export of a timeline (regions + sections as duration events, power and
+  HBM traffic as counter tracks); ``--profile`` on both launchers.
+* :mod:`repro.obs.convergence` — opt-in per-iteration residual telemetry
+  via host callback (``--telemetry``), recorded into the solve ledger.
+* :mod:`repro.obs.metrics` — counters/gauges/histograms for the serving
+  engine with a Prometheus-text snapshot (``--metrics-out``).
+* :mod:`repro.obs.log` — structured logging (``--log-level`` /
+  ``REPRO_LOG``) whose default output is byte-identical to ``print``.
+* :mod:`repro.obs.provenance` — the ``meta`` block stamped into every
+  written ledger (schema version, jax version, backend, git SHA).
+
+See docs/observability.md for the user-facing tour.
+
+Import-order note: this package ``__init__`` is deliberately empty of
+imports. ``repro.obs.timeline`` reaches jax transitively (through the
+energy/cost model), while the CLI adapters import ``repro.obs.log`` /
+``repro.obs.provenance`` at parse time — *before* the device-count env
+vars are set — so those must stay jax-free and the package must not eagerly
+pull the heavy modules in. Import submodules directly.
+"""

@@ -1,0 +1,111 @@
+"""Opt-in per-iteration convergence telemetry via host callbacks.
+
+The ledger reports the *final* iteration count and relative residual; the
+convergence *curve* — how the residual fell per executed iteration — never
+leaves the device. This module taps it out with ``jax.debug.callback``:
+
+* :func:`instrument` is called at **trace time** inside a solver's
+  ``while_loop`` body (gated by the ``telemetry`` flag threaded through
+  ``core/cg.py``). It bakes an unordered host callback into the compiled
+  program that fires once per *executed* iteration with
+  ``(iteration, relres)``. Only the shard at index 0 along the solve axis
+  reports — the reduced residual is identical on every shard, and one
+  reporter keeps the history free of duplicates.
+* :func:`record` is the host-side sink: a context manager that collects
+  the callbacks fired while it is active into a :class:`ConvergenceRecord`.
+  Without an active recorder the callback is a no-op, so a telemetry-built
+  solver stays usable (and cheap) outside recording.
+
+Because the callback is unordered and a handle may run several times while
+recording (warm-up + repeats), :meth:`ConvergenceRecord.history` splits the
+arrival stream into runs at iteration-counter resets and returns the last
+run sorted by iteration — the converged curve of the final solve.
+
+The compiled program either contains the callback or it does not, so the
+``telemetry`` flag is part of the solver-handle cache key (core/cg.py).
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import numpy as np
+
+
+class ConvergenceRecord:
+    """Arrival-ordered (iteration, relres) entries from one recording."""
+
+    def __init__(self):
+        self.entries: list[tuple[int, object]] = []
+
+    def add(self, i: int, relres):
+        self.entries.append((int(i), relres))
+
+    def runs(self) -> list[list[tuple[int, object]]]:
+        """Split the arrival stream into runs at iteration resets."""
+        out: list[list[tuple[int, object]]] = []
+        prev = None
+        for i, v in self.entries:
+            if prev is None or i <= prev:
+                out.append([])
+            out[-1].append((i, v))
+            prev = i
+        return out
+
+    def history(self) -> list[tuple[int, object]]:
+        """The last run, sorted by iteration (callbacks are unordered)."""
+        rs = self.runs()
+        return sorted(rs[-1], key=lambda e: e[0]) if rs else []
+
+    def residuals(self) -> list:
+        return [v for _, v in self.history()]
+
+    def ledger(self) -> dict:
+        """JSON-ready ``telemetry`` block for the solve ledger."""
+        h = self.history()
+        return dict(
+            iters_recorded=len(h),
+            first_iter=h[0][0] if h else 0,
+            residual_history=[v for _, v in h],
+        )
+
+
+_ACTIVE: list[ConvergenceRecord] = []
+
+
+@contextlib.contextmanager
+def record():
+    """Collect telemetry callbacks into a fresh :class:`ConvergenceRecord`."""
+    rec = ConvergenceRecord()
+    _ACTIVE.append(rec)
+    try:
+        yield rec
+    finally:
+        _ACTIVE.remove(rec)
+
+
+def emit(shard_index, i, relres):
+    """Host-side callback target (one call per executed iteration per
+    shard); keeps only shard 0's reports, into the innermost recorder."""
+    if not _ACTIVE or int(shard_index) != 0:
+        return
+    v = np.asarray(relres)
+    _ACTIVE[-1].add(int(i), v.tolist() if v.ndim else float(v))
+
+
+def instrument(i, relres, axis):
+    """Bake the per-iteration host callback into the traced loop body.
+
+    ``i`` is the iteration counter *after* this body's update, ``relres``
+    the matching relative residual (scalar, or a vector for block solves),
+    ``axis`` the solve mesh axis name (or tuple of names for 2-D grids).
+    """
+    import jax
+    from jax import lax
+
+    names = (axis,) if isinstance(axis, str) else tuple(axis)
+    idx = lax.axis_index(names[0])
+    for nm in names[1:]:
+        # any linear combination is 0 only at the (0, ..., 0) coordinate
+        idx = idx * 65536 + lax.axis_index(nm)
+    jax.debug.callback(emit, idx, i, relres)

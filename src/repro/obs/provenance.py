@@ -1,0 +1,55 @@
+"""Provenance ``meta`` block stamped into every written ledger.
+
+A ledger JSON outlives the process that wrote it — CI artifacts, baseline
+diffs, serving logs. ``ledger_meta()`` records where a ledger came from:
+the ledger schema version, the jax version and backend that executed (or
+modeled) the run, the device count, and the repo git SHA when the tree is
+available. Everything here is *info*, never gated: the baseline differ
+(benchmarks/check_ledgers.py) compares only the ``gate`` side, so meta can
+vary across machines without breaking the energy-ledger job.
+
+jax is imported lazily — the launchers must set device-count env vars
+before jax initializes, and this module is imported at CLI-parse time.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+
+# Version of the ledger envelope written by benchmarks/common.write_ledger,
+# api.write_ledger_json, and the serving engine. Bump on breaking changes
+# to the shared envelope (docs/ledger_schema.md).
+SCHEMA_VERSION = 1
+
+
+def git_sha(repo: str | None = None) -> str | None:
+    """Short HEAD SHA of ``repo`` (default: this file's repo), or None."""
+    if repo is None:
+        repo = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))))
+    try:
+        r = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=repo, capture_output=True, text=True, timeout=5,
+        )
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    sha = r.stdout.strip()
+    return sha if r.returncode == 0 and sha else None
+
+
+def ledger_meta() -> dict:
+    """The ``meta`` block: schema version + runtime + tree provenance."""
+    import jax
+
+    meta = dict(
+        schema_version=SCHEMA_VERSION,
+        jax=jax.__version__,
+        backend=jax.default_backend(),
+        device_count=jax.device_count(),
+    )
+    sha = git_sha()
+    if sha:
+        meta["git_sha"] = sha
+    return meta

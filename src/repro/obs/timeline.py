@@ -1,0 +1,228 @@
+"""Wall-clock power timelines + an emulated fixed-Hz (NVML-style) sampler.
+
+The PowerMonitor already holds a time-resolved record — its segments
+partition ``[0, duration]`` — but exposes it only as exact integrals
+(``energy()`` / ``energy_by_region()``). :func:`build_timeline` lifts the
+segments into a :class:`Timeline` of :class:`Span` rows carrying everything
+a viewer or sampler needs per slice of wall-clock: region, section, watts
+(chip + host), HBM bytes moved, and the exposed/hidden communication split.
+
+Two integration routes over the same timeline:
+
+* **event-boundary** (:meth:`Timeline.energy`): integrate span-by-span —
+  arithmetic mirrors ``PowerMonitor.energy()`` term for term, so the result
+  equals the ledger's ``totals`` *exactly* (bitwise), not approximately.
+* **sampled** (:func:`sample_power` + :func:`integrate_samples`): emulate a
+  real power sensor polled at a fixed rate — one instantaneous reading per
+  sample interval, multiplied by the interval width (what powerMonitor /
+  GPowerU actually compute from NVML readings). Sampling cannot see inside
+  an interval, so short spans alias: :func:`sampling_error` quantifies the
+  under-sampling error, which decays as the rate rises — the Magoulès-style
+  error curve reproduced by ``benchmarks/obs_sampling.py``.
+
+No jax imports here: timelines are plain-python/numpy post-processing of a
+monitor and are usable from tools and tests without a device runtime.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.energy.monitor import PowerMonitor
+
+
+@dataclasses.dataclass(frozen=True)
+class Span:
+    """One wall-clock slice of the timeline (maps 1:1 to a monitor segment)."""
+
+    t0: float
+    t1: float
+    region: str
+    section: str  # "setup" / "iteration" / "idle" ("" when unattributed)
+    chip_w: float  # per-device power over the span
+    host_w: float  # per-host power over the span
+    hbm_bytes: float  # HBM traffic attributed to the span (per device)
+    comm_s: float  # modeled collective seconds inside the span
+    comm_exposed_s: float
+    comm_hidden_s: float
+    overlapped: bool
+
+    @property
+    def dt(self) -> float:
+        return self.t1 - self.t0
+
+
+@dataclasses.dataclass
+class Timeline:
+    """Contiguous spans over ``[0, duration]`` + the constants needed to
+    integrate them exactly the way the monitor does."""
+
+    spans: list[Span]
+    n_devices: int
+    n_hosts: int
+    chip_static_w: float
+    host_static_w: float
+    duration: float
+
+    def energy(self) -> dict:
+        """Event-boundary integration — mirrors ``PowerMonitor.energy()``
+        term for term (same summation order over the same floats), so the
+        result matches the ledger ``totals`` bitwise."""
+        T = self.duration
+        te_chip = sum(sp.chip_w * sp.dt for sp in self.spans) * self.n_devices
+        se_chip = self.chip_static_w * T * self.n_devices
+        te_host = sum(sp.host_w * sp.dt for sp in self.spans) * self.n_hosts
+        se_host = self.host_static_w * T * self.n_hosts
+        peak = max((sp.chip_w for sp in self.spans), default=self.chip_static_w)
+        return dict(
+            runtime=T,
+            comm_s=sum(sp.comm_s for sp in self.spans),
+            comm_exposed_s=sum(sp.comm_exposed_s for sp in self.spans),
+            comm_hidden_s=sum(sp.comm_hidden_s for sp in self.spans),
+            te_gpu=te_chip,
+            se_gpu=se_chip,
+            de_gpu=te_chip - se_chip,
+            te_cpu=te_host,
+            se_cpu=se_host,
+            de_cpu=te_host - se_host,
+            de_total=(te_chip - se_chip) + (te_host - se_host),
+            gpu_power_peak=peak,
+        )
+
+    def energy_by_region(self) -> dict:
+        """Per-region event-boundary integration — same accumulation order
+        and arithmetic as ``PowerMonitor.energy_by_region()``."""
+        out: dict[str, dict] = {}
+        for sp in self.spans:
+            d = out.setdefault(
+                sp.region,
+                dict(time_s=0.0, te_gpu_j=0.0, de_gpu_j=0.0, de_cpu_j=0.0,
+                     de_j=0.0, comm_s=0.0, comm_exposed_s=0.0,
+                     comm_hidden_s=0.0),
+            )
+            de_gpu = (sp.chip_w - self.chip_static_w) * sp.dt * self.n_devices
+            de_cpu = (sp.host_w - self.host_static_w) * sp.dt * self.n_hosts
+            d["time_s"] += sp.dt
+            d["te_gpu_j"] += sp.chip_w * sp.dt * self.n_devices
+            d["de_gpu_j"] += de_gpu
+            d["de_cpu_j"] += de_cpu
+            d["de_j"] += de_gpu + de_cpu
+            d["comm_s"] += sp.comm_s
+            d["comm_exposed_s"] += sp.comm_exposed_s
+            d["comm_hidden_s"] += sp.comm_hidden_s
+        return out
+
+
+def build_timeline(mon: PowerMonitor) -> Timeline:
+    """Lift a monitor's segments into a :class:`Timeline` (1:1 spans).
+
+    Per-span HBM bytes are back-derived from the segment's modeled memory
+    time through the same effective bandwidth the cost model used to
+    produce it, so the timeline's byte counters sum to the traffic the
+    ledger accounted.
+    """
+    eff_bw = mon.cost.power.chip.hbm_bw * mon.cost.bw_efficiency
+    spans = [
+        Span(
+            t0=s.t0,
+            t1=s.t1,
+            region=s.name,
+            section=s.section,
+            chip_w=s.chip_w,
+            host_w=mon.model.host_power(s.host_active),
+            hbm_bytes=s.t_mem * eff_bw,
+            comm_s=s.t_coll,
+            comm_exposed_s=s.comm_exposed_s,
+            comm_hidden_s=s.comm_hidden_s,
+            overlapped=s.overlapped,
+        )
+        for s in mon.segments
+    ]
+    return Timeline(
+        spans=spans,
+        n_devices=mon.n_devices,
+        n_hosts=max(mon.n_devices // mon.devices_per_host, 1),
+        chip_static_w=mon.model.chip_static_w,
+        host_static_w=mon.model.host_static_w,
+        duration=mon.duration,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class SampledPower:
+    """Fixed-rate sampler output: one instantaneous reading per interval."""
+
+    hz: float
+    ts: np.ndarray  # sample times (interval midpoints), seconds
+    widths: np.ndarray  # interval widths (1/hz, shorter final interval)
+    p_chip: np.ndarray  # per-device power readings [W]
+    p_host: np.ndarray  # per-host power readings [W]
+
+
+def sample_power(tl: Timeline, hz: float) -> SampledPower:
+    """Emulate a power sensor polled at ``hz`` over the timeline.
+
+    One reading per sample interval (taken at the interval midpoint — a
+    real sensor reads *somewhere* inside each period; the midpoint is the
+    unbiased choice). The reading is the instantaneous span power at that
+    time: spans shorter than the sample period can be missed entirely,
+    which is exactly the under-sampling failure mode short kernels hit on
+    real NVML at its ~50 Hz effective refresh.
+    """
+    if hz <= 0:
+        raise ValueError(f"sampling rate must be positive, got {hz}")
+    T = tl.duration
+    period = 1.0 / float(hz)
+    n = max(int(np.ceil(T / period - 1e-12)), 1)
+    edges = np.minimum(np.arange(n + 1, dtype=np.float64) * period, T)
+    mids = 0.5 * (edges[:-1] + edges[1:])
+    widths = np.diff(edges)
+    starts = np.array([sp.t0 for sp in tl.spans], dtype=np.float64)
+    chip = np.array([sp.chip_w for sp in tl.spans], dtype=np.float64)
+    host = np.array([sp.host_w for sp in tl.spans], dtype=np.float64)
+    if len(tl.spans) == 0:
+        p_chip = np.full(n, tl.chip_static_w)
+        p_host = np.full(n, tl.host_static_w)
+    else:
+        idx = np.clip(
+            np.searchsorted(starts, mids, side="right") - 1, 0, len(starts) - 1
+        )
+        p_chip = chip[idx]
+        p_host = host[idx]
+    return SampledPower(hz=float(hz), ts=mids, widths=widths,
+                        p_chip=p_chip, p_host=p_host)
+
+
+def integrate_samples(tl: Timeline, sp: SampledPower) -> dict:
+    """Integrate sampler readings into the ledger's energy quantities —
+    the rectangle rule a real power monitor applies to NVML readings.
+
+    Static energy needs only the run duration (known exactly), so the
+    sampling error lives entirely in the total-energy terms and flows into
+    the dynamic quantities by subtraction.
+    """
+    T = tl.duration
+    te_chip = float(np.sum(sp.p_chip * sp.widths)) * tl.n_devices
+    se_chip = tl.chip_static_w * T * tl.n_devices
+    te_host = float(np.sum(sp.p_host * sp.widths)) * tl.n_hosts
+    se_host = tl.host_static_w * T * tl.n_hosts
+    return dict(
+        runtime=T,
+        te_gpu=te_chip,
+        se_gpu=se_chip,
+        de_gpu=te_chip - se_chip,
+        te_cpu=te_host,
+        se_cpu=se_host,
+        de_cpu=te_host - se_host,
+        de_total=(te_chip - se_chip) + (te_host - se_host),
+    )
+
+
+def sampling_error(tl: Timeline, hz: float) -> float:
+    """Relative error of sampled-and-integrated ``de_total`` vs the exact
+    event-boundary integral (== ledger totals)."""
+    exact = tl.energy()["de_total"]
+    sampled = integrate_samples(tl, sample_power(tl, hz))["de_total"]
+    return abs(sampled - exact) / max(abs(exact), 1e-300)

@@ -1,0 +1,139 @@
+"""Chrome trace-event (Perfetto-compatible) JSON export of timelines.
+
+Emits the JSON Object Format of the Trace Event spec — loadable in
+``chrome://tracing`` and https://ui.perfetto.dev — from one or more
+:class:`~repro.obs.timeline.Timeline` objects:
+
+* each timeline becomes one *process* (``pid``) named by its label;
+* ``tid 0`` ("regions") holds one complete ``X`` (duration) event per span,
+  with watts / HBM bytes / exposed-comm seconds in ``args``;
+* ``tid 1`` ("sections") holds the setup/iteration/idle phases — runs of
+  consecutive same-section spans merged into one event;
+* counter (``C``) tracks sample ``chip_power_w`` / ``host_power_w`` /
+  ``hbm_bytes_total`` at every span boundary, so the viewer draws the
+  paper-style power-over-time staircase next to the region lanes.
+
+Timestamps are microseconds (the spec's unit). ``write_chrome_trace`` lays
+multiple timelines out either on a shared clock (default: concurrent
+processes) or end-to-end (``sequential=True`` — the serving engine's
+batches execute one after another on one engine).
+
+Validation lives in ``tools/check_trace.py`` (structure, required counter
+tracks, per-lane non-overlap); CI runs it on a solve and a serve profile.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.obs.timeline import Timeline
+
+_US = 1e6  # trace-event timestamps are microseconds
+
+# counter tracks every exported timeline must carry (check_trace enforces)
+REQUIRED_COUNTERS = ("chip_power_w", "hbm_bytes_total")
+
+
+def timeline_events(
+    tl: Timeline, *, pid: int = 0, label: str = "timeline",
+    t_offset: float = 0.0,
+) -> list[dict]:
+    """Trace events for one timeline under process ``pid``.
+
+    ``t_offset`` shifts the whole timeline (seconds) — used to lay serving
+    batches end-to-end on the engine's clock.
+    """
+    ev: list[dict] = [
+        dict(ph="M", name="process_name", pid=pid, tid=0,
+             args={"name": label}),
+        dict(ph="M", name="thread_name", pid=pid, tid=0,
+             args={"name": "regions"}),
+        dict(ph="M", name="thread_name", pid=pid, tid=1,
+             args={"name": "sections"}),
+    ]
+    for sp in tl.spans:
+        ev.append(dict(
+            ph="X", name=sp.region, cat="region", pid=pid, tid=0,
+            ts=(t_offset + sp.t0) * _US, dur=sp.dt * _US,
+            args=dict(
+                section=sp.section,
+                chip_w=sp.chip_w,
+                host_w=sp.host_w,
+                hbm_bytes=sp.hbm_bytes,
+                comm_s=sp.comm_s,
+                comm_exposed_s=sp.comm_exposed_s,
+                comm_hidden_s=sp.comm_hidden_s,
+                overlapped=sp.overlapped,
+            ),
+        ))
+    # section lane: merge consecutive spans sharing a section phase
+    run_t0, run_sec = None, None
+
+    def _close(t1):
+        if run_sec:
+            ev.append(dict(
+                ph="X", name=run_sec, cat="section", pid=pid, tid=1,
+                ts=(t_offset + run_t0) * _US, dur=(t1 - run_t0) * _US,
+                args={},
+            ))
+
+    for sp in tl.spans:
+        if sp.section != run_sec:
+            if run_sec is not None:
+                _close(sp.t0)
+            run_t0, run_sec = sp.t0, sp.section
+    if tl.spans:
+        _close(tl.spans[-1].t1)
+    # counter tracks: step at every span boundary + a closing static sample
+    hbm_total = 0.0
+    for sp in tl.spans:
+        ts = (t_offset + sp.t0) * _US
+        ev.append(dict(ph="C", name="chip_power_w", pid=pid, ts=ts,
+                       args={"watts": sp.chip_w}))
+        ev.append(dict(ph="C", name="host_power_w", pid=pid, ts=ts,
+                       args={"watts": sp.host_w}))
+        ev.append(dict(ph="C", name="hbm_bytes_total", pid=pid, ts=ts,
+                       args={"bytes": hbm_total}))
+        hbm_total += sp.hbm_bytes
+    t_end = (t_offset + tl.duration) * _US
+    ev.append(dict(ph="C", name="chip_power_w", pid=pid, ts=t_end,
+                   args={"watts": tl.chip_static_w}))
+    ev.append(dict(ph="C", name="host_power_w", pid=pid, ts=t_end,
+                   args={"watts": tl.host_static_w}))
+    ev.append(dict(ph="C", name="hbm_bytes_total", pid=pid, ts=t_end,
+                   args={"bytes": hbm_total}))
+    return ev
+
+
+def chrome_trace(
+    timelines, *, meta: dict | None = None, sequential: bool = False,
+) -> dict:
+    """Assemble the trace object for ``[(label, timeline), ...]``."""
+    events: list[dict] = []
+    offset = 0.0
+    for pid, (label, tl) in enumerate(timelines):
+        events.extend(timeline_events(tl, pid=pid, label=str(label),
+                                      t_offset=offset))
+        if sequential:
+            offset += tl.duration
+    return dict(
+        traceEvents=events,
+        displayTimeUnit="ms",
+        otherData=dict(meta or {}, exporter="repro.obs.trace_export"),
+    )
+
+
+def write_chrome_trace(
+    path: str, timelines, *, meta: dict | None = None,
+    sequential: bool = False,
+) -> str:
+    """Write the trace JSON atomically; returns ``path``."""
+    obj = chrome_trace(timelines, meta=meta, sequential=sequential)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+    return path

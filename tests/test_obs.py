@@ -1,0 +1,352 @@
+"""Observability layer: timelines, sampling, traces, telemetry, metrics."""
+
+import json
+import logging
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from tests.conftest import REPO, SRC
+
+
+def _reference_monitor(iters=40, n_shards=4):
+    from repro.energy.accounting import OpCounts
+    from repro.energy.trace import EnergyTrace, monitor_from_trace
+
+    tr = EnergyTrace()
+    tr.enter("setup")
+    tr.enter("iteration")
+    tr.record("setup", "spmv", "spmv", OpCounts(flops=1e11, hbm_bytes=1e11))
+    tr.record("iteration", "overlap", "spmv",
+              OpCounts(flops=5e10, hbm_bytes=6e10, ici_bytes=1e7,
+                       n_collectives=1))
+    tr.record("iteration", "reductions", "dot",
+              OpCounts(flops=1e9, hbm_bytes=4e9, ici_bytes=64,
+                       n_collectives=1))
+    return monitor_from_trace(tr, iters=iters, n_shards=n_shards,
+                              idle_s=0.01)
+
+
+# -- timeline: exact replay of the monitor --------------------------------
+
+
+def test_timeline_spans_cover_duration_exactly():
+    from repro.obs.timeline import build_timeline
+
+    mon = _reference_monitor()
+    tl = build_timeline(mon)
+    assert len(tl.spans) == len(mon.segments)
+    assert sum(sp.dt for sp in tl.spans) == mon.duration
+    # spans are contiguous on the wall clock
+    for a, b in zip(tl.spans, tl.spans[1:]):
+        assert a.t1 == b.t0
+
+
+def test_timeline_energy_bitwise_matches_monitor():
+    from repro.obs.timeline import build_timeline
+
+    mon = _reference_monitor()
+    tl = build_timeline(mon)
+    e_mon, e_tl = mon.energy(), tl.energy()
+    for k, v in e_tl.items():
+        assert v == e_mon[k], k  # bitwise: same sums over the same floats
+    assert tl.energy_by_region() == mon.energy_by_region()
+
+
+def test_sections_annotate_spans():
+    from repro.energy.trace import ITERATION, SETUP
+    from repro.obs.timeline import build_timeline
+
+    tl = build_timeline(_reference_monitor())
+    sections = {sp.section for sp in tl.spans}
+    assert SETUP in sections and ITERATION in sections
+
+
+# -- emulated fixed-rate power sampler ------------------------------------
+
+
+def test_sample_power_tiles_the_timeline():
+    from repro.obs.timeline import build_timeline, sample_power
+
+    tl = build_timeline(_reference_monitor())
+    sp = sample_power(tl, 100.0)
+    assert sp.hz == 100.0
+    assert np.isclose(sp.widths.sum(), tl.duration, rtol=0, atol=1e-9)
+    assert (sp.ts >= 0).all() and (sp.ts <= tl.duration).all()
+    assert (sp.p_chip > 0).all() and (sp.p_host > 0).all()
+
+
+def test_sampled_energy_converges_to_ledger():
+    from repro.obs.timeline import build_timeline, sampling_error
+
+    tl = build_timeline(_reference_monitor())
+    coarse, fine = sampling_error(tl, 10), sampling_error(tl, 10_000)
+    assert fine <= 0.01, f"10 kHz sampling error {fine:.3e} above 1%"
+    assert fine < coarse, (fine, coarse)
+
+
+def test_integrate_samples_static_term_is_exact():
+    from repro.obs.timeline import (
+        build_timeline,
+        integrate_samples,
+        sample_power,
+    )
+
+    mon = _reference_monitor()
+    tl = build_timeline(mon)
+    e = integrate_samples(tl, sample_power(tl, 50.0))
+    # static energy depends only on the duration, not the sampling rate
+    assert e["se_gpu"] == mon.energy()["se_gpu"]
+
+
+# -- Chrome trace export ---------------------------------------------------
+
+
+def _trace_obj(tmp_path, timelines, **kw):
+    from repro.obs.trace_export import write_chrome_trace
+
+    path = os.path.join(tmp_path, "out.trace.json")
+    write_chrome_trace(path, timelines, meta=dict(problem="test"), **kw)
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_chrome_trace_validates(tmp_path):
+    sys.path.insert(0, os.path.join(REPO, "tools"))
+    try:
+        from check_trace import validate_trace
+    finally:
+        sys.path.pop(0)
+    from repro.obs.timeline import build_timeline
+
+    tl = build_timeline(_reference_monitor())
+    obj = _trace_obj(str(tmp_path), [("solve", tl)])
+    assert validate_trace(obj) == []
+    phases = {e["ph"] for e in obj["traceEvents"]}
+    assert {"M", "X", "C"} <= phases
+    names = {e["name"] for e in obj["traceEvents"] if e["ph"] == "C"}
+    assert {"chip_power_w", "hbm_bytes_total"} <= names
+
+
+def test_chrome_trace_sequential_offsets(tmp_path):
+    from repro.obs.timeline import build_timeline
+
+    tl = build_timeline(_reference_monitor(iters=5))
+    obj = _trace_obj(str(tmp_path), [("a", tl), ("b", tl)], sequential=True)
+    by_pid = {}
+    for e in obj["traceEvents"]:
+        if e["ph"] == "X":
+            by_pid.setdefault(e["pid"], []).append(e)
+    assert len(by_pid) == 2
+    p0, p1 = sorted(by_pid)
+    end0 = max(e["ts"] + e["dur"] for e in by_pid[p0])
+    start1 = min(e["ts"] for e in by_pid[p1])
+    assert start1 >= end0  # laid end-to-end, not overlapped
+
+
+def test_check_trace_rejects_overlapping_lanes():
+    sys.path.insert(0, os.path.join(REPO, "tools"))
+    try:
+        from check_trace import validate_trace
+    finally:
+        sys.path.pop(0)
+    bad = {
+        "traceEvents": [
+            {"ph": "X", "name": "a", "pid": 1, "tid": 0, "ts": 0.0,
+             "dur": 10.0},
+            {"ph": "X", "name": "b", "pid": 1, "tid": 0, "ts": 5.0,
+             "dur": 10.0},
+            {"ph": "C", "name": "chip_power_w", "pid": 1, "ts": 0.0,
+             "args": {"w": 1.0}},
+            {"ph": "C", "name": "hbm_bytes_total", "pid": 1, "ts": 0.0,
+             "args": {"b": 1.0}},
+        ]
+    }
+    errs = validate_trace(bad)
+    assert any("overlap" in e for e in errs)
+
+
+# -- convergence telemetry -------------------------------------------------
+
+
+def test_convergence_record_splits_runs():
+    from repro.obs import convergence
+
+    rec = convergence.ConvergenceRecord()
+    for i in (1, 2, 3, 1, 2):  # warm-up run, then the recorded solve
+        rec.add(i, 10.0 ** -i)
+    assert len(rec.runs()) == 2
+    assert rec.history() == [(1, 0.1), (2, 0.01)]
+    led = rec.ledger()
+    assert led["iters_recorded"] == 2 and led["first_iter"] == 1
+
+
+def test_emit_keeps_only_shard_zero():
+    from repro.obs import convergence
+
+    with convergence.record() as rec:
+        convergence.emit(1, 1, 0.5)  # another shard: dropped
+        convergence.emit(0, 1, 0.5)
+    assert rec.entries == [(1, 0.5)]
+    convergence.emit(0, 2, 0.25)  # no active recorder: no-op
+    assert rec.entries == [(1, 0.5)]
+
+
+@pytest.mark.parametrize("variant", ["hs", "fcg"])
+def test_telemetry_history_length_matches_iters(single_mesh, variant):
+    import jax
+
+    from repro.core.cg import solve_cg
+    from repro.core.partition import partition_csr
+    from repro.core.spmv import shard_matrix
+    from repro.matrices.poisson import cube, default_rhs, poisson_scipy
+    from repro.obs import convergence
+
+    p = cube(6, "7pt")
+    a = poisson_scipy(p, dtype=np.float64)
+    mat = shard_matrix(single_mesh, partition_csr(a, 1))
+    with convergence.record() as rec:
+        res = solve_cg(
+            single_mesh, mat, default_rhs(p.n), variant=variant,
+            tol=1e-8, maxiter=100, telemetry=True,
+        )
+        jax.effects_barrier()
+    hist = rec.history()
+    if variant == "hs":
+        # one report per executed iteration, tail == the final residual
+        assert len(hist) == int(res.iters)
+        assert hist[0][0] == 1
+        assert np.isclose(hist[-1][1], float(res.rel_residual), rtol=1e-6)
+    else:
+        # fcg peels iteration 1 into the prologue (the loop body starts at
+        # i=1 with its residual lagging one update), so the instrumented
+        # body reports iterations 2..iters
+        assert len(hist) == int(res.iters) - 1
+        assert hist[0][0] == 2
+    assert hist[-1][0] == int(res.iters)
+    rel = [v for _, v in hist]
+    assert rel[-1] < 1e-6 * rel[0]  # the curve actually converged
+
+
+# -- metrics registry ------------------------------------------------------
+
+
+def test_metrics_counter_gauge_histogram():
+    from repro.obs.metrics import MetricsRegistry
+
+    reg = MetricsRegistry()
+    c = reg.counter("req_total", "requests")
+    c.inc()
+    c.inc(2)
+    with pytest.raises(ValueError):
+        c.inc(-1)  # counters are monotone
+    g = reg.gauge("depth")
+    g.set(5)
+    g.dec(2)
+    h = reg.histogram("lat_s", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 5.0, 50.0):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["req_total"]["value"] == 3.0
+    assert snap["depth"]["value"] == 3.0
+    assert snap["lat_s"]["count"] == 4 and snap["lat_s"]["counts"] == [
+        1, 1, 1, 1,
+    ]
+    # same name + kind is idempotent; same name + other kind is an error
+    assert reg.counter("req_total") is c
+    with pytest.raises(TypeError):
+        reg.gauge("req_total")
+
+
+def test_metrics_prometheus_format():
+    from repro.obs.metrics import MetricsRegistry
+
+    reg = MetricsRegistry()
+    reg.counter("served_total", "requests served").inc(7)
+    h = reg.histogram("e_j", "energy", buckets=(1.0, 10.0))
+    h.observe(0.5)
+    h.observe(20.0)
+    text = reg.to_prometheus()
+    assert "# TYPE served_total counter" in text
+    assert "served_total 7" in text
+    assert 'e_j_bucket{le="1"} 1' in text
+    assert 'e_j_bucket{le="+Inf"} 2' in text
+    assert "e_j_sum 20.5" in text and "e_j_count 2" in text
+
+
+# -- structured logging ----------------------------------------------------
+
+
+def test_log_default_output_is_bare_message(capsys):
+    from repro.obs import log as olog
+
+    olog.setup("info")
+    try:
+        olog.get_logger("test").info("hello %d", 7)
+        assert capsys.readouterr().out == "hello 7\n"
+        olog.setup("debug")
+        olog.get_logger("test").debug("deep")
+        assert capsys.readouterr().out == "[D repro.test] deep\n"
+        olog.setup("warning")
+        olog.get_logger("test").info("hidden")
+        assert capsys.readouterr().out == ""
+    finally:
+        olog.setup("info")
+
+
+def test_log_level_from_env(monkeypatch):
+    from repro.obs import log as olog
+
+    monkeypatch.setenv("REPRO_LOG", "error")
+    try:
+        olog.setup("error")
+        assert logging.getLogger("repro").level == logging.ERROR
+    finally:
+        olog.setup("info")
+
+
+# -- provenance ------------------------------------------------------------
+
+
+def test_ledger_meta_fields():
+    import jax
+
+    from repro.obs.provenance import SCHEMA_VERSION, ledger_meta
+
+    meta = ledger_meta()
+    assert meta["schema_version"] == SCHEMA_VERSION
+    assert meta["jax"] == jax.__version__
+    assert meta["backend"] == jax.default_backend()
+    assert meta["device_count"] == jax.device_count()
+
+
+def test_git_sha_matches_head():
+    from repro.obs.provenance import git_sha
+
+    sha = git_sha()
+    if sha is None:  # not a checkout (e.g. installed package): allowed
+        pytest.skip("no git checkout")
+    head = subprocess.run(
+        ["git", "rev-parse", "--short", "HEAD"], cwd=REPO,
+        capture_output=True, text=True,
+    ).stdout.strip()
+    assert sha == head
+
+
+# -- CLI surface (parse-time safety) ---------------------------------------
+
+
+def test_obs_package_init_is_jax_free():
+    # the launchers import obs.log/obs.provenance before device-env setup;
+    # the package __init__ must not pull jax in transitively
+    code = (
+        "import sys; import repro.obs, repro.obs.log, repro.obs.provenance;"
+        "assert 'jax' not in sys.modules, 'obs import pulled in jax'"
+    )
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr

@@ -1,0 +1,164 @@
+"""Chrome-trace validation gate (CI `profile-smoke` step).
+
+    python tools/check_trace.py out.trace.json [more.trace.json ...]
+    python tools/check_trace.py --summary out.trace.json
+
+Validates traces exported by ``repro.obs.trace_export`` (the ``--profile``
+flag on ``launch.solve`` / ``launch.serve_solver``) well enough that a
+regression cannot ship an unloadable or self-contradictory profile:
+
+* the file is the JSON Object Format: an object whose ``traceEvents`` is a
+  list of event dicts, each with a known phase (``M``/``X``/``C``);
+* every duration (``X``) event carries ``name``/``pid``/``tid``, a numeric
+  ``ts``, and a non-negative ``dur``;
+* every counter (``C``) event carries ``name``/``pid``, a numeric ``ts``,
+  and an ``args`` dict of numeric samples;
+* within each (pid, tid) lane, duration events do not overlap — spans are
+  a partition of the timeline, so an overlap means the exporter (or an
+  offset computation) broke;
+* the trace contains at least one duration event, and every process
+  carries the required counter tracks (``chip_power_w``,
+  ``hbm_bytes_total``) — the power/traffic staircase IS the point of the
+  export.
+
+Exit 0 when every file passes, 1 with per-file messages otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+KNOWN_PHASES = {"M", "X", "C", "B", "E", "i"}
+REQUIRED_COUNTERS = ("chip_power_w", "hbm_bytes_total")
+
+
+def _num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def validate_trace(obj) -> list[str]:
+    """All structural violations in one parsed trace object (empty = ok)."""
+    errs: list[str] = []
+    if not isinstance(obj, dict) or not isinstance(
+        obj.get("traceEvents"), list
+    ):
+        return ["top level must be an object with a 'traceEvents' list"]
+    lanes: dict[tuple, list[tuple[float, float, str]]] = {}
+    counters: dict[object, set] = {}
+    n_x = 0
+    for k, ev in enumerate(obj["traceEvents"]):
+        where = f"traceEvents[{k}]"
+        if not isinstance(ev, dict):
+            errs.append(f"{where}: event must be an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in KNOWN_PHASES:
+            errs.append(f"{where}: unknown phase {ph!r}")
+            continue
+        if ph == "X":
+            n_x += 1
+            if not isinstance(ev.get("name"), str) or not ev.get("name"):
+                errs.append(f"{where}: X event needs a non-empty 'name'")
+                continue
+            if "pid" not in ev or "tid" not in ev:
+                errs.append(f"{where}: X event needs 'pid' and 'tid'")
+                continue
+            if not _num(ev.get("ts")) or not _num(ev.get("dur")):
+                errs.append(f"{where}: X event needs numeric 'ts' and 'dur'")
+                continue
+            if ev["dur"] < 0:
+                errs.append(f"{where}: negative dur {ev['dur']}")
+                continue
+            lanes.setdefault((ev["pid"], ev["tid"]), []).append(
+                (float(ev["ts"]), float(ev["dur"]), ev["name"])
+            )
+        elif ph == "C":
+            if not isinstance(ev.get("name"), str) or not ev.get("name"):
+                errs.append(f"{where}: C event needs a non-empty 'name'")
+                continue
+            if "pid" not in ev or not _num(ev.get("ts")):
+                errs.append(f"{where}: C event needs 'pid' and numeric 'ts'")
+                continue
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args or not all(
+                _num(v) for v in args.values()
+            ):
+                errs.append(
+                    f"{where}: C event needs numeric samples in 'args'"
+                )
+                continue
+            counters.setdefault(ev["pid"], set()).add(ev["name"])
+    if n_x == 0:
+        errs.append("trace has no duration (X) events")
+    for (pid, tid), spans in lanes.items():
+        spans.sort()
+        for (t0, d0, n0), (t1, _, n1) in zip(spans, spans[1:]):
+            end = t0 + d0
+            # float-rounding slack: offsets are computed in seconds and
+            # scaled to us, so boundaries may disagree in the last bits
+            if t1 < end - 1e-9 * max(1.0, abs(end)):
+                errs.append(
+                    f"lane (pid={pid}, tid={tid}): {n0!r} "
+                    f"[{t0}, {end}) overlaps {n1!r} starting at {t1}"
+                )
+                break
+    for pid in {p for p, _ in lanes}:
+        have = counters.get(pid, set())
+        for name in REQUIRED_COUNTERS:
+            if name not in have:
+                errs.append(f"pid {pid}: missing counter track {name!r}")
+    return errs
+
+
+def summarize(obj) -> str:
+    evs = obj.get("traceEvents", [])
+    n_x = sum(1 for e in evs if isinstance(e, dict) and e.get("ph") == "X")
+    n_c = sum(1 for e in evs if isinstance(e, dict) and e.get("ph") == "C")
+    pids = {e.get("pid") for e in evs if isinstance(e, dict) and "pid" in e}
+    t_end = max(
+        (
+            e["ts"] + e.get("dur", 0.0)
+            for e in evs
+            if isinstance(e, dict) and isinstance(e.get("ts"), (int, float))
+        ),
+        default=0.0,
+    )
+    return (
+        f"{len(pids)} process(es), {n_x} duration events, "
+        f"{n_c} counter samples, span {t_end / 1e6:.6f}s"
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="+", help="trace JSON files to validate")
+    ap.add_argument("--summary", action="store_true",
+                    help="print a one-line summary per valid trace")
+    args = ap.parse_args(argv)
+    failed = False
+    for path in args.paths:
+        try:
+            with open(path) as f:
+                obj = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"{path}: FAIL: unreadable ({e})")
+            failed = True
+            continue
+        errs = validate_trace(obj)
+        if errs:
+            failed = True
+            print(f"{path}: FAIL")
+            for e in errs[:20]:
+                print(f"  - {e}")
+            if len(errs) > 20:
+                print(f"  ... and {len(errs) - 20} more")
+        else:
+            tail = f" ({summarize(obj)})" if args.summary else ""
+            print(f"{path}: ok{tail}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
